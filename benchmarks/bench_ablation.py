@@ -1,0 +1,63 @@
+"""Ablations documenting the design decisions recorded in DESIGN.md §1:
+
+  * sub-chunk LSH: locality-sensitive max-gear (ours) vs exact polynomial
+    hash (paper-literal reading) — the poly variant collapses under
+    insert/delete edits;
+  * chunk-context model on/off (CARD's central claim);
+  * similarity threshold sensitivity.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import chunking, context_model, features, pipeline
+
+
+def run(base_size=4 << 20, versions=4, avg=8192) -> list[dict]:
+    rows = []
+    for wl in common.WORKLOADS:
+        vs = common.make_versions(wl, base_size, versions)
+        cfg = chunking.ChunkerConfig(avg_size=avg)
+
+        for kind in ("card", "card-poly"):
+            stats, _ = common.run_cell(kind, vs, avg)
+            rows.append({"bench": "ablation", "workload": wl,
+                         "variant": f"lsh:{'maxgear' if kind == 'card' else 'poly'}",
+                         "dcr": round(stats.dcr, 4),
+                         "delta_chunks": stats.delta_chunks})
+
+        # context model off: raw initial features, same index/threshold
+        det = common.detector("card")
+        det.model.fit = lambda *a, **k: det.model  # type: ignore[assignment]
+        class _Id:
+            k = det.model_cfg.k
+        def _fit(streams, ccfg, _det=det):
+            import numpy as _np
+            _det.model._u_pinv = _np.eye(_det.feat_cfg.m, dtype=_np.float32)
+            _det.model.params = True  # mark fitted
+        det.fit = _fit  # type: ignore[assignment]
+        det.index = __import__("repro.core.similarity", fromlist=["x"]).CosineIndex(
+            det.feat_cfg.m, threshold=det.threshold, use_kernel=False)
+        stats = pipeline.run_workload(det, vs, cfg)
+        rows.append({"bench": "ablation", "workload": wl, "variant": "no-context",
+                     "dcr": round(stats.dcr, 4), "delta_chunks": stats.delta_chunks})
+
+        for thr in (0.2, 0.3, 0.5):
+            det2 = pipeline.CARDDetector(
+                feat_cfg=features.FeatureConfig(k=32, m=64, n=2),
+                model_cfg=context_model.ContextModelConfig(m=64, d=50, steps=150),
+                threshold=thr, use_kernel=False)
+            stats = pipeline.run_workload(det2, vs, cfg)
+            rows.append({"bench": "ablation", "workload": wl,
+                         "variant": f"thr:{thr}", "dcr": round(stats.dcr, 4),
+                         "delta_chunks": stats.delta_chunks})
+    return rows
+
+
+def main():
+    common.emit(run(), "ablation")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Beyond-paper: CARD-dedup checkpoint store DCR vs parameter-drift scale
+(drift shrinks late in training / with larger batches -> cheaper frequent
+checkpoints -> shorter restart gaps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import DedupCheckpointStore
+
+
+def _tree(seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {"params": {"w": jax.random.normal(k1, (512, 2048), jnp.bfloat16),
+                       "e": jax.random.normal(k2, (2048, 256), jnp.bfloat16)},
+            "mu": jax.random.normal(k1, (512, 512), jnp.float32) * 0.01}
+
+
+def run(sigmas=(1e-3, 1e-4, 1e-5), steps=4) -> list[dict]:
+    rows = []
+    for byte_plane in (True, False):
+        for sigma in sigmas:
+            store = DedupCheckpointStore(byte_plane=byte_plane)
+            rng = np.random.default_rng(0)
+            tree = _tree(1)
+            for i in range(steps):
+                tree = jax.tree_util.tree_map(
+                    lambda x: x + jnp.asarray(rng.standard_normal(x.shape) * sigma, x.dtype)
+                    if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+                store.save(tree, step=i)
+            s = store.stats
+            rows.append({"bench": "ckpt_store", "byte_plane": byte_plane,
+                         "drift_sigma": sigma, "dcr": round(s.dcr, 3),
+                         "dup": s.dup_chunks, "delta": s.delta_chunks,
+                         "raw": s.raw_chunks})
+    return rows
+
+
+def main():
+    from benchmarks import common
+    common.emit(run(), "ckpt_store")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Figs 5 / 7 / 8: DCR vs average chunk size per workload,
+CARD vs Finesse vs N-transform (+ dedup-only floor)."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(chunk_sizes=None, base_size=6 << 20, versions=4) -> list[dict]:
+    rows = []
+    sizes = chunk_sizes or common.CHUNK_SIZES[:4]
+    for wl in common.WORKLOADS:
+        vs = common.make_versions(wl, base_size, versions)
+        for avg in sizes:
+            for kind in ("dedup-only", "finesse", "n-transform", "card"):
+                stats, wall = common.run_cell(kind, vs, avg)
+                rows.append({
+                    "bench": "dcr", "workload": wl, "avg_chunk": avg,
+                    "detector": kind, "dcr": round(stats.dcr, 4),
+                    "delta_chunks": stats.delta_chunks,
+                    "dup_chunks": stats.dup_chunks,
+                    "detect_s": round(stats.detect_seconds, 3),
+                    "wall_s": round(wall, 2),
+                })
+    return rows
+
+
+def main():
+    common.emit(run(), "dcr")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Table 1: CARD overall time + DCR across feature dimensions 40-80
+at a fixed average chunk size."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(dims=(40, 50, 60, 70, 80), base_size=6 << 20, versions=4,
+        avg_chunk=16384) -> list[dict]:
+    rows = []
+    for wl in common.WORKLOADS:
+        vs = common.make_versions(wl, base_size, versions)
+        base_dcr = None
+        for dim in dims:
+            stats, wall = common.run_cell("card", vs, avg_chunk, dim=dim)
+            if base_dcr is None:
+                base_dcr = stats.dcr
+            rows.append({
+                "bench": "dims", "workload": wl, "dimension": dim,
+                "time_s": round(stats.detect_seconds + stats.fit_seconds, 3),
+                "dcr": round(stats.dcr, 4),
+                "dcr_delta_pct": round(100 * (stats.dcr / base_dcr - 1), 2),
+            })
+    return rows
+
+
+def main():
+    common.emit(run(), "dims")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Aggregate dry-run artifacts into the EXPERIMENTS.md §Roofline table.
+
+Reads artifacts/dryrun/*.json (produced by repro.launch.dryrun) — this
+bench does NOT compile anything itself, so `benchmarks.run` stays fast.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path("artifacts/dryrun")
+
+
+def run(mesh: str = "single") -> list[dict]:
+    rows = []
+    for p in sorted(ART.glob(f"*.{mesh}.json")):
+        r = json.loads(p.read_text())
+        if not r.get("ok"):
+            rows.append({"bench": "roofline", "arch": r["arch"],
+                         "shape": r["shape"], "mesh": r["mesh"],
+                         "error": r.get("error", "?")})
+            continue
+        roof = r["roofline"]
+        rows.append({
+            "bench": "roofline", "arch": r["arch"], "shape": r["shape"],
+            "mesh": r["mesh"],
+            "t_compute_s": round(roof["t_compute_s"], 4),
+            "t_memory_s": round(roof["t_memory_s"], 4),
+            "t_collective_s": round(roof["t_collective_s"], 4),
+            "dominant": roof["dominant"],
+            "useful_flops_frac": round(roof["useful_flops_fraction"], 4),
+            "roofline_frac": round(roof["roofline_fraction"], 4),
+            "mem_gb_per_chip": r["memory"]["peak_per_chip_gb"],
+        })
+    return rows
+
+
+def main():
+    from benchmarks import common
+    rows = run("single")
+    if not rows:
+        print("no dry-run artifacts found — run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun")
+        return
+    common.emit(rows, "roofline")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Figs 6 / 9 / 10: resemblance-detection time vs average chunk size.
+
+The paper's speed metric covers feature extraction + index search (not
+chunking or delta I/O); `StoreStats.detect_seconds` matches that
+accounting. Speedup columns are CARD-relative (paper: 5.6x-17.8x)."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(chunk_sizes=None, base_size=6 << 20, versions=4) -> list[dict]:
+    rows = []
+    sizes = chunk_sizes or common.CHUNK_SIZES[:4]
+    for wl in common.WORKLOADS:
+        vs = common.make_versions(wl, base_size, versions)
+        for avg in sizes:
+            cell = {}
+            for kind in ("finesse", "n-transform", "card"):
+                stats, _ = common.run_cell(kind, vs, avg)
+                cell[kind] = stats.detect_seconds
+            rows.append({
+                "bench": "time", "workload": wl, "avg_chunk": avg,
+                "card_s": round(cell["card"], 3),
+                "finesse_s": round(cell["finesse"], 3),
+                "ntransform_s": round(cell["n-transform"], 3),
+                "speedup_vs_finesse": round(cell["finesse"] / max(cell["card"], 1e-9), 2),
+                "speedup_vs_ntransform": round(cell["n-transform"] / max(cell["card"], 1e-9), 2),
+            })
+    return rows
+
+
+def main():
+    common.emit(run(), "time")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Shared benchmark harness utilities.
+
+Scaling note (documented per DESIGN.md): the paper evaluates GB-scale
+traces with 16 KB-512 KB average chunks. This container is a single CPU
+core, so the default harness uses ~24 MB version chains with 4-64 KB
+chunks — the chunks-per-version count (the statistic that drives detector
+behaviour) matches the paper's regime. `--full` scales 4x closer.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import baselines, chunking, context_model, features, pipeline
+from repro.data import workloads
+
+WORKLOADS = ("sql_dump", "vmdk", "kernel")
+CHUNK_SIZES = (4096, 8192, 16384, 32768, 65536)
+
+
+def make_versions(name: str, base_size: int = 6 << 20, versions: int = 4):
+    return workloads.make_workload(
+        name, workloads.WorkloadConfig(base_size=base_size, versions=versions))
+
+
+def detector(kind: str, dim: int = 50, threshold: float = 0.3):
+    if kind == "card":
+        return pipeline.CARDDetector(
+            feat_cfg=features.FeatureConfig(k=32, m=64, n=2),
+            model_cfg=context_model.ContextModelConfig(m=64, d=dim, steps=150),
+            threshold=threshold, use_kernel=False)
+    if kind == "card-poly":  # ablation: paper-literal exact-hash sub-chunk LSH
+        return pipeline.CARDDetector(
+            feat_cfg=features.FeatureConfig(k=32, m=64, n=2, lsh="poly"),
+            model_cfg=context_model.ContextModelConfig(m=64, d=dim, steps=150),
+            threshold=threshold, use_kernel=False)
+    if kind == "finesse":
+        return pipeline.finesse_detector()
+    if kind == "n-transform":
+        return pipeline.ntransform_detector()
+    if kind == "dedup-only":
+        return pipeline.NullDetector()
+    raise KeyError(kind)
+
+
+def run_cell(kind: str, versions, avg_size: int, dim: int = 50):
+    det = detector(kind, dim=dim)
+    cfg = chunking.ChunkerConfig(avg_size=avg_size)
+    t0 = time.perf_counter()
+    stats = pipeline.run_workload(det, versions, cfg)
+    wall = time.perf_counter() - t0
+    return stats, wall
+
+
+def emit(rows: list[dict], name: str) -> None:
+    """name,us_per_call,derived CSV convention + full column dump."""
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))

@@ -1,0 +1,50 @@
+"""Benchmark entry point: one section per paper table/figure + the
+framework benches. Prints ``name,...`` CSV sections.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only dcr,time,...]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workloads (CI-speed)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: dcr,time,dims,kernels,ckpt,ablation,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (bench_ablation, bench_ckpt_store, bench_dcr,
+                            bench_dims, bench_kernels, bench_roofline,
+                            bench_time, common)
+
+    base = (2 << 20) if args.quick else (6 << 20)
+    sizes = common.CHUNK_SIZES[:3] if args.quick else common.CHUNK_SIZES[:4]
+
+    sections = {
+        "dcr": lambda: bench_dcr.run(chunk_sizes=sizes, base_size=base),
+        "time": lambda: bench_time.run(chunk_sizes=sizes, base_size=base),
+        "dims": lambda: bench_dims.run(base_size=base),
+        "kernels": bench_kernels.run,
+        "ckpt": bench_ckpt_store.run,
+        "ablation": lambda: bench_ablation.run(base_size=min(base, 4 << 20)),
+        "roofline": bench_roofline.run,
+    }
+
+    for name, fn in sections.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"\n===== {name} =====", flush=True)
+        rows = fn()
+        common.emit(rows, name)
+        print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""End-to-end driver (the paper's scenario): a backup service ingesting
+nightly versions of three datasets, with CARD's context model trained on
+the first night, per-night stats, and full restore validation.
+
+    PYTHONPATH=src python examples/dedup_backup_run.py [--size-mb 8] [--nights 5]
+"""
+import argparse
+import time
+
+from repro.core import CARDDetector, ChunkerConfig, DedupStore
+from repro.data import make_workload, WorkloadConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size-mb", type=int, default=6)
+    ap.add_argument("--nights", type=int, default=5)
+    ap.add_argument("--avg-chunk", type=int, default=16384)
+    args = ap.parse_args()
+
+    for wl in ("sql_dump", "vmdk", "kernel"):
+        versions = make_workload(wl, WorkloadConfig(
+            base_size=args.size_mb << 20, versions=args.nights))
+        store = DedupStore(CARDDetector(use_kernel=False),
+                           ChunkerConfig(avg_size=args.avg_chunk))
+        t0 = time.time()
+        store.fit(versions[:1])           # offline context-model training
+        fit_s = time.time() - t0
+        print(f"\n=== {wl}: {args.nights} nights x {args.size_mb} MiB "
+              f"(model fit {fit_s:.1f}s) ===")
+        prev_stored = 0
+        for night, v in enumerate(versions):
+            store.ingest(v)
+            s = store.stats
+            stored_tonight = s.bytes_stored - prev_stored
+            prev_stored = s.bytes_stored
+            print(f"night {night}: ingested {len(v) >> 20} MiB, "
+                  f"stored {stored_tonight >> 10} KiB new, "
+                  f"cumulative DCR {s.dcr:.2f} "
+                  f"(dup {s.dup_chunks} / delta {s.delta_chunks} / raw {s.raw_chunks})")
+        for night in range(args.nights):
+            assert store.restore(night) == versions[night]
+        print(f"restore: all {args.nights} nights byte-exact | "
+              f"total detect {store.stats.detect_seconds:.2f}s "
+              f"delta-io {store.stats.delta_seconds:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.store import save, restore, latest_step, list_steps  # noqa: F401
+from repro.checkpoint.dedup_store import DedupCheckpointStore  # noqa: F401

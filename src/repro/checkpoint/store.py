@@ -1,0 +1,134 @@
+"""Atomic pytree checkpointing with elastic restore.
+
+Layout:  <dir>/step_<N>/
+            manifest.json   (tree structure, per-leaf shape/dtype/digest)
+            <leaf_id>.bin   (raw little-endian bytes; bf16 stored as u16)
+
+Commit protocol: write to `step_<N>.tmp/`, fsync files, atomic rename to
+`step_<N>/` — a crashed writer can never leave a readable-but-corrupt
+checkpoint, and the restart driver simply takes `latest_step()`.
+
+Restore is *elastic*: leaves are materialized as global arrays and
+device_put against whatever sharding the new mesh wants — a checkpoint
+taken on one topology restores onto any other (tests/test_checkpoint.py
+exercises 8 -> 4 devices).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _leaf_to_bytes(x) -> tuple[bytes, dict]:
+    arr = np.asarray(x)
+    logical = str(arr.dtype)
+    if arr.dtype.name == "bfloat16":
+        arr = arr.view(np.uint16)
+    meta = {"shape": list(arr.shape), "store_dtype": str(arr.dtype),
+            "dtype": logical}
+    raw = np.ascontiguousarray(arr).tobytes()
+    meta["digest"] = hashlib.blake2b(raw, digest_size=16).hexdigest()
+    return raw, meta
+
+
+def _bytes_to_leaf(raw: bytes, meta: dict):
+    arr = np.frombuffer(bytearray(raw), dtype=np.dtype(meta["store_dtype"]))
+    arr = arr.reshape(meta["shape"])
+    if meta["dtype"] == "bfloat16":
+        import ml_dtypes
+        arr = arr.view(ml_dtypes.bfloat16)
+    return arr
+
+
+def serialize(tree: Any) -> tuple[list[tuple[str, bytes]], dict]:
+    """-> ([(leaf_id, raw_bytes)], manifest). Shared with the dedup store."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    blobs, leaves = [], []
+    for i, (path, leaf) in enumerate(flat):
+        raw, meta = _leaf_to_bytes(leaf)
+        meta["id"] = f"leaf_{i:05d}"
+        meta["path"] = jax.tree_util.keystr(path)
+        blobs.append((meta["id"], raw))
+        leaves.append(meta)
+    manifest = {"leaves": leaves, "treedef": str(treedef)}
+    return blobs, manifest
+
+
+def deserialize(blobs: dict[str, bytes], manifest: dict, like: Any) -> Any:
+    """Rebuild using `like`'s treedef (stored treedef str is a cross-check)."""
+    flat, treedef = jax.tree_util.tree_flatten(like)
+    leaves = manifest["leaves"]
+    assert len(flat) == len(leaves), \
+        f"checkpoint has {len(leaves)} leaves, target tree has {len(flat)}"
+    out = []
+    for meta, target in zip(leaves, flat):
+        raw = blobs[meta["id"]]
+        if hashlib.blake2b(raw, digest_size=16).hexdigest() != meta["digest"]:
+            raise IOError(f"digest mismatch for {meta['path']}")
+        arr = _bytes_to_leaf(raw, meta)
+        sharding = getattr(target, "sharding", None)
+        if sharding is not None and hasattr(sharding, "mesh"):
+            arr = jax.device_put(arr, sharding)   # elastic reshard
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def save(ckpt_dir: str | Path, tree: Any, step: int) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    blobs, manifest = serialize(tree)
+    for leaf_id, raw in blobs:
+        with open(tmp / f"{leaf_id}.bin", "wb") as f:
+            f.write(raw)
+            f.flush()
+            os.fsync(f.fileno())
+    with open(tmp / "manifest.json", "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic commit
+    return final
+
+
+def restore(ckpt_dir: str | Path, like: Any, step: Optional[int] = None) -> Any:
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    blobs = {m["id"]: (d / f"{m['id']}.bin").read_bytes()
+             for m in manifest["leaves"]}
+    return deserialize(blobs, manifest, like)
+
+
+def list_steps(ckpt_dir: str | Path) -> list[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return []
+    out = []
+    for p in ckpt_dir.iterdir():
+        m = re.fullmatch(r"step_(\d+)", p.name)
+        if m and (p / "manifest.json").exists():
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None

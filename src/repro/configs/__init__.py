@@ -1,0 +1,9 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS,
+    LM_SHAPES,
+    InputShape,
+    ModelConfig,
+    cells,
+    get_config,
+    get_shape,
+)

@@ -1,0 +1,22 @@
+"""CARD core: the paper's contribution as a composable library.
+
+  chunking       FastCDC with a parallel gear-hash candidate scan
+  features       N-sub-chunk shingle initial features (Algorithm 1)
+  context_model  BP-NN (CBOW) chunk-context aware model (§4.3)
+  baselines      N-transform + Finesse super-features (§2/§3)
+  similarity     cosine / banded-LSH resemblance indexes
+  delta          COPY/ADD byte delta codec
+  pipeline       the full dedup + delta-compression store (§5)
+"""
+from repro.core.chunking import Chunk, ChunkerConfig, chunk_stream  # noqa: F401
+from repro.core.features import FeatureConfig, FeatureExtractor  # noqa: F401
+from repro.core.context_model import ContextModel, ContextModelConfig  # noqa: F401
+from repro.core.pipeline import (  # noqa: F401
+    CARDDetector,
+    DedupStore,
+    NullDetector,
+    StoreStats,
+    finesse_detector,
+    ntransform_detector,
+    run_workload,
+)

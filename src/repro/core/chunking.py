@@ -1,0 +1,181 @@
+"""FastCDC content-defined chunking with a parallel candidate scan.
+
+The paper (and Finesse / N-transform) all sit on top of FastCDC
+[Xia et al., ATC'16]. Serial FastCDC walks the stream updating
+``h = (h << 1) + gear[b]`` and cuts when ``h & mask == 0`` (a harder mask
+before the normal size, an easier one after — "normalized chunking").
+
+TPU adaptation (DESIGN.md §3): the gear hash is linear, so we evaluate the
+windowed hash at *every* position in parallel (kernels/gear_hash, oracle in
+core/hashing.py), producing two boundary-candidate bitmaps. Only the greedy
+min/normal/max-size selection walks the stream on host, and it touches just
+the (sparse) candidate positions. Boundaries are bit-identical to serial
+FastCDC-with-reset whenever min_size >= 32 (the uint32 gear window), because
+every inspected position is >= min_size past the chunk start, where the
+32-byte window lies entirely inside the current chunk.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Iterator, Sequence
+
+import numpy as np
+
+from repro.core import hashing
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkerConfig:
+    avg_size: int = 16 * 1024
+    min_factor: float = 0.25           # min_size = avg * min_factor
+    max_factor: float = 4.0            # max_size = avg * max_factor
+    norm_level: int = 2                # FastCDC normalization (mask +- bits)
+
+    @property
+    def min_size(self) -> int:
+        return max(64, int(self.avg_size * self.min_factor))
+
+    @property
+    def max_size(self) -> int:
+        return int(self.avg_size * self.max_factor)
+
+    @property
+    def mask_bits(self) -> int:
+        return int(np.log2(self.avg_size))
+
+    @property
+    def mask_s(self) -> int:  # harder mask: used before avg_size
+        return (1 << (self.mask_bits + self.norm_level)) - 1
+
+    @property
+    def mask_l(self) -> int:  # easier mask: used after avg_size
+        return (1 << (self.mask_bits - self.norm_level)) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Chunk:
+    offset: int
+    length: int
+    data: bytes
+
+    @property
+    def digest(self) -> bytes:
+        return hashlib.blake2b(self.data, digest_size=20).digest()
+
+
+def candidate_bitmaps(
+    data: np.ndarray, cfg: ChunkerConfig, hashes: np.ndarray | None = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """(cand_s, cand_l) boolean maps of positions satisfying each mask."""
+    if hashes is None:
+        hashes = hashing.gear_hashes_np(np.frombuffer(data, dtype=np.uint8)
+                                        if isinstance(data, (bytes, bytearray))
+                                        else data)
+    cand_s = (hashes & np.uint32(cfg.mask_s)) == 0
+    cand_l = (hashes & np.uint32(cfg.mask_l)) == 0
+    return cand_s, cand_l
+
+
+def select_boundaries(
+    n: int, cand_s: np.ndarray, cand_l: np.ndarray, cfg: ChunkerConfig
+) -> np.ndarray:
+    """Greedy FastCDC boundary selection from candidate bitmaps.
+
+    Returns boundary offsets including 0 and n. A cut at position i means the
+    chunk ends *after* byte i (chunk = data[start : i + 1]).
+    """
+    bounds = [0]
+    start = 0
+    min_s, avg_s, max_s = cfg.min_size, cfg.avg_size, cfg.max_size
+    while start < n:
+        if n - start <= min_s:
+            bounds.append(n)
+            break
+        # Region 1: [start+min, start+avg) against the hard mask.
+        lo = start + min_s
+        hi = min(start + avg_s, n)
+        cut = -1
+        if lo < hi:
+            w = cand_s[lo:hi]
+            idx = np.flatnonzero(w)
+            if idx.size:
+                cut = lo + int(idx[0])
+        if cut < 0:
+            # Region 2: [start+avg, start+max) against the easy mask.
+            lo2 = max(lo, min(start + avg_s, n))
+            hi2 = min(start + max_s, n)
+            if lo2 < hi2:
+                w = cand_l[lo2:hi2]
+                idx = np.flatnonzero(w)
+                if idx.size:
+                    cut = lo2 + int(idx[0])
+        if cut < 0:
+            cut = min(start + max_s, n) - 1
+        bounds.append(cut + 1)
+        start = cut + 1
+    if bounds[-1] != n:
+        bounds.append(n)
+    return np.asarray(bounds, dtype=np.int64)
+
+
+def chunk_stream(
+    data: bytes | np.ndarray,
+    cfg: ChunkerConfig | None = None,
+    hashes: np.ndarray | None = None,
+) -> list[Chunk]:
+    """Chunk a byte stream; `hashes` may be precomputed (e.g. by the kernel)."""
+    cfg = cfg or ChunkerConfig()
+    buf = np.frombuffer(data, dtype=np.uint8) if isinstance(data, (bytes, bytearray)) else np.asarray(data, dtype=np.uint8)
+    raw = buf.tobytes()
+    n = len(buf)
+    if n == 0:
+        return []
+    cand_s, cand_l = candidate_bitmaps(buf, cfg, hashes)
+    bounds = select_boundaries(n, cand_s, cand_l, cfg)
+    return [
+        Chunk(offset=int(a), length=int(b - a), data=raw[a:b])
+        for a, b in zip(bounds[:-1], bounds[1:])
+    ]
+
+
+def chunk_boundaries_serial(data: bytes, cfg: ChunkerConfig) -> np.ndarray:
+    """Bit-exact serial FastCDC (reset hash at each chunk start) — test oracle."""
+    buf = np.frombuffer(data, dtype=np.uint8)
+    n = len(buf)
+    bounds = [0]
+    start = 0
+    gear = hashing.GEAR_TABLE
+    while start < n:
+        if n - start <= cfg.min_size:
+            bounds.append(n)
+            break
+        h = 0
+        cut = -1
+        end1 = min(start + cfg.avg_size, n)
+        end2 = min(start + cfg.max_size, n)
+        i = start
+        # warm up to min_size (serial FastCDC hashes from the chunk start)
+        while i < start + cfg.min_size:
+            h = ((h << 1) + int(gear[buf[i]])) & 0xFFFFFFFF
+            i += 1
+        while i < end1:
+            h = ((h << 1) + int(gear[buf[i]])) & 0xFFFFFFFF
+            if (h & cfg.mask_s) == 0:
+                cut = i
+                break
+            i += 1
+        if cut < 0:
+            while i < end2:
+                h = ((h << 1) + int(gear[buf[i]])) & 0xFFFFFFFF
+                if (h & cfg.mask_l) == 0:
+                    cut = i
+                    break
+                i += 1
+        if cut < 0:
+            cut = end2 - 1
+        bounds.append(cut + 1)
+        start = cut + 1
+    if bounds[-1] != n:
+        bounds.append(n)
+    return np.asarray(bounds, dtype=np.int64)

@@ -1,0 +1,254 @@
+"""N-sub-chunk shingles initial feature extraction (paper Algorithm 1).
+
+Pipeline (per chunk, batched over chunks):
+
+  1. split the chunk into K equal sub-chunks (last one ragged);
+  2. LSH each sub-chunk. Default (`lsh="maxgear"`): the max windowed gear
+     hash inside the sub-chunk — locality-sensitive (edits only perturb
+     windows they overlap; boundary shifts only move a few edge windows)
+     and *free*, because the FastCDC chunker already produced the gear-hash
+     array for the whole stream (DESIGN.md §3). `lsh="poly"` is an exact
+     polynomial hash of the sub-chunk bytes, kept as an ablation — it is
+     NOT locality-sensitive and collapses under insertions (see
+     benchmarks/bench_ablation.py for the measured gap).
+  3. shingles: for r = 1..N, the combined hash of every window of r+1
+     consecutive sub-chunk hashes, in order ("the hash and its surrounding
+     r hash values in order") — this encodes the chunk's internal
+     structure;
+  4. keep the set of unique shingles (sort + neighbour-mask, jnp);
+  5. map each unique shingle through M multiply-shift hash functions into
+     an M-dim sub-vector in [-1, 1), L2-normalize it, and average the
+     sub-vectors -> the M-dim initial feature (kernels/shingle_embed is the
+     Pallas fast path; oracle in kernels/ref.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+
+SHINGLE_Q = np.uint32(0x9E3779B1)  # odd golden-ratio multiplier
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureConfig:
+    k: int = 32         # number of sub-chunks per chunk (paper: K)
+    m: int = 64         # initial feature dimension (paper: M)
+    n: int = 2          # max shingle radius (paper: N)
+    lsh: str = "maxgear"  # sub-chunk LSH: "maxgear" | "poly" (ablation)
+    normalize: bool = True
+
+    @property
+    def num_shingles(self) -> int:
+        return sum(self.k - r for r in range(1, self.n + 1))
+
+
+# -----------------------------------------------------------------------------
+# Step 1+2: sub-chunk LSH values
+# -----------------------------------------------------------------------------
+
+def _bounds(n: int, k: int) -> np.ndarray:
+    return np.linspace(0, n, k + 1).astype(np.int64)
+
+
+_WARMUP = hashing.GEAR_WINDOW - 1  # positions whose 32B window crosses the
+# chunk start; masked so stream-scan reuse and per-chunk hashing agree exactly
+
+
+def subchunk_maxgear_np(gear_hashes: np.ndarray, k: int) -> np.ndarray:
+    """[L] gear hashes of one chunk -> [K] max per equal sub-chunk.
+
+    The first GEAR_WINDOW-1 positions are excluded from the max: on the
+    stream path their windows reach into the previous chunk, on the
+    per-chunk path they are warm-up partial windows — masking both makes
+    the two paths bit-identical (tests/test_features.py).
+    """
+    n = len(gear_hashes)
+    b = _bounds(n, k)
+    starts = b[:-1].copy()
+    # reduceat needs strictly valid starts; empty segments (tiny chunks) get 0
+    starts = np.minimum(starts, max(n - 1, 0))
+    out = np.maximum.reduceat(gear_hashes, starts) if n else np.zeros(k, np.uint32)
+    empty = b[1:] <= b[:-1]
+    out[empty] = 0
+    # re-derive maxes for segments overlapping the warm-up region
+    warm = np.flatnonzero(b[:-1] < min(_WARMUP, n))
+    for i in warm:
+        lo, hi = max(int(b[i]), _WARMUP), int(b[i + 1])
+        out[i] = gear_hashes[lo:hi].max() if hi > lo else 0
+    return out.astype(np.uint32)
+
+
+def subchunk_poly_np(data: bytes, k: int) -> np.ndarray:
+    """[K] exact polynomial hashes of the K sub-chunks (ablation path)."""
+    buf = np.frombuffer(data, dtype=np.uint8)
+    return hashing.segment_poly_hashes_np(buf, _bounds(len(buf), k))
+
+
+def batch_subchunk_lsh_np(chunks: list[bytes], cfg: FeatureConfig,
+                          stream_hashes: np.ndarray | None = None,
+                          offsets: np.ndarray | None = None) -> np.ndarray:
+    """[B, K] sub-chunk LSH values.
+
+    With `stream_hashes` + `offsets` (chunk start offsets into the stream the
+    hashes were computed over), the maxgear path reuses the chunker's scan
+    and does no per-byte work at all.
+    """
+    if cfg.lsh == "poly":
+        return np.stack([subchunk_poly_np(c, cfg.k) for c in chunks])
+    if stream_hashes is not None and offsets is not None:
+        out = np.empty((len(chunks), cfg.k), np.uint32)
+        for i, (c, off) in enumerate(zip(chunks, offsets)):
+            out[i] = subchunk_maxgear_np(stream_hashes[off:off + len(c)], cfg.k)
+        return out
+    return np.stack([
+        subchunk_maxgear_np(hashing.gear_hashes_np(np.frombuffer(c, np.uint8)), cfg.k)
+        for c in chunks])
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def batch_subchunk_maxgear_j(gear: jax.Array, lengths: jax.Array, k: int) -> jax.Array:
+    """jnp path: gear hashes [B, Lmax] + lengths [B] -> [B, K] segment maxes."""
+    b, lmax = gear.shape
+    pos = jnp.arange(lmax)
+    # segment id of each position: floor(pos * K / len); warm-up positions
+    # and padding -> K (dropped), matching subchunk_maxgear_np
+    valid = (pos[None, :] < lengths[:, None]) & (pos[None, :] >= _WARMUP)
+    seg = jnp.where(valid, (pos[None, :] * k) // jnp.maximum(lengths[:, None], 1), k)
+    seg = jnp.clip(seg, 0, k)
+
+    def one(g_row, seg_row):
+        return jax.ops.segment_max(g_row, seg_row, num_segments=k + 1,
+                                   indices_are_sorted=True)[:k]
+    out = jax.vmap(one)(gear, seg)
+    return jnp.maximum(out, 0).astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def batch_subchunk_poly_j(data: jax.Array, lengths: jax.Array, k: int) -> jax.Array:
+    """jnp ablation path over a padded byte batch: [B, Lmax] u8 -> [B, K]."""
+    b, lmax = data.shape
+    j = jnp.arange(lmax, dtype=jnp.uint32)
+    ipows = _pow_table(hashing.POLY_P_INV, lmax) * jnp.uint32(hashing.POLY_P_INV)
+    pows = _pow_table(hashing.POLY_P, lmax + 1)
+    valid = (j[None, :] < lengths[:, None].astype(jnp.uint32))
+    contrib = jnp.where(valid, data.astype(jnp.uint32) * ipows[None, :], 0)
+    s = jnp.cumsum(contrib.astype(jnp.uint32), axis=1)
+    s = jnp.concatenate([jnp.zeros((b, 1), jnp.uint32), s], axis=1)
+    i = jnp.arange(k + 1, dtype=jnp.uint32)
+    bounds = (i[None, :] * lengths[:, None].astype(jnp.uint32)) // jnp.uint32(k)
+    s_at = jnp.take_along_axis(s, bounds.astype(jnp.int32), axis=1)
+    seg = (s_at[:, 1:] - s_at[:, :-1]) * pows[bounds[:, 1:].astype(jnp.int32)]
+    return seg.astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _pow_table_impl(base: jax.Array, n: int) -> jax.Array:
+    def body(carry, _):
+        return carry * base, carry
+    _, out = jax.lax.scan(body, jnp.uint32(1), None, length=n)
+    return out
+
+
+def _pow_table(base: np.uint32, n: int) -> jax.Array:
+    return _pow_table_impl(jnp.uint32(base), n)
+
+
+# -----------------------------------------------------------------------------
+# Step 3+4: shingle ids + uniquification
+# -----------------------------------------------------------------------------
+
+def shingle_ids(sub_hashes: jax.Array, n: int) -> jax.Array:
+    """[B, K] uint32 -> [B, S] combined shingle hashes (S = sum_r (K-r)).
+
+    shingle(j, r) = sum_t sub_hashes[j + t] * Q^t  for t in 0..r — an
+    order-sensitive polynomial combination of r+1 consecutive sub-chunk
+    hashes.
+    """
+    k = sub_hashes.shape[-1]
+    out = []
+    q = jnp.uint32(SHINGLE_Q)
+    for r in range(1, n + 1):
+        acc = sub_hashes[..., : k - r].astype(jnp.uint32)
+        mult = q
+        for t in range(1, r + 1):
+            acc = acc + sub_hashes[..., t : k - r + t] * mult
+            mult = mult * q
+        out.append(acc)
+    return jnp.concatenate(out, axis=-1)
+
+
+def unique_mask(ids: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Sort each row; mask[i]=True for the first occurrence of each value."""
+    s = jnp.sort(ids, axis=-1)
+    first = jnp.concatenate(
+        [jnp.ones_like(s[..., :1], dtype=bool), s[..., 1:] != s[..., :-1]], axis=-1)
+    return s, first
+
+
+# -----------------------------------------------------------------------------
+# Step 5: embed (jnp version; the Pallas kernel lives in kernels/shingle_embed)
+# -----------------------------------------------------------------------------
+
+def embed_shingles_j(ids: jax.Array, mask: jax.Array, a: jax.Array,
+                     b: jax.Array, normalize: bool = True) -> jax.Array:
+    """[B, S] ids + [B, S] mask -> [B, M] features (pure jnp oracle)."""
+    v = hashing.multiply_shift_unit_j(ids, a, b)           # [B, S, M]
+    norm = jnp.sqrt(jnp.sum(v * v, axis=-1, keepdims=True)) + 1e-12
+    v = v / norm
+    v = jnp.where(mask[..., None], v, 0.0)
+    cnt = jnp.maximum(jnp.sum(mask, axis=-1, keepdims=True), 1).astype(jnp.float32)
+    feat = jnp.sum(v, axis=-2) / cnt
+    if normalize:
+        feat = feat / (jnp.linalg.norm(feat, axis=-1, keepdims=True) + 1e-12)
+    return feat
+
+
+def _round_up_pow2(n: int, floor: int = 16) -> int:
+    return max(floor, 1 << (n - 1).bit_length())
+
+
+class FeatureExtractor:
+    """End-to-end Algorithm 1. Host API over `bytes`, jnp math underneath.
+
+    Batches are padded to power-of-two sizes so the jitted embed path
+    compiles once per bucket instead of once per batch size.
+    """
+
+    def __init__(self, cfg: FeatureConfig | None = None, use_kernel: bool = True):
+        self.cfg = cfg or FeatureConfig()
+        a, b = hashing.multiply_shift_params(self.cfg.m)
+        self._a = jnp.asarray(a)
+        self._b = jnp.asarray(b)
+        self._use_kernel = use_kernel
+
+    def _embed(self, ids: jax.Array, mask: jax.Array) -> jax.Array:
+        if self._use_kernel:
+            from repro.kernels import ops as kops
+            return kops.shingle_embed(ids, mask, self._a, self._b,
+                                      normalize=self.cfg.normalize)
+        return embed_shingles_j(ids, mask, self._a, self._b, self.cfg.normalize)
+
+    def features_from_subhashes(self, sub_hashes) -> np.ndarray:
+        sub = np.asarray(sub_hashes)
+        bsz = sub.shape[0]
+        pad = _round_up_pow2(bsz) - bsz
+        if pad:
+            sub = np.pad(sub, ((0, pad), (0, 0)))
+        ids = shingle_ids(jnp.asarray(sub), self.cfg.n)
+        ids, mask = unique_mask(ids)
+        return np.asarray(self._embed(ids, mask))[:bsz]
+
+    def __call__(self, chunks: list[bytes],
+                 stream_hashes: np.ndarray | None = None,
+                 offsets: np.ndarray | None = None) -> np.ndarray:
+        """[B, M] float32 initial features for a list of chunk payloads."""
+        if not chunks:
+            return np.zeros((0, self.cfg.m), np.float32)
+        sub = batch_subchunk_lsh_np(chunks, self.cfg, stream_hashes, offsets)
+        return self.features_from_subhashes(sub)

@@ -1,0 +1,8 @@
+from repro.data.workloads import (  # noqa: F401
+    WorkloadConfig,
+    make_workload,
+    sql_dump_versions,
+    vmdk_versions,
+    kernel_versions,
+)
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig  # noqa: F401

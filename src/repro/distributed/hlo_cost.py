@@ -1,0 +1,332 @@
+"""Trip-count-aware cost extraction from optimized HLO text.
+
+XLA's `compiled.cost_analysis()` counts each computation ONCE — a 64-layer
+scan or an 8-microbatch accumulation loop contributes its body a single
+time, so FLOPs/bytes/collective counts are off by orders of magnitude for
+scanned models. This module parses the optimized HLO text and:
+
+  1. builds a symbol table (instruction name -> shape) per computation;
+  2. computes per-computation costs:
+       * dot FLOPs: 2 x |output| x contracted-dim size,
+       * HBM bytes: operand+output traffic of top-level ops, where
+         - slicing ops move only the slice,
+         - fusion operands consumed *only via dynamic-slice inside the
+           fused computation* are charged at slice size (this is how the
+           stacked-layer weight tables are read inside scans),
+         - layout/meta ops are free;
+       * collective link-bytes: per-partition tensor bytes x ring factor;
+  3. extracts while-loop trip counts from their condition computations
+     (the `constant(N)` compared against the induction variable);
+  4. propagates costs bottom-up through the call graph (while x trip,
+     fusion/call/conditional x 1; fusion callees contribute FLOPs but not
+     bytes — they execute in registers/VMEM).
+
+Shapes in the per-partition SPMD module are per-chip, so all results are
+per-chip values.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLL_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<shape>.*?)\s"
+    r"(?P<op>[\w\-]+)\((?P<args>.*)$")
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)\s+(?:\([^)]*\))?.*\{\s*$")
+_CALLED = re.compile(r"(?:body|to_apply|calls|condition|branch_computations)="
+                     r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+
+_SLICE_OPS = ("dynamic-slice", "slice", "gather")
+_LAYOUT_OPS = ("reshape", "bitcast", "tuple", "get-tuple-element", "parameter",
+               "constant", "iota", "after-all", "partition-id", "replica-id",
+               "while", "conditional", "optimization-barrier")
+_CALL_OPS = ("fusion", "call", "conditional", "custom-call", "async-start",
+             "map", "reduce", "sort", "scatter", "select-and-scatter",
+             "reduce-window", "all-reduce", "reduce-scatter")
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    elems = bytes_ = 0
+    for dtype, dims in _SHAPE_TOKEN.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dtype]
+    return elems, bytes_
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_n: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    whiles: list = dataclasses.field(default_factory=list)   # (cond, body)
+    calls: list = dataclasses.field(default_factory=list)    # (callee, op)
+    fusions: list = dataclasses.field(default_factory=list)  # (callee, [arg bytes], out)
+    param_eff: dict = dataclasses.field(default_factory=dict)  # idx -> bytes|None
+    root_eff: float | None = None   # effective output bytes (DUS roots alias)
+    pure_convert: bool = True   # computation contains only converts (dtype
+    # legalization artifact: the CPU backend upcasts bf16 weights to f32 via
+    # standalone convert fusions; on TPU these fuse into consumers and move
+    # no HBM bytes — bytes_tpu discounts them)
+    max_const: float = 1.0
+
+
+def parse_computations(hlo: str) -> dict[str, CompCost]:
+    comps: dict[str, CompCost] = {}
+    shapes: dict[str, dict[str, str]] = {}
+    params: dict[str, dict[str, int]] = {}    # comp -> param name -> index
+    uses: dict[str, dict[int, list]] = {}     # comp -> idx -> [(op, out_bytes)]
+    dus_upd: dict[str, dict[str, int]] = {}   # comp -> DUS instr -> update bytes
+    roots: dict[str, tuple[str, str]] = {}    # comp -> (root name, root args)
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None or (line and not line.startswith(" ") and "{" in line):
+            m = _COMP_HEADER.match(line)
+            if m and ("->" in line or line.startswith("ENTRY")):
+                cur = m.group("name")
+                comps[cur] = CompCost()
+                shapes[cur] = {}
+                params[cur] = {}
+                uses[cur] = defaultdict(list)
+                dus_upd[cur] = {}
+                continue
+        if cur is None or line.strip() == "}":
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, shape_s, op, args = (m.group("name"), m.group("shape"),
+                                   m.group("op"), m.group("args"))
+        shapes[cur][name] = shape_s
+        if raw.lstrip().startswith("ROOT"):
+            roots[cur] = (name, op, args)
+        c = comps[cur]
+        elems, bts = _shape_elems_bytes(shape_s)
+
+        if op == "parameter":
+            pm = re.match(r"(\d+)\)?", args)
+            if pm:
+                params[cur][name] = int(pm.group(1))
+            continue
+        if op not in ("convert", "bitcast", "reshape", "tuple",
+                      "get-tuple-element", "constant"):
+            c.pure_convert = False
+
+        # track param usage (for fusion operand effective bytes)
+        arg_names = re.findall(r"%([\w.\-]+)", args)
+        if op == "dynamic-update-slice" and arg_names:
+            upd_b = (_shape_elems_bytes(shapes[cur][arg_names[1]])[1]
+                     if len(arg_names) > 1 and arg_names[1] in shapes[cur] else 0)
+            if arg_names[0] in params[cur]:
+                # param is the DUS target: traffic = the written slice only
+                uses[cur][params[cur][arg_names[0]]].append(("dus-target", upd_b))
+            for an in arg_names[1:]:
+                if an in params[cur]:
+                    uses[cur][params[cur][an]].append((op, bts))
+            dus_upd[cur][name] = upd_b
+        else:
+            for an in arg_names:
+                if an in params[cur]:
+                    uses[cur][params[cur][an]].append((op, bts))
+
+        if op == "while" and "condition=" in line and "body=" in line:
+            cond = re.search(r"condition=%?([\w.\-]+)", line).group(1)
+            body = re.search(r"body=%?([\w.\-]+)", line).group(1)
+            c.whiles.append((cond, body))
+            continue
+
+        cm = _CALLED.search(line)
+        if cm and op in _CALL_OPS:
+            callees = [x.lstrip("%") for x in re.split(r",\s*", cm.group(1))]
+            for callee in callees:
+                c.calls.append((callee, op))
+            if op in ("fusion", "custom-call"):
+                arg_bytes = [_shape_elems_bytes(shapes[cur][an])[1]
+                             if an in shapes[cur] else 0
+                             for an in re.findall(r"%([\w.\-]+)", args)]
+                c.fusions.append((callees[0], arg_bytes, bts))
+
+        if op == "constant" and shape_s.strip().startswith("s32[]"):
+            mm = re.search(r"constant\((\d+)\)", line)
+            if mm:
+                c.max_const = max(c.max_const, float(mm.group(1)))
+
+        base = op.replace("-start", "")
+        if base in _COLL_FACTOR and not op.endswith("-done"):
+            c.coll[base] += bts * _COLL_FACTOR[base]
+            c.coll_n[base] += 1
+            dt = _SHAPE_TOKEN.findall(shape_s)
+            if dt and dt[0][0] == "f32":
+                c.coll["_f32"] += bts * _COLL_FACTOR[base]
+
+        if op in ("dot", "convolution"):
+            k = _contracted_size(line, args, shapes[cur])
+            c.flops += 2.0 * elems * k
+
+        if op not in ("fusion", "custom-call"):  # fusions resolved later
+            c.bytes += _plain_bytes(op, bts, args, shapes[cur])
+
+    # effective per-param bytes: slice-only / DUS-target params charge the
+    # slice (XLA aliases the untouched remainder in place)
+    for comp, pu in uses.items():
+        for idx, ulist in pu.items():
+            if ulist and all(u[0] in _SLICE_OPS or u[0] == "dus-target"
+                             for u in ulist):
+                comps[comp].param_eff[idx] = 2.0 * sum(u[1] for u in ulist)
+            else:
+                comps[comp].param_eff[idx] = None  # full operand
+
+    # effective output bytes: a root that is (a tuple of) dynamic-update-
+    # slices writes only the update slices
+    for comp, (rname, rop, rargs) in roots.items():
+        du = dus_upd.get(comp, {})
+        if rop == "dynamic-update-slice" and rname in du:
+            comps[comp].root_eff = float(du[rname])
+        elif rop == "tuple":
+            names = re.findall(r"%([\w.\-]+)", rargs)
+            if names and any(n in du for n in names):
+                eff = 0.0
+                for n in names:
+                    if n in du:
+                        eff += du[n]
+                    elif n in shapes[comp]:
+                        eff += _shape_elems_bytes(shapes[comp][n])[1]
+                comps[comp].root_eff = eff
+    return comps
+
+
+def _plain_bytes(op: str, out_bytes: int, args: str, table: dict) -> float:
+    if op in _LAYOUT_OPS or op in _COLL_FACTOR or op.endswith("-done") \
+            or op.endswith("-start"):
+        return 0.0
+    if op in _SLICE_OPS:
+        return 2.0 * out_bytes
+    if op == "dynamic-update-slice":
+        names = re.findall(r"%([\w.\-]+)", args)
+        upd = (_shape_elems_bytes(table[names[1]])[1]
+               if len(names) > 1 and names[1] in table else 0)
+        return 2.0 * upd
+    ab = 0
+    for an in re.findall(r"%([\w.\-]+)", args):
+        if an in table:
+            ab += _shape_elems_bytes(table[an])[1]
+    return out_bytes + ab
+
+
+def _contracted_size(line: str, args: str, table: dict[str, str]) -> int:
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    if not m:
+        return 1
+    dims = [int(d) for d in m.group(1).split(",") if d]
+    ops = re.findall(r"%([\w.\-]+)", args)
+    if not ops or ops[0] not in table:
+        return 1
+    lhs_dims = _SHAPE_TOKEN.findall(table[ops[0]])
+    if not lhs_dims:
+        return 1
+    shape = [int(d) for d in lhs_dims[0][1].split(",") if d]
+    k = 1
+    for d in dims:
+        if d < len(shape):
+            k *= shape[d]
+    return max(k, 1)
+
+
+def _trip_count(comps: dict[str, CompCost], cond: str) -> float:
+    c = comps.get(cond)
+    return max(c.max_const, 1.0) if c else 1.0
+
+
+def aggregate(hlo: str) -> dict:
+    """Entry-rooted per-chip totals with loop multipliers applied."""
+    comps = parse_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HEADER.match(line)
+            if m:
+                entry = m.group("name")
+            break
+    if entry is None or entry not in comps:
+        entry = max(comps, key=lambda k: comps[k].flops, default=None)
+    memo: dict[str, dict] = {}
+
+    def fusion_bytes(c: CompCost) -> tuple[float, float]:
+        total = tpu = 0.0
+        for callee, arg_bytes, out_b in c.fusions:
+            cal = comps.get(callee)
+            if cal is not None and cal.root_eff is not None:
+                sub = min(out_b, cal.root_eff)
+            else:
+                sub = out_b
+            for i, ab in enumerate(arg_bytes):
+                eff = cal.param_eff.get(i, None) if cal else None
+                sub += min(ab, eff) if eff is not None else ab
+            total += sub
+            if not (cal is not None and cal.pure_convert):
+                tpu += sub
+        return total, tpu
+
+    def total(name: str, stack=()) -> dict:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return {"flops": 0.0, "bytes": 0.0, "bytes_tpu": 0.0,
+                    "coll": {}, "coll_n": {}}
+        c = comps[name]
+        fb, fb_tpu = fusion_bytes(c)
+        out = {"flops": c.flops, "bytes": c.bytes + fb,
+               "bytes_tpu": c.bytes + fb_tpu,
+               "coll": dict(c.coll), "coll_n": dict(c.coll_n)}
+
+        def add(sub: dict, mult: float, with_bytes: bool = True):
+            out["flops"] += sub["flops"] * mult
+            if with_bytes:
+                out["bytes"] += sub["bytes"] * mult
+                out["bytes_tpu"] += sub["bytes_tpu"] * mult
+            for k, v in sub["coll"].items():
+                out["coll"][k] = out["coll"].get(k, 0.0) + v * mult
+            for k, v in sub["coll_n"].items():
+                out["coll_n"][k] = out["coll_n"].get(k, 0.0) + v * mult
+
+        for cond, body in c.whiles:
+            trip = _trip_count(comps, cond)
+            add(total(body, stack + (name,)), trip)
+        for callee, kind in c.calls:
+            add(total(callee, stack + (name,)), 1.0,
+                with_bytes=(kind in ("call", "conditional", "async-start")))
+        memo[name] = out
+        return out
+
+    agg = total(entry)
+    f32 = agg["coll"].pop("_f32", 0.0)
+    agg["coll_bytes"] = float(sum(agg["coll"].values()))
+    # TPU projection: the CPU backend legalizes bf16 dots to f32 BEFORE the
+    # SPMD partitioner, so boundary collectives appear f32 in this text even
+    # though every boundary tensor is bf16 by construction (layers.pe); a
+    # TPU build moves them in bf16. Halve f32 collective bytes for the
+    # projected term (the raw value is kept alongside).
+    agg["coll_bytes_f32"] = float(f32)
+    agg["coll_bytes_tpu"] = float(agg["coll_bytes"] - f32 / 2.0)
+    return agg

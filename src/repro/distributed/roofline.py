@@ -1,0 +1,228 @@
+"""Roofline-term extraction from AOT-compiled artifacts.
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = sum over collective ops of per-chip tensor bytes x
+                      ring factor / link_bw
+
+`compiled.cost_analysis()` supplies per-chip FLOPs/bytes (the module is the
+per-partition SPMD program). Collective bytes are NOT in cost_analysis, so
+we parse the optimized HLO text and sum operand sizes of every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute (including
+async -start forms). Ring factors: all-reduce moves ~2x its bytes over the
+slowest link, the others ~1x.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(?P<shape>\([^=]*?\)|[\w\[\],{}:#*\s]+?)\s+"
+    r"(?P<kind>" + "|".join(_COLL_KINDS) + r")(?:-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-chip link bytes by collective kind (ring-factor weighted)."""
+    out: dict[str, float] = {k: 0.0 for k in _COLL_KINDS}
+    counts: dict[str, int] = {k: 0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:  # async completion: counted at -start
+            continue
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("kind")
+        out[kind] += _shape_bytes(m.group("shape")) * _FACTOR[kind]
+        counts[kind] += 1
+    out["_counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                  # per-chip
+    hbm_bytes: float              # per-chip
+    coll_bytes: float             # per-chip, factor-weighted
+    coll_by_kind: dict[str, Any]
+    model_flops_global: float     # 6*N*D etc.
+    model_bytes_global: float     # minimum bytes that must move through HBM
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / total compiled FLOPs (catches remat/redundancy)."""
+        total = self.flops * self.chips
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def t_ideal(self) -> float:
+        """Analytic lower bound: max(useful FLOPs at peak, minimum bytes at
+        full HBM bandwidth) — decode steps are legitimately bandwidth-bound,
+        so the ideal for them is the time to stream params + cache once."""
+        return max(self.model_flops_global / self.chips / PEAK_FLOPS,
+                   self.model_bytes_global / self.chips / HBM_BW)
+
+    @property
+    def roofline_fraction(self) -> float:
+        return self.t_ideal / self.t_bound if self.t_bound else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "coll_by_kind": self.coll_by_kind,
+            "model_flops_global": self.model_flops_global,
+            "model_bytes_global": self.model_bytes_global,
+            "chips": self.chips,
+            "t_ideal_s": self.t_ideal,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*tokens (train), 2*N_active*tokens
+    (prefill/decode), plus attention term 12*L_attn*d*T_ctx per token."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        base = 6.0 * n_active * tokens
+        attn = _attn_flops(cfg, shape.seq_len, causal=True) * shape.global_batch * 3
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        base = 2.0 * n_active * tokens
+        attn = _attn_flops(cfg, shape.seq_len, causal=True) * shape.global_batch
+    else:  # decode: one token per sequence, attention reads the full cache
+        tokens = shape.global_batch
+        base = 2.0 * n_active * tokens
+        attn = (4.0 * _attn_layers(cfg) * cfg.num_heads * cfg.head_dim
+                * shape.seq_len) * shape.global_batch
+    return base + attn
+
+
+def model_bytes(cfg, shape) -> float:
+    """Minimum HBM traffic (global): weights streamed once per step, plus —
+    for decode — the KV cache / SSM state read once."""
+    n_active = cfg.active_param_count()
+    wbytes = 2.0 * n_active  # bf16
+    if shape.kind != "decode":
+        return wbytes
+    l_attn = _attn_layers(cfg)
+    kv = (2.0 * l_attn * shape.seq_len * cfg.num_kv_heads * cfg.head_dim
+          * 2.0 * shape.global_batch)
+    ssm = 0.0
+    if cfg.family in ("ssm", "hybrid"):
+        d_inner = 2 * cfg.d_model
+        heads = d_inner // cfg.ssm_head_dim
+        l_ssm = cfg.num_layers - l_attn
+        ssm = 4.0 * l_ssm * heads * cfg.ssm_state * cfg.ssm_head_dim * shape.global_batch
+    return wbytes + kv + ssm
+
+
+def _attn_layers(cfg) -> int:
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid" and cfg.attn_layer_period:
+        return cfg.num_layers // cfg.attn_layer_period
+    return cfg.num_layers
+
+
+def _attn_flops(cfg, seq: int, causal: bool) -> float:
+    l = _attn_layers(cfg)
+    if not l:
+        return 0.0
+    # 2 matmuls (QK^T, PV), 2*d_head*H per position pair; causal halves it
+    per_layer = 4.0 * cfg.num_heads * cfg.head_dim * seq * seq
+    return l * per_layer * (0.5 if causal else 1.0)
+
+
+def build(compiled, hlo_text: str, cfg, shape, chips: int) -> Roofline:
+    """Per-chip roofline. FLOPs/bytes/collectives come from the trip-count-
+    aware HLO walk (distributed/hlo_cost.py) because cost_analysis() counts
+    while-loop bodies once; raw cost_analysis values are kept for
+    cross-checking in the artifact."""
+    from repro.distributed import hlo_cost
+    ca = compiled.cost_analysis() or {}
+    agg = hlo_cost.aggregate(hlo_text)
+    return Roofline(
+        flops=max(float(agg["flops"]), float(ca.get("flops", 0.0))),
+        # TPU-projected terms: the CPU backend (a) legalizes bf16 dots to
+        # f32 so boundary collectives ride f32, and (b) materializes
+        # standalone f32 convert-fusions of bf16 weights; neither exists on
+        # the TPU target (native bf16 MXU, converts fuse into consumers).
+        # Raw CPU-text values are kept alongside in coll_by_kind.
+        hbm_bytes=max(float(agg["bytes_tpu"]), float(ca.get("bytes accessed", 0.0))),
+        coll_bytes=float(agg["coll_bytes_tpu"]),
+        coll_by_kind={"bytes": agg["coll"], "counts": agg["coll_n"],
+                      "raw_text_bytes": float(agg["coll_bytes"]),
+                      "raw_hbm_bytes": float(agg["bytes"]),
+                      "f32_share": float(agg["coll_bytes_f32"]),
+                      "xla_cost_analysis_flops": float(ca.get("flops", 0.0)),
+                      "xla_cost_analysis_bytes": float(ca.get("bytes accessed", 0.0))},
+        model_flops_global=model_flops(cfg, shape),
+        model_bytes_global=model_bytes(cfg, shape),
+        chips=chips,
+    )

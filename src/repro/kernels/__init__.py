@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for CARD's compute hot spots + the prefill fast path.
+
+Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+jit'd public wrappers in ops.py (interpret=True off-TPU), pure-jnp oracles
+in ref.py. tests/test_kernels.py sweeps shapes/dtypes and asserts
+equality/allclose against the oracles.
+
+  gear_hash      windowed weighted-sum scan (gear + Rabin fingerprints):
+                 the serial rolling hashes are linear, so every position is
+                 a W-tap correlation evaluated in parallel (DESIGN.md §3)
+  shingle_embed  multiply-shift M-hash feature accumulation (Algorithm 1)
+  sim_topk       tiled cosine top-1 with running (max, argmax) — the
+                 flash-attention trick applied to resemblance search
+  flash_attn     blockwise online-softmax attention with GQA-by-indexing
+"""
+from repro.kernels import ops  # noqa: F401

@@ -1,0 +1,109 @@
+"""Blockwise online-softmax attention kernel (flash-attention schedule).
+
+Grid (B, H, Tq/Bq, Tk/Bk) with the KV axis innermost: each (b, h, qi)
+keeps running (max, denom, accumulator) in VMEM scratch across the
+sequential KV steps, so the [Tq, Tk] score matrix never exists in HBM —
+the TPU-native prefill path whose jnp twin is
+models/layers._chunked_attention (same schedule, validated against each
+other and against kernels/ref.flash_attention_ref).
+
+GQA without materialization: the K/V BlockSpec index_map sends query head
+h to KV head h // group, so grouped heads share K/V blocks by indexing,
+not by jnp.repeat.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_k: int, causal: bool, scale: float,
+                  tk_valid: int, nk: int):
+    kj = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(F32) * scale              # [Bq, hd]
+    k = k_ref[0, 0].astype(F32)                      # [Bk, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32)  # [Bq, Bk]
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos < tk_valid
+    if causal:
+        mask = mask & (kpos <= qpos)
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v_ref[0, 0].astype(F32), (((1,), (0,)), ((), ())),
+        preferred_element_type=F32)
+    m_scr[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-20)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, interpret: bool = True) -> jax.Array:
+    """q [B, H, Tq, hd], k/v [B, KV, Tk, hd] (H % KV == 0) -> [B, H, Tq, hd]."""
+    b, h, tq, hd = q.shape
+    kvh, tk = k.shape[1], k.shape[2]
+    group = h // kvh
+    pq = (-tq) % block_q
+    pk = (-tk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = (tq + pq) // block_q
+    nk = (tk + pk) // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, causal=causal,
+        scale=float(1.0 / np.sqrt(hd)), tk_valid=tk, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda bb, hh, qi, kj: (bb, hh, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bb, hh, qi, kj, g=group: (bb, hh // g, kj, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bb, hh, qi, kj, g=group: (bb, hh // g, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda bb, hh, qi, kj: (bb, hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, tq + pq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), F32),   # running max
+            pltpu.VMEM((block_q, 1), F32),   # running denominator
+            pltpu.VMEM((block_q, hd), F32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :tq]

@@ -1,0 +1,61 @@
+"""Parallel windowed weighted-sum kernel (gear hash / Rabin fingerprints).
+
+The serial rolling hashes of FastCDC / Finesse / N-transform are linear, so
+every position's hash is a W-tap correlation over the byte stream
+(DESIGN.md §3):
+
+    h_i = sum_{k=0..W-1} w_k * g_{i-k}      (uint32 wraparound)
+
+The stream is laid out as [R, C] rows (row r continues row r-1), and the
+grid walks rows. Each step sees its row plus the previous row (for the
+W-1-byte halo) and evaluates all C hashes as W static shifted
+multiply-adds — pure VPU work with no sequential dependency, in contrast
+to the serial CPU loop the paper uses. Tap weights are compile-time
+constants baked into the kernel (gear: 1<<k; rabin: p^k).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _windowed_sum_kernel(prev_ref, cur_ref, out_ref, *, weights: tuple[int, ...]):
+    w = len(weights)
+    row = pl.program_id(0)
+    cur = cur_ref[...]                      # [1, C] uint32
+    prev_tail = prev_ref[:, cur.shape[1] - (w - 1):]  # [1, W-1]
+    # Row 0 has no predecessor: its halo must contribute zeros.
+    prev_tail = jnp.where(row == 0, jnp.zeros_like(prev_tail), prev_tail)
+    ext = jnp.concatenate([prev_tail, cur], axis=1)   # [1, C + W - 1]
+    c = cur.shape[1]
+    acc = jnp.zeros_like(cur)
+    for k, wk in enumerate(weights):
+        # g_{i-k} for i in [0, C): ext[:, (W-1-k) : (W-1-k)+C]
+        acc = acc + ext[:, w - 1 - k : w - 1 - k + c] * jnp.uint32(wk)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("weights", "interpret"))
+def windowed_sum(g: jax.Array, weights: tuple[int, ...],
+                 interpret: bool = True) -> jax.Array:
+    """g [R, C] uint32 (flattened stream, row-major) -> [R, C] uint32 hashes."""
+    r, c = g.shape
+    w = len(weights)
+    assert c >= w, f"row width {c} must cover the {w}-tap window"
+    kernel = functools.partial(_windowed_sum_kernel, weights=weights)
+    return pl.pallas_call(
+        kernel,
+        grid=(r,),
+        in_specs=[
+            # previous row (halo); clamped at row 0 and masked in-kernel
+            pl.BlockSpec((1, c), lambda i: (jnp.maximum(i - 1, 0), 0)),
+            pl.BlockSpec((1, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.uint32),
+        interpret=interpret,
+    )(g, g)

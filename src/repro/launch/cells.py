@@ -1,0 +1,207 @@
+"""Dry-run cell construction: (arch x input-shape x mesh) -> lowered step.
+
+Everything is ShapeDtypeStruct-driven — no parameter allocation ever
+happens; `.lower()` traces the full production step (train / prefill /
+decode) under the cell's sharding rules, and `.compile()` proves the
+distribution config is coherent.
+
+Per-cell policy knobs (all overridable by the perf hillclimb):
+  * fsdp: shard the d_model param axis over "data" (ZeRO-3). Default: on
+    for train; on for serving when bf16 params exceed ~3 GB/chip under TP
+    alone (grok-1, jamba, qwen3).
+  * num_microbatches: gradient-accumulation splits for train cells.
+  * m_dtype: bf16 first moment for >=100B params (fits 16 GB/chip HBM).
+  * long_500k: batch (=1) replicated, KV-cache sequence axis sharded over
+    ("data","model") — sequence parallelism for single-stream decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import optim
+from repro.configs import get_config, get_shape
+from repro.distributed import sharding as shd
+from repro.models import make_model
+from repro.train import make_train_step
+from repro.train.step import init_state
+
+
+@dataclasses.dataclass
+class CellMeta:
+    arch: str
+    shape_name: str
+    kind: str
+    chips: int
+    fsdp: bool
+    num_microbatches: int
+    rules: shd.ShardingRules
+
+
+def _serve_fsdp(cfg) -> bool:
+    """Serving gathers FSDP-sharded weights every step (the jamba long_500k
+    hillclimb measured a 2170x collective-term penalty), so serve cells use
+    plain TP unless bf16 params exceed ~10 GB/chip under the 16-way model
+    axis alone (only grok-1: 39 GB/chip -> needs the data axis too)."""
+    return cfg.param_count() * 2 / 16 > 10e9
+
+
+def _default_microbatches(cfg) -> int:
+    return 8
+
+
+def _extras_shapes(cfg, batch: int, dtype, kind: str) -> dict:
+    ex = {}
+    if cfg.family == "vlm":
+        ex["images"] = jax.ShapeDtypeStruct((batch, cfg.num_image_tokens, cfg.d_model), dtype)
+    if cfg.family == "audio":
+        # decode serves from the cached encoder output ("memory"); train /
+        # prefill run the encoder over stub frame embeddings
+        name = "memory" if kind == "decode" else "frames"
+        ex[name] = jax.ShapeDtypeStruct((batch, cfg.num_audio_frames, cfg.d_model), dtype)
+    return ex
+
+
+def _extras_specs(cfg, rules, kind: str) -> dict:
+    out = {}
+    name = {"vlm": "images",
+            "audio": "memory" if kind == "decode" else "frames"}.get(cfg.family)
+    if name:
+        out[name] = shd.activation_spec("batch", None, None, rules=rules)
+    return out
+
+
+def input_specs(arch: str, shape_name: str, *, multi_pod: bool = False,
+                fsdp: Optional[bool] = None,
+                rules: Optional[shd.ShardingRules] = None) -> dict:
+    """ShapeDtypeStruct stand-ins + PartitionSpecs for every model input."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    model = make_model(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+
+    if rules is None:
+        if shape.kind == "decode" and shape.global_batch == 1:
+            # long-context single stream: replicate batch, shard the cache
+            # sequence axis over every mesh axis (SP decode)
+            rules = dataclasses.replace(
+                shd.default_rules(cfg, multi_pod=multi_pod, decode=True,
+                                  fsdp=_serve_fsdp(cfg) if fsdp is None else fsdp),
+                batch=None, cache_seq=("data", "model"))
+        elif shape.kind == "train":
+            rules = shd.default_rules(cfg, multi_pod=multi_pod,
+                                      fsdp=True if fsdp is None else fsdp)
+        else:
+            rules = shd.default_rules(cfg, multi_pod=multi_pod,
+                                      decode=shape.kind == "decode",
+                                      fsdp=_serve_fsdp(cfg) if fsdp is None else fsdp)
+
+    b, s = shape.global_batch, shape.seq_len
+    tok_spec = shd.activation_spec("batch", None, rules=rules)
+    if shape.kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            **_extras_shapes(cfg, b, dtype, shape.kind),
+        }
+        specs = {"tokens": tok_spec, "labels": tok_spec,
+                 **_extras_specs(cfg, rules, shape.kind)}
+    elif shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                 **_extras_shapes(cfg, b, dtype, shape.kind)}
+        specs = {"tokens": tok_spec, **_extras_specs(cfg, rules, shape.kind)}
+    else:  # decode
+        batch = {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                 **_extras_shapes(cfg, b, dtype, shape.kind)}
+        specs = {"token": tok_spec, **_extras_specs(cfg, rules, shape.kind)}
+        cache = jax.eval_shape(lambda: model.init_cache(b, s))
+        batch["__cache__"] = cache
+        specs["__cache__"] = shd.cache_pspecs(cache, rules)
+    return {"batch": batch, "specs": specs, "rules": rules, "cfg": cfg,
+            "shape": shape, "model": model}
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, multi_pod: bool = False,
+               fsdp: Optional[bool] = None,
+               num_microbatches: Optional[int] = None,
+               m_dtype: Optional[str] = None,
+               rules: Optional[shd.ShardingRules] = None,
+               donate: bool = True):
+    """Lower one cell on `mesh`; returns (lowered, meta)."""
+    spec = input_specs(arch, shape_name, multi_pod=multi_pod, fsdp=fsdp,
+                       rules=rules)
+    cfg, shape, model, rules = spec["cfg"], spec["shape"], spec["model"], spec["rules"]
+    chips = int(np.prod(mesh.devices.shape))
+
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = shd.param_pspecs(params_shapes, rules)
+
+    def to_sh(shapes, specs):
+        specs = shd.sanitize_pspecs(shapes, specs, mesh)
+        return jax.tree_util.tree_map(
+            lambda sp: jax.sharding.NamedSharding(mesh, sp), specs,
+            is_leaf=lambda x: isinstance(x, P))
+
+    nm = num_microbatches or _default_microbatches(cfg)
+    meta = CellMeta(arch, shape_name, shape.kind, chips,
+                    fsdp if fsdp is not None else shape.kind == "train",
+                    nm if shape.kind == "train" else 0, rules)
+
+    batch, bspecs = spec["batch"], spec["specs"]
+
+    with mesh, shd.use_rules(rules, mesh):
+        if shape.kind == "train":
+            moments = jnp.bfloat16 if (m_dtype == "bfloat16" or
+                                       (m_dtype is None and cfg.param_count() > 1e11)) else None
+            tx = optim.adamw(optim.cosine_schedule(3e-4, 2000, 100_000),
+                             weight_decay=0.1, m_dtype=moments,
+                             max_grad_norm=1.0)
+            state_shapes = jax.eval_shape(
+                lambda p: init_state(p, tx), params_shapes)
+            sspecs = init_state_specs(state_shapes, pspecs)
+            step = make_train_step(model, tx, num_microbatches=nm)
+            jf = jax.jit(step,
+                         in_shardings=(to_sh(state_shapes, sspecs), to_sh(batch, bspecs)),
+                         out_shardings=(to_sh(state_shapes, sspecs), None),
+                         donate_argnums=(0,) if donate else ())
+            lowered = jf.lower(state_shapes, batch)
+        elif shape.kind == "prefill":
+            def prefill(params, b):
+                extras = {k: v for k, v in b.items() if k != "tokens"}
+                return model.prefill(params, b["tokens"], extras or None)
+            jf = jax.jit(prefill,
+                         in_shardings=(to_sh(params_shapes, pspecs), to_sh(batch, bspecs)),
+                         out_shardings=None)
+            lowered = jf.lower(params_shapes, batch)
+        else:
+            cache_shapes = batch.pop("__cache__")
+            cache_specs = bspecs.pop("__cache__")
+
+            def decode(params, b, cache):
+                extras = {k: v for k, v in b.items() if k != "token"}
+                return model.decode_step(params, b["token"], cache,
+                                         extras or None)
+            jf = jax.jit(decode,
+                         in_shardings=(to_sh(params_shapes, pspecs), to_sh(batch, bspecs),
+                                       to_sh(cache_shapes, cache_specs)),
+                         out_shardings=(None, to_sh(cache_shapes, cache_specs)),
+                         donate_argnums=(2,) if donate else ())
+            lowered = jf.lower(params_shapes, batch, cache_shapes)
+    return lowered, meta
+
+
+def init_state_specs(state_shapes, pspecs):
+    """TrainState specs: params/mu/nu follow param specs; scalars replicate."""
+    from repro.train.step import TrainState
+    from repro.optim.optimizers import OptState
+    return TrainState(
+        params=pspecs,
+        opt_state=OptState(step=P(), mu=pspecs, nu=pspecs),
+        step=P(),
+    )

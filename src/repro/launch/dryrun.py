@@ -1,0 +1,118 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first init, and the dry-run needs 512 placeholder host devices to
+# build the production mesh. (Everything else — tests, benches — sees 1.)
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+import numpy as np       # noqa: E402
+
+from repro.configs import ARCH_IDS, cells as arch_cells, get_config  # noqa: E402
+from repro.distributed import roofline as rl  # noqa: E402
+from repro.launch.cells import lower_cell     # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: Path,
+             verbose: bool = True, **overrides) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+    tag = f"{arch}.{shape_name}.{'multi' if multi_pod else 'single'}"
+    t0 = time.time()
+    record: dict = {"arch": arch, "shape": shape_name,
+                    "mesh": "2x16x16" if multi_pod else "16x16",
+                    "chips": chips, "ok": False, "overrides": {
+                        k: str(v) for k, v in overrides.items()}}
+    try:
+        lowered, meta = lower_cell(arch, shape_name, mesh,
+                                   multi_pod=multi_pod, **overrides)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        cfg = get_config(arch)
+        from repro.configs import get_shape
+        roof = rl.build(compiled, hlo, cfg, get_shape(shape_name), chips)
+
+        record.update({
+            "ok": True,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "kind": meta.kind,
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_per_chip_gb": round(
+                    (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                     + ma.output_size_in_bytes - ma.alias_size_in_bytes) / 2**30, 3),
+            },
+            "roofline": roof.to_dict(),
+        })
+        if verbose:
+            print(f"[ok] {tag}: compile={t_compile:.1f}s "
+                  f"mem/chip={record['memory']['peak_per_chip_gb']}GB "
+                  f"dominant={roof.dominant} "
+                  f"t=({roof.t_compute:.4f},{roof.t_memory:.4f},"
+                  f"{roof.t_collective:.4f})s "
+                  f"roofline={roof.roofline_fraction:.2%}", flush=True)
+    except Exception as e:  # noqa: BLE001 — record and continue
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[FAIL] {tag}: {record['error']}", flush=True)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    with open(out_dir / f"{tag}.json", "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run driver")
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    out_dir = Path(args.out)
+
+    results = []
+    for arch in archs:
+        shapes = [s.name for s in arch_cells(arch)]
+        if args.shape != "all":
+            if args.shape not in shapes:
+                print(f"[skip] {arch}.{args.shape}: N/A for this arch")
+                continue
+            shapes = [args.shape]
+        for shape_name in shapes:
+            for mp in meshes:
+                tag = f"{arch}.{shape_name}.{'multi' if mp else 'single'}"
+                if args.skip_existing and (out_dir / f"{tag}.json").exists():
+                    existing = json.loads((out_dir / f"{tag}.json").read_text())
+                    if existing.get("ok"):
+                        print(f"[cached] {tag}")
+                        results.append(existing)
+                        continue
+                results.append(run_cell(arch, shape_name, multi_pod=mp,
+                                        out_dir=out_dir))
+    ok = sum(r.get("ok", False) for r in results)
+    print(f"\n{ok}/{len(results)} cells compiled")
+    if ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

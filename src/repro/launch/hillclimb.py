@@ -1,0 +1,53 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (must precede any jax import — see dryrun.py)
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+from pathlib import Path  # noqa: E402
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+
+"""Perf-iteration driver: re-lower one cell with explicit overrides and log
+the roofline deltas, building the EXPERIMENTS.md §Perf record.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --arch grok-1-314b \
+        --shape train_4k --tag mb4 --microbatches 4
+"""
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--fsdp", choices=["on", "off"], default=None)
+    ap.add_argument("--m-dtype", default=None)
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.microbatches is not None:
+        overrides["num_microbatches"] = args.microbatches
+    if args.fsdp is not None:
+        overrides["fsdp"] = args.fsdp == "on"
+    if args.m_dtype is not None:
+        overrides["m_dtype"] = args.m_dtype
+
+    out = Path(f"artifacts/hillclimb/{args.arch}.{args.shape}.{args.tag}")
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   out_dir=out, **overrides)
+    if rec.get("ok"):
+        r = rec["roofline"]
+        print(json.dumps({
+            "tag": args.tag, "t_compute": r["t_compute_s"],
+            "t_memory": r["t_memory_s"], "t_collective": r["t_collective_s"],
+            "dominant": r["dominant"], "frac": r["roofline_fraction"],
+            "mem_gb": rec["memory"]["peak_per_chip_gb"],
+        }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Training driver with checkpoint/restart fault tolerance.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-8b --reduced \
+        --steps 50 --checkpoint-every 10 --ckpt-dir /tmp/run1
+
+Restart semantics: on start, if the checkpoint dir has a committed step,
+training resumes from it (data pipeline is (step, shard)-deterministic so
+the restarted worker replays exactly its shard — no coordination needed).
+`--fail-at N` raises at step N to exercise the restart path;
+launch/supervisor.py wraps this process and restarts it, which is the
+single-host simulation of a 1000-node job manager rescheduling a worker.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.checkpoint import DedupCheckpointStore, latest_step, restore, save
+from repro.configs import get_config
+from repro.data import TokenPipeline, TokenPipelineConfig
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.models import make_model
+from repro.train import make_train_step
+from repro.train.step import TrainState, init_state
+
+
+def build(args):
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = make_model(cfg)
+    tx = optim.adamw(optim.cosine_schedule(args.lr, 20, max(args.steps, 21)),
+                     weight_decay=0.1, max_grad_norm=1.0)
+    step_fn = jax.jit(make_train_step(model, tx,
+                                      num_microbatches=args.microbatches))
+    pipe = TokenPipeline(TokenPipelineConfig(
+        vocab_size=cfg.vocab_size, global_batch=args.batch,
+        seq_len=args.seq, shards=1))
+    return cfg, model, tx, step_fn, pipe
+
+
+def extras_for(cfg, batch):
+    ex = {}
+    if cfg.family == "vlm":
+        ex["images"] = np.zeros((batch, cfg.num_image_tokens, cfg.d_model), np.float32)
+    if cfg.family == "audio":
+        ex["frames"] = np.zeros((batch, cfg.num_audio_frames, cfg.d_model), np.float32)
+    return ex
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--checkpoint-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--dedup-ckpt", action="store_true",
+                    help="also mirror checkpoints into the CARD dedup store")
+    ap.add_argument("--fail-at", type=int, default=-1,
+                    help="simulate a worker crash at this step")
+    args = ap.parse_args(argv)
+
+    cfg, model, tx, step_fn, pipe = build(args)
+    state = init_state(model.init(jax.random.PRNGKey(0)), tx)
+
+    start = 0
+    if args.ckpt_dir:
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            state = restore(args.ckpt_dir, state, last)
+            start = int(last)
+            print(f"[resume] restored step {start} from {args.ckpt_dir}", flush=True)
+
+    dstore = DedupCheckpointStore() if args.dedup_ckpt else None
+    extras = extras_for(cfg, args.batch)
+    t0 = time.time()
+    for step in range(start, args.steps):
+        if step == args.fail_at and start == 0:
+            # fire only on a fresh (non-resumed) run so the restarted worker
+            # can make progress — mirrors a one-off node failure
+            print(f"[failure-injection] crashing at step {step}", flush=True)
+            sys.exit(17)
+        batch = dict(pipe.batch(step), **extras)
+        state, metrics = step_fn(state, batch)
+        if step % 5 == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0):.1f}s)", flush=True)
+        if args.ckpt_dir and (step + 1) % args.checkpoint_every == 0:
+            save(args.ckpt_dir, state, step + 1)
+            if dstore is not None:
+                stats = dstore.save(jax.device_get(state.params), step + 1)
+                print(f"[dedup-ckpt] DCR={stats.dcr:.2f} "
+                      f"stored={stats.bytes_stored >> 20}MiB "
+                      f"raw={stats.bytes_in >> 20}MiB", flush=True)
+    print(f"[done] {args.steps} steps in {time.time()-t0:.1f}s", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,176 @@
+"""Mamba2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Recurrence per head (P = head dim, N = state dim, scalar decay a_t):
+
+    h_t = a_t * h_{t-1} + B_t (dt_t x_t)^T        h: [N, P]
+    y_t = C_t^T h_t + D * x_t
+
+Training uses the chunked dual form — quadratic attention-like einsums
+*within* a chunk, a single recurrent state hand-off *between* chunks
+(lax.scan) — which is the matmul-heavy, MXU-friendly formulation.
+Decode is the O(1) recurrent update. Both paths share parameters and are
+cross-validated in tests (chunked == step-by-step).
+
+Layout follows Mamba2: in_proj -> [z | xBC | dt]; depthwise conv width-W
+over xBC; ngroups=1 (B, C shared across heads).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import constrain
+from repro.models.layers import dense_init, dtype_of, pe
+
+F32 = jnp.float32
+
+
+def ssm_dims(cfg):
+    d_inner = 2 * cfg.d_model
+    heads = d_inner // cfg.ssm_head_dim
+    conv_ch = d_inner + 2 * cfg.ssm_state
+    return d_inner, heads, conv_ch
+
+
+def init_ssm(key, cfg):
+    d = cfg.d_model
+    d_inner, heads, conv_ch = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    return {
+        "in_proj": dense_init(ks[0], (d, d_inner + conv_ch + heads), dtype=dt),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_width, conv_ch), dtype=dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.zeros((heads,), F32),          # A = -exp(a_log)
+        "dt_bias": jnp.zeros((heads,), F32),
+        "d_skip": jnp.ones((heads,), F32),
+        "out_proj": dense_init(ks[2], (d_inner, d), dtype=dt),
+    }
+
+
+def _split_proj(params, x, cfg):
+    d_inner, heads, conv_ch = ssm_dims(cfg)
+    proj = pe("btd,de->bte", x, params["in_proj"])
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:d_inner + conv_ch]
+    dt_raw = proj[..., d_inner + conv_ch:]
+    return z, xbc, dt_raw
+
+
+def _conv_scan(params, xbc, conv_state=None):
+    """Depthwise causal conv width W. conv_state: [B, W-1, C] history."""
+    w = params["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    ext = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(ext[:, i:i + xbc.shape[1], :] * params["conv_w"][i]
+              for i in range(w))
+    out = jax.nn.silu((out + params["conv_b"]).astype(F32))
+    new_state = ext[:, -(w - 1):, :]
+    return out, new_state
+
+
+def _gates(params, dt_raw):
+    dt = jax.nn.softplus(dt_raw.astype(F32) + params["dt_bias"])  # [B,T,H]
+    a = jnp.exp(-dt * jnp.exp(params["a_log"]))                   # decay in (0,1)
+    return dt, a
+
+
+def ssm_train(params, x, cfg, chunk: int = 256):
+    """x [B, T, D] -> y [B, T, D] (chunked SSD; T % chunk need not be 0)."""
+    b, t, _ = x.shape
+    d_inner, heads, conv_ch = ssm_dims(cfg)
+    n, p = cfg.ssm_state, cfg.ssm_head_dim
+
+    z, xbc, dt_raw = _split_proj(params, x, cfg)
+    xbc, _ = _conv_scan(params, xbc)
+    xs = xbc[..., :d_inner].reshape(b, t, heads, p)
+    bmat = xbc[..., d_inner:d_inner + n]                          # [B,T,N]
+    cmat = xbc[..., d_inner + n:]                                 # [B,T,N]
+    dt, a = _gates(params, dt_raw)
+    xdt = xs.astype(F32) * dt[..., None]                          # [B,T,H,P]
+
+    pad = (-t) % chunk
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+    nc = (t + pad) // chunk
+
+    def rs(u, extra):  # [B, T, ...] -> [nc, B, chunk, ...]
+        return u.reshape((b, nc, chunk) + extra).transpose((1, 0, 2) + tuple(range(3, 3 + len(extra))))
+
+    # the recurrence is independent per head: shard heads over "model"
+    # (B/C are head-shared; their per-head broadcast happens post-shard)
+    xdt = constrain(xdt, "batch", None, "heads", None)
+    a = constrain(a, "batch", None, "heads")
+
+    xc = rs(xdt, (heads, p))
+    bc = rs(bmat.astype(F32), (n,))
+    cc = rs(cmat.astype(F32), (n,))
+    ac = rs(a, (heads,))
+
+    def body(h, blk):
+        xb, bb, cb, ab = blk            # [B,Q,H,P], [B,Q,N], [B,Q,N], [B,Q,H]
+        xb = constrain(xb, "batch", None, "heads", None)
+        h = constrain(h, "batch", "heads", None, None)
+        la = jnp.cumsum(jnp.log(jnp.maximum(ab, 1e-20)), axis=1)  # [B,Q,H]
+        # intra-chunk (dual quadratic form)
+        qpos = jnp.arange(chunk)
+        causal = qpos[:, None] >= qpos[None, :]
+        decay = jnp.exp(la[:, :, None, :] - la[:, None, :, :])    # [B,Q,K,H]
+        decay = jnp.where(causal[None, :, :, None], decay, 0.0)
+        scores = jnp.einsum("bqn,bkn->bqk", cb, bb)
+        y_intra = jnp.einsum("bqk,bqkh,bkhp->bqhp", scores, decay, xb)
+        # inter-chunk (carried state)
+        y_inter = jnp.einsum("bqn,bhnp->bqhp", cb, h) * jnp.exp(la)[..., None]
+        # state update
+        tail = jnp.exp(la[:, -1:, :] - la)                        # [B,Q,H]
+        s_new = jnp.einsum("bkn,bkh,bkhp->bhnp", bb, tail, xb)
+        h_new = h * jnp.exp(la[:, -1, :])[:, :, None, None] + s_new
+        h_new = constrain(h_new, "batch", "heads", None, None)
+        y = constrain(y_intra + y_inter, "batch", None, "heads", None)
+        return h_new, y
+
+    h0 = jnp.zeros((b, heads, n, p), F32)
+    _, ys = jax.lax.scan(body, h0, (xc, bc, cc, ac))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t + pad, heads, p)[:, :t]
+    y = y + xs.astype(F32) * params["d_skip"][:, None]
+    y = (y.reshape(b, t, d_inner) * jax.nn.silu(z.astype(F32))).astype(x.dtype)
+    y = constrain(y, "batch", "seq", None)
+    return pe("bte,ed->btd", y, params["out_proj"])
+
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.float32):
+    d_inner, heads, conv_ch = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        "h": jnp.zeros((batch, heads, cfg.ssm_state, cfg.ssm_head_dim), F32),
+    }
+
+
+def ssm_step(params, x, cfg, cache):
+    """Single-token decode: x [B, 1, D] -> (y [B, 1, D], new cache)."""
+    b = x.shape[0]
+    d_inner, heads, conv_ch = ssm_dims(cfg)
+    n, p = cfg.ssm_state, cfg.ssm_head_dim
+
+    z, xbc, dt_raw = _split_proj(params, x, cfg)
+    xbc, conv_state = _conv_scan(params, xbc, cache["conv"])
+    xs = xbc[:, 0, :d_inner].reshape(b, heads, p)
+    bvec = xbc[:, 0, d_inner:d_inner + n]
+    cvec = xbc[:, 0, d_inner + n:]
+    dt, a = _gates(params, dt_raw)                     # [B,1,H]
+    xdt = xs.astype(F32) * dt[:, 0, :, None]           # [B,H,P]
+
+    h = cache["h"] * a[:, 0, :, None, None] + \
+        jnp.einsum("bn,bhp->bhnp", bvec.astype(F32), xdt)
+    y = jnp.einsum("bn,bhnp->bhp", cvec.astype(F32), h)
+    y = y + xs.astype(F32) * params["d_skip"][:, None]
+    y = (y.reshape(b, 1, d_inner) * jax.nn.silu(z.astype(F32))).astype(x.dtype)
+    out = pe("bte,ed->btd", y, params["out_proj"])
+    return out, {"conv": conv_state, "h": h}

@@ -1,0 +1,326 @@
+"""Model assembler: every assigned architecture is a pattern of sublayers.
+
+A config induces a repeating *period* of sublayers (attention vs SSM mixer,
+MoE vs dense FFN, optional cross-attention), e.g.:
+
+    dense LMs    period 1:  [attn+mlp]                         x L
+    grok/qwen3   period 1:  [attn+moe]                         x L
+    jamba        period 8:  [ssm+moe, ssm+mlp, ... attn+moe]   x 4
+    llama-vision period 5:  [attn+mlp x4, attn+cross+mlp]      x 8
+    mamba2       period 1:  [ssm]                              x 24
+    whisper      encoder stack + decoder stack (cross every layer)
+
+Parameters of each period-position are stacked across repetitions and the
+stack is scanned (jax.lax.scan), so HLO size and compile time are
+independent of depth; remat wraps the scanned body.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import constrain
+from repro.models import layers as L
+from repro.models import ssm as S
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class SublayerKind:
+    mixer: str          # "attn" | "ssm"
+    moe: bool
+    cross: bool
+    ffn: bool
+
+
+def layer_kinds(cfg: ModelConfig) -> list[SublayerKind]:
+    kinds = []
+    for i in range(cfg.num_layers):
+        if cfg.family == "ssm":
+            kinds.append(SublayerKind("ssm", False, False, False))
+            continue
+        if cfg.family == "hybrid" and cfg.attn_layer_period:
+            mixer = "attn" if i % cfg.attn_layer_period == cfg.attn_layer_period - 1 else "ssm"
+        else:
+            mixer = "attn"
+        moe = bool(cfg.num_experts) and i % cfg.moe_layer_period == cfg.moe_layer_period - 1
+        cross = bool(cfg.cross_attn_period) and i % cfg.cross_attn_period == cfg.cross_attn_period - 1
+        kinds.append(SublayerKind(mixer, moe, cross, ffn=True))
+    return kinds
+
+
+def block_period(cfg: ModelConfig) -> int:
+    p = 1
+    for per in (cfg.moe_layer_period if cfg.num_experts else 1,
+                cfg.attn_layer_period or 1,
+                cfg.cross_attn_period or 1):
+        p = int(np.lcm(p, per))
+    assert cfg.num_layers % p == 0, (cfg.name, p)
+    return p
+
+
+# -----------------------------------------------------------------------------
+# init
+# -----------------------------------------------------------------------------
+
+def _init_sublayer(key, kind: SublayerKind, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {"ln1": {"scale": jnp.ones((cfg.d_model,), F32)}}
+    if kind.mixer == "attn":
+        p["attn"] = L.init_attention(ks[0], cfg)
+    else:
+        p["ssm"] = S.init_ssm(ks[0], cfg)
+    if kind.cross:
+        p["ln_cross"] = {"scale": jnp.ones((cfg.d_model,), F32)}
+        p["cross"] = L.init_attention(ks[1], cfg)
+    if kind.ffn:
+        p["ln2"] = {"scale": jnp.ones((cfg.d_model,), F32)}
+        p["moe" if kind.moe else "mlp"] = (
+            L.init_moe(ks[2], cfg) if kind.moe else L.init_mlp(ks[2], cfg))
+    return p
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> dict:
+    kinds = layer_kinds(cfg)
+    period = block_period(cfg)
+    n_rep = cfg.num_layers // period
+    keys = jax.random.split(rng, cfg.num_layers + 4)
+    dt = L.dtype_of(cfg)
+
+    # per-layer params, then stack layers with the same period position
+    per_layer = [_init_sublayer(keys[i], kinds[i], cfg)
+                 for i in range(cfg.num_layers)]
+    blocks = []
+    for pos in range(period):
+        group = [per_layer[r * period + pos] for r in range(n_rep)]
+        blocks.append(jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *group))
+
+    params: dict[str, Any] = {
+        "embed": L.dense_init(keys[-1], (cfg.vocab_size, cfg.d_model), dtype=dt),
+        "final_norm": {"scale": jnp.ones((cfg.d_model,), F32)},
+        "blocks": blocks,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[-2], (cfg.d_model, cfg.vocab_size), dtype=dt)
+    if cfg.encoder_layers:
+        enc_kind = SublayerKind("attn", False, False, True)
+        ekeys = jax.random.split(keys[-3], cfg.encoder_layers)
+        enc = [_init_sublayer(k, enc_kind, cfg) for k in ekeys]
+        params["encoder"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *enc)
+        params["enc_norm"] = {"scale": jnp.ones((cfg.d_model,), F32)}
+        # decoder gets a cross-attn sublayer at every layer
+        ckeys = jax.random.split(keys[-4], cfg.num_layers)
+        cross = [{"ln_cross": {"scale": jnp.ones((cfg.d_model,), F32)},
+                  "cross": L.init_attention(k, cfg)} for k in ckeys]
+        groups = []
+        for pos in range(period):
+            grp = [cross[r * period + pos] for r in range(n_rep)]
+            groups.append(jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *grp))
+        params["dec_cross"] = groups
+    return params
+
+
+# -----------------------------------------------------------------------------
+# sublayer application
+# -----------------------------------------------------------------------------
+
+def _apply_sublayer(x, p, kind: SublayerKind, cfg, *, cache=None, pos=None,
+                    memory=None, cross_extra=None, decode=False):
+    new_cache = {}
+    aux = jnp.zeros((), F32)
+    h = L.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+    if kind.mixer == "attn":
+        kv = cache.get("kv") if cache else None
+        y, new_kv = L.attention(p["attn"], h, cfg, causal=True,
+                                kv_cache=kv, pos=pos)
+        if new_kv is not None:
+            new_cache["kv"] = new_kv
+    else:
+        if decode:
+            y, new_ssm = S.ssm_step(p["ssm"], h, cfg, cache["ssm"])
+            new_cache["ssm"] = new_ssm
+        else:
+            y = S.ssm_train(p["ssm"], h, cfg)
+    x = x + y
+    cp = cross_extra if cross_extra is not None else p
+    if (kind.cross or cross_extra is not None) and memory is not None:
+        hc = L.rms_norm(x, cp["ln_cross"]["scale"], cfg.norm_eps)
+        yc, _ = L.attention(cp["cross"], hc, cfg, memory=memory)
+        x = x + yc
+    if kind.ffn:
+        h2 = L.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+        if kind.moe:
+            y2, aux = L.moe(p["moe"], h2, cfg)
+        else:
+            y2 = L.mlp(p["mlp"], h2, cfg)
+        x = x + y2
+    return x, new_cache, aux
+
+
+def _scan_blocks(x, blocks, cfg, *, kinds_period, cache=None, pos=None,
+                 memory=None, dec_cross=None, decode=False, remat=True):
+    """Scan the stacked period-groups; cache (if any) is scanned alongside."""
+
+    def body(carry, rep_inputs):
+        xc, aux_acc = carry
+        rep_params, rep_cache, rep_cross = rep_inputs
+        new_rep_cache = []
+        for i, kind in enumerate(kinds_period):
+            c = rep_cache[i] if rep_cache is not None else None
+            ce = rep_cross[i] if rep_cross is not None else None
+            xc, nc, aux = _apply_sublayer(
+                xc, rep_params[i], kind, cfg, cache=c, pos=pos,
+                memory=memory, cross_extra=ce, decode=decode)
+            new_rep_cache.append(nc)
+            aux_acc = aux_acc + aux
+        return (xc, aux_acc), new_rep_cache
+
+    if remat and not decode:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    n_rep = jax.tree_util.tree_leaves(blocks[0])[0].shape[0]
+    cache_in = cache if cache is not None else [None] * len(kinds_period)
+    xs = (blocks,
+          cache if cache is not None else None,
+          dec_cross if dec_cross is not None else None)
+
+    # lax.scan needs all xs to have a leading n_rep axis; replace None with
+    # dummy zero arrays so the structure is scannable.
+    def fix(v):
+        return v if v is not None else jnp.zeros((n_rep,), jnp.int8)
+    xs = tuple(fix(v) for v in xs)
+
+    def body_wrap(carry, triple):
+        rp, rc, rx = triple
+        rc = rc if cache is not None else None
+        rx = rx if dec_cross is not None else None
+        return body(carry, (rp, rc, rx))
+
+    (x, aux), new_cache = jax.lax.scan(body_wrap, (x, jnp.zeros((), F32)), xs)
+    return x, (new_cache if cache is not None else None), aux
+
+
+# -----------------------------------------------------------------------------
+# public model API
+# -----------------------------------------------------------------------------
+
+def _logits(params, x, cfg):
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("btd,dv->btv", x, head,
+                        preferred_element_type=x.dtype)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def _embed(params, tokens, cfg):
+    x = params["embed"][tokens]
+    return constrain(x.astype(L.dtype_of(cfg)), "batch", "seq", "d_model")
+
+
+def _encode_audio(params, frames, cfg):
+    """Encoder stack over precomputed frame embeddings (conv frontend stub)."""
+    enc_kind = SublayerKind("attn", False, False, True)
+
+    def body(x, rep):
+        h = L.rms_norm(x, rep["ln1"]["scale"], cfg.norm_eps)
+        y, _ = L.attention(rep["attn"], h, cfg, causal=False)
+        x = x + y
+        h2 = L.rms_norm(x, rep["ln2"]["scale"], cfg.norm_eps)
+        return x + L.mlp(rep["mlp"], h2, cfg), None
+
+    x, _ = jax.lax.scan(body, frames.astype(L.dtype_of(cfg)), params["encoder"])
+    return L.rms_norm(x, params["enc_norm"]["scale"], cfg.norm_eps)
+
+
+def _memory_for(params, cfg, extras):
+    if "memory" in extras:  # precomputed encoder output (decode serving path)
+        return extras["memory"].astype(L.dtype_of(cfg))
+    if cfg.family == "audio":
+        return _encode_audio(params, extras["frames"], cfg)
+    if cfg.family == "vlm":
+        return extras["images"].astype(L.dtype_of(cfg))
+    return None
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    def init(self, rng: jax.Array) -> dict:
+        return init_params(rng, self.cfg)
+
+    # ---- training ----
+    def forward(self, params, tokens, extras=None, remat=True):
+        cfg = self.cfg
+        kinds = layer_kinds(cfg)[: block_period(cfg)]
+        memory = _memory_for(params, cfg, extras or {})
+        x = _embed(params, tokens, cfg)
+        x, _, aux = _scan_blocks(
+            x, params["blocks"], cfg, kinds_period=kinds, memory=memory,
+            dec_cross=params.get("dec_cross"), remat=remat)
+        return _logits(params, x, cfg), aux
+
+    def loss(self, params, batch, remat=True):
+        logits, aux = self.forward(params, batch["tokens"],
+                                   {k: v for k, v in batch.items()
+                                    if k not in ("tokens", "labels")},
+                                   remat=remat)
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits.astype(F32), axis=-1)
+        gold = jnp.take_along_axis(logits.astype(F32), labels[..., None],
+                                   axis=-1)[..., 0]
+        nll = jnp.mean(lse - gold)
+        z_loss = 1e-4 * jnp.mean(jnp.square(lse))
+        return nll + z_loss + 0.01 * aux, {"nll": nll, "aux": aux}
+
+    # ---- serving ----
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        kinds = layer_kinds(cfg)
+        period = block_period(cfg)
+        n_rep = cfg.num_layers // period
+        dt = L.dtype_of(cfg)
+        per_pos = []
+        for pos in range(period):
+            kind = kinds[pos]
+            if kind.mixer == "attn":
+                kv = {"k": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dt),
+                      "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dt)}
+                entry = {"kv": kv}
+            else:
+                entry = {"ssm": S.init_ssm_cache(cfg, batch, dt)}
+            per_pos.append(jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (n_rep,) + x.shape), entry))
+        return {"layers": per_pos, "pos": jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params, tokens, extras=None):
+        """Teacher-forced pass returning last-position logits (the compile
+        target for prefill_* shapes; cache fill for production serving is
+        the decode path's job and is exercised in tests via decode_step)."""
+        logits, _ = self.forward(params, tokens, extras, remat=False)
+        return logits[:, -1]
+
+    def decode_step(self, params, token, cache, extras=None):
+        """token [B, 1] -> (logits [B, V], new cache). One KV/SSM-state update."""
+        cfg = self.cfg
+        kinds = layer_kinds(cfg)[: block_period(cfg)]
+        memory = _memory_for(params, cfg, extras or {})
+        pos = cache["pos"]
+        x = _embed(params, token, cfg)
+        x, new_layers, _ = _scan_blocks(
+            x, params["blocks"], cfg, kinds_period=kinds,
+            cache=cache["layers"], pos=pos, memory=memory,
+            dec_cross=params.get("dec_cross"), decode=True, remat=False)
+        logits = _logits(params, x, cfg)[:, 0]
+        return logits, {"layers": new_layers, "pos": pos + 1}
+
+
+def make_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

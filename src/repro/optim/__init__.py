@@ -1,0 +1,10 @@
+from repro.optim.optimizers import (  # noqa: F401
+    GradientTransform,
+    OptState,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    cosine_schedule,
+    constant_schedule,
+    global_norm,
+)

@@ -1,0 +1,110 @@
+"""Functional optimizers (optax-style, no external deps).
+
+Production notes:
+  * `m_dtype`/`v_dtype` let large models keep the first moment in bf16 —
+    this is what fits grok-1's optimizer state on a 16 GB/chip v5e pod
+    (DESIGN.md §6); the update math always runs in fp32.
+  * The update is pure and pjit-friendly: state is a pytree mirroring the
+    params, so any param sharding rule automatically shards the state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def constant_schedule(value: float) -> Schedule:
+    return lambda step: jnp.asarray(value, dtype=jnp.float32)
+
+
+def cosine_schedule(peak: float, warmup_steps: int, total_steps: int,
+                    floor: float = 0.0) -> Schedule:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / jnp.maximum(1.0, warmup_steps)
+        t = (step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientTransform:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], tuple[Any, OptState]]
+
+
+def adamw(
+    learning_rate: Schedule | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    m_dtype: jnp.dtype | None = None,
+    v_dtype: jnp.dtype | None = None,
+    max_grad_norm: float | None = None,
+) -> GradientTransform:
+    sched = learning_rate if callable(learning_rate) else constant_schedule(learning_rate)
+
+    def init(params):
+        mu = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=m_dtype or p.dtype), params)
+        nu = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=v_dtype or jnp.float32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+    def update(grads, state, params):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        lr = sched(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+            v32 = v.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+            u = (m32 / c1) / (jnp.sqrt(v32 / c2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        deltas = treedef.unflatten([o[0] for o in out])
+        mu = treedef.unflatten([o[1] for o in out])
+        nu = treedef.unflatten([o[2] for o in out])
+        return deltas, OptState(step=step, mu=mu, nu=nu)
+
+    return GradientTransform(init=init, update=update)
+
+
+def apply_updates(params: Any, deltas: Any) -> Any:
+    return jax.tree_util.tree_map(lambda p, d: p + d.astype(p.dtype), params, deltas)

@@ -1,0 +1,84 @@
+"""Train/eval step builders.
+
+Production details:
+  * microbatch gradient accumulation (lax.scan) with fp32 accumulators —
+    collectives for the gradient all-reduce happen ONCE per step, after
+    accumulation (collective deferral, DESIGN.md §6);
+  * optimizer is any repro.optim GradientTransform; its state pytree
+    mirrors params, so param sharding rules shard optimizer state (ZeRO);
+  * optional int8 gradient compression hook (distributed/compress.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+
+F32 = jnp.float32
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: optim.OptState
+    step: jax.Array
+
+
+def init_state(params, tx: optim.GradientTransform) -> TrainState:
+    return TrainState(params=params, opt_state=tx.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(model, tx: optim.GradientTransform, *,
+                    num_microbatches: int = 1,
+                    compress_grads: Optional[Callable] = None,
+                    remat: bool = True):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb, remat=remat)
+        return loss, metrics
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        params = state.params
+        if num_microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % num_microbatches == 0
+                return x.reshape(num_microbatches, b // num_microbatches, *x.shape[1:])
+            micro = jax.tree_util.tree_map(split, batch)
+            g0 = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, F32), params)
+
+            def body(acc, mb):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, gi: a + gi.astype(F32), acc, g)
+                return acc, (l, m)
+
+            grads, (losses, ms) = jax.lax.scan(body, g0, micro)
+            grads = jax.tree_util.tree_map(lambda g: g / num_microbatches, grads)
+            loss = jnp.mean(losses)
+            metrics = jax.tree_util.tree_map(jnp.mean, ms)
+        if compress_grads is not None:
+            grads = compress_grads(grads)
+        deltas, opt_state = tx.update(grads, state.opt_state, params)
+        params = optim.apply_updates(params, deltas)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = optim.global_norm(grads)
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return train_step
+
+
+def make_eval_step(model):
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch, remat=False)
+        return dict(metrics, loss=loss)
+    return eval_step

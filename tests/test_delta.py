@@ -1,0 +1,49 @@
+"""Delta codec: byte-identical roundtrip on arbitrary inputs (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import delta
+
+
+@given(st.binary(min_size=0, max_size=5000), st.binary(min_size=0, max_size=5000))
+@settings(max_examples=50, deadline=None)
+def test_roundtrip_arbitrary(target, base):
+    assert delta.decode(delta.encode(target, base), base) == target
+
+
+@given(st.binary(min_size=100, max_size=5000),
+       st.integers(min_value=0, max_value=99),
+       st.binary(min_size=0, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_roundtrip_edit(base, pos, insert)        :
+    target = base[:pos] + insert + base[pos + 3:]
+    assert delta.decode(delta.encode(target, base), base) == target
+
+
+def test_similar_compresses_well():
+    rng = np.random.Generator(np.random.PCG64(10))
+    base = rng.integers(0, 256, size=100_000, dtype=np.uint8).tobytes()
+    target = base[:40_000] + b"PATCH" + base[40_000:]
+    d = delta.encode(target, base)
+    assert len(d) < 200
+
+def test_identical_is_tiny():
+    rng = np.random.Generator(np.random.PCG64(11))
+    base = rng.integers(0, 256, size=50_000, dtype=np.uint8).tobytes()
+    assert len(delta.encode(base, base)) < 32
+
+
+def test_dissimilar_no_blowup():
+    rng = np.random.Generator(np.random.PCG64(12))
+    base = rng.integers(0, 256, size=10_000, dtype=np.uint8).tobytes()
+    target = rng.integers(0, 256, size=10_000, dtype=np.uint8).tobytes()
+    assert len(delta.encode(target, base)) <= len(target) + 16
+
+
+def test_varint():
+    out = bytearray()
+    for v in [0, 1, 127, 128, 300, 2**21, 2**40]:
+        out.clear()
+        delta._write_varint(out, v)
+        got, pos = delta._read_varint(bytes(out), 0)
+        assert got == v and pos == len(out)

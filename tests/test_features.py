@@ -1,0 +1,115 @@
+"""Initial feature extraction (Algorithm 1): determinism, robustness,
+np/jnp path agreement."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import features, hashing
+
+
+def _rand_chunks(seed, n=8, lo=2000, hi=30000):
+    rng = np.random.Generator(np.random.PCG64(seed))
+    return [rng.integers(0, 256, size=int(s), dtype=np.uint8).tobytes()
+            for s in rng.integers(lo, hi, size=n)]
+
+
+def test_deterministic_and_normalized():
+    chunks = _rand_chunks(1)
+    ext = features.FeatureExtractor(use_kernel=False)
+    f1, f2 = ext(chunks), ext(chunks)
+    assert np.array_equal(f1, f2)
+    np.testing.assert_allclose(np.linalg.norm(f1, axis=1), 1.0, rtol=1e-5)
+
+
+def test_kernel_path_matches_jnp():
+    chunks = _rand_chunks(2)
+    cfg = features.FeatureConfig()
+    fk = features.FeatureExtractor(cfg, use_kernel=True)(chunks)
+    fj = features.FeatureExtractor(cfg, use_kernel=False)(chunks)
+    np.testing.assert_allclose(fk, fj, atol=1e-5)
+
+
+def test_maxgear_insert_robustness():
+    """The paper's core motivation: features must survive shift edits."""
+    rng = np.random.Generator(np.random.PCG64(3))
+    base = rng.integers(0, 256, size=16384, dtype=np.uint8)
+    ins = np.concatenate([base[:4000],
+                          rng.integers(0, 256, size=5, dtype=np.uint8),
+                          base[4000:]])
+    rnd = rng.integers(0, 256, size=16384, dtype=np.uint8)
+    ext = features.FeatureExtractor(use_kernel=False)
+    f = ext([base.tobytes(), ins.tobytes(), rnd.tobytes()])
+    assert f[0] @ f[1] > 0.95          # 5-byte insert barely moves the feature
+    assert abs(f[0] @ f[2]) < 0.35     # random content is far
+
+
+def test_poly_ablation_is_fragile():
+    """Documents WHY the LSH choice matters (DESIGN.md §1 adaptation)."""
+    rng = np.random.Generator(np.random.PCG64(4))
+    base = rng.integers(0, 256, size=16384, dtype=np.uint8)
+    ins = np.concatenate([base[:4000],
+                          rng.integers(0, 256, size=5, dtype=np.uint8),
+                          base[4000:]])
+    poly = features.FeatureExtractor(
+        features.FeatureConfig(lsh="poly"), use_kernel=False)
+    f = poly([base.tobytes(), ins.tobytes()])
+    maxg = features.FeatureExtractor(use_kernel=False)
+    g = maxg([base.tobytes(), ins.tobytes()])
+    assert g[0] @ g[1] > f[0] @ f[1] + 0.3
+
+
+def test_chunk_size_sensitivity():
+    """Paper §3 (Chunk_H): equal-split content features degrade under big
+    truncations — the motivation for the chunk-context model — but must
+    survive small tail deletions (sub-chunk windows barely move)."""
+    rng = np.random.Generator(np.random.PCG64(5))
+    base = rng.integers(0, 256, size=16384, dtype=np.uint8)
+    small_cut = base[:16200]   # ~1% tail deletion
+    big_cut = base[:12000]     # ~27% tail deletion
+    ext = features.FeatureExtractor(use_kernel=False)
+    f = ext([base.tobytes(), small_cut.tobytes(), big_cut.tobytes()])
+    assert f[0] @ f[1] > 0.75          # robust to small size change
+    assert f[0] @ f[1] > f[0] @ f[2]   # big truncation is the hard case
+
+
+def test_jnp_maxgear_matches_np():
+    chunks = _rand_chunks(6, n=5)
+    k = 32
+    sub_np = features.batch_subchunk_lsh_np(chunks, features.FeatureConfig(k=k))
+    lmax = max(len(c) for c in chunks)
+    gear = np.zeros((len(chunks), lmax), np.uint32)
+    lens = np.array([len(c) for c in chunks], np.int32)
+    for i, c in enumerate(chunks):
+        gear[i, :len(c)] = hashing.gear_hashes_np(np.frombuffer(c, np.uint8))
+    sub_j = np.asarray(features.batch_subchunk_maxgear_j(
+        jnp.asarray(gear), jnp.asarray(lens), k))
+    assert np.array_equal(sub_np, sub_j)
+
+
+def test_jnp_poly_matches_np():
+    chunks = _rand_chunks(7, n=5)
+    k = 16
+    cfg = features.FeatureConfig(k=k, lsh="poly")
+    sub_np = features.batch_subchunk_lsh_np(chunks, cfg)
+    lmax = max(len(c) for c in chunks)
+    padded = np.zeros((len(chunks), lmax), np.uint8)
+    lens = np.array([len(c) for c in chunks], np.int32)
+    for i, c in enumerate(chunks):
+        padded[i, :len(c)] = np.frombuffer(c, np.uint8)
+    sub_j = np.asarray(features.batch_subchunk_poly_j(
+        jnp.asarray(padded), jnp.asarray(lens), k))
+    assert np.array_equal(sub_np, sub_j)
+
+
+def test_stream_hash_reuse_identical():
+    """Features computed from the chunker's stream scan == per-chunk scan."""
+    rng = np.random.Generator(np.random.PCG64(8))
+    stream = rng.integers(0, 256, size=100_000, dtype=np.uint8)
+    from repro.core import chunking
+    h = hashing.gear_hashes_np(stream)
+    cks = chunking.chunk_stream(stream.tobytes(), chunking.ChunkerConfig(avg_size=8192), hashes=h)
+    ext = features.FeatureExtractor(use_kernel=False)
+    offs = np.asarray([c.offset for c in cks])
+    f1 = ext([c.data for c in cks], h, offs)
+    f2 = ext([c.data for c in cks])
+    np.testing.assert_allclose(f1, f2, atol=1e-6)

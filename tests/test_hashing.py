@@ -1,0 +1,70 @@
+"""Hashing substrate: parallel formulations must match serial ground truth."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing
+
+
+@given(st.binary(min_size=1, max_size=2000))
+@settings(max_examples=25, deadline=None)
+def test_gear_parallel_matches_serial(data):
+    buf = np.frombuffer(data, dtype=np.uint8)
+    assert np.array_equal(hashing.gear_hashes_np(buf),
+                          hashing.gear_hashes_serial_np(buf))
+
+
+@pytest.mark.parametrize("n", [1, 31, 32, 33, 1000, 8192, 10000])
+def test_gear_jnp_matches_np(n):
+    rng = np.random.Generator(np.random.PCG64(n))
+    data = rng.integers(0, 256, size=n, dtype=np.uint8)
+    assert np.array_equal(np.asarray(hashing.gear_hashes_j(jnp.asarray(data))),
+                          hashing.gear_hashes_np(data))
+
+
+@pytest.mark.parametrize("window", [8, 48])
+def test_rabin_jnp_matches_np(window):
+    rng = np.random.Generator(np.random.PCG64(5))
+    data = rng.integers(0, 256, size=3000, dtype=np.uint8)
+    assert np.array_equal(
+        np.asarray(hashing.rabin_fps_j(jnp.asarray(data), window)),
+        hashing.rabin_fps_np(data, window))
+
+
+def test_rabin_window_locality():
+    """A single-byte edit only perturbs fingerprints within `window` of it."""
+    rng = np.random.Generator(np.random.PCG64(6))
+    data = rng.integers(0, 256, size=2000, dtype=np.uint8)
+    edit = data.copy()
+    edit[1000] ^= 0xFF
+    a = hashing.rabin_fps_np(data)
+    b = hashing.rabin_fps_np(edit)
+    diff = np.flatnonzero(a != b)
+    assert diff.min() >= 1000
+    assert diff.max() < 1000 + hashing.RABIN_WINDOW
+
+
+@given(st.binary(min_size=4, max_size=500),
+       st.integers(min_value=1, max_value=6))
+@settings(max_examples=25, deadline=None)
+def test_segment_poly_matches_direct(data, nseg):
+    buf = np.frombuffer(data, dtype=np.uint8)
+    bounds = np.linspace(0, len(buf), nseg + 1).astype(np.int64)
+    seg = hashing.segment_poly_hashes_np(buf, bounds)
+    direct = np.array([hashing.poly_hash_np(buf[a:b])
+                       for a, b in zip(bounds[:-1], bounds[1:])], dtype=np.uint32)
+    assert np.array_equal(seg, direct)
+
+
+def test_modinv():
+    assert (int(hashing.POLY_P) * int(hashing.POLY_P_INV)) % (1 << 32) == 1
+
+
+def test_multiply_shift_unit_range():
+    x = jnp.arange(100, dtype=jnp.uint32) * jnp.uint32(2654435761)
+    a, b = hashing.multiply_shift_params(16)
+    v = np.asarray(hashing.multiply_shift_unit_j(x, jnp.asarray(a), jnp.asarray(b)))
+    assert v.shape == (100, 16)
+    assert (v >= -1).all() and (v < 1).all()
+    assert abs(v.mean()) < 0.1  # roughly centred

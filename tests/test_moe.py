@@ -1,0 +1,74 @@
+"""MoE dispatch invariants (hypothesis): with sufficient capacity and
+identity experts, combine(dispatch(x)) reproduces x; virtual-expert
+splitting is exact; capacity drops are monotone."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import layers as L
+
+
+@given(st.integers(2, 64), st.integers(2, 8), st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_dispatch_combine_identity(t, e, k):
+    """Full capacity + unit gates -> combine inverts dispatch exactly."""
+    k = min(k, e)
+    rng = np.random.default_rng(t * e + k)
+    xt = jnp.asarray(rng.standard_normal((t, 16)), jnp.float32)
+    router = jnp.asarray(rng.standard_normal((16, e)), jnp.float32)
+    cap = t * k  # no drops possible
+    buf, slot, stt, gf, keep, probs, expert = L._route_and_dispatch(
+        xt, router, e, k, cap)
+    assert bool(keep.all())
+    # identity experts: y == dispatched input
+    y = buf.reshape(e * cap, 16)
+    out = L._combine(y, slot, stt, gf, keep, t, 16)
+    # sum_j gate_j * x == x (gates renormalized to 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(xt),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_virtual_expert_split_exact():
+    """moe_ffn_shards=2 computes the SAME function as unsplit experts."""
+    import dataclasses
+    # ample capacity so no token is dropped in one half but kept in the other
+    cfg = dataclasses.replace(get_config("grok-1-314b").reduced(),
+                              capacity_factor=8.0)  # gelu experts, shards=2
+    cfg1 = dataclasses.replace(cfg, moe_ffn_shards=1)
+    rng = jax.random.PRNGKey(0)
+    p2 = L.init_moe(rng, cfg)                       # [E*2, D, F/2]
+    ev, d, fv = p2["e_in"].shape
+    e = ev // 2
+    # fold virtual pairs back into full-width experts
+    p1 = {
+        "router": p2["router"],
+        "e_in": p2["e_in"].reshape(e, 2, d, fv).transpose(0, 2, 1, 3).reshape(e, d, 2 * fv),
+        "e_down": p2["e_down"].reshape(e, 2, fv, d).reshape(e, 2 * fv, d),
+    }
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, d), jnp.float32)
+    y2, aux2 = L.moe(p2, x, cfg)
+    y1, aux1 = L.moe(p1, x, cfg1)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y1),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(float(aux2), float(aux1), rtol=1e-4)
+
+
+def test_capacity_drop_monotone():
+    """Lower capacity factor -> no more tokens processed than higher."""
+    import dataclasses
+    cfg = get_config("qwen3-moe-30b-a3b").reduced()
+    params = L.init_moe(jax.random.PRNGKey(2), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 32, cfg.d_model), jnp.float32)
+    norms = []
+    for cf in (0.25, 1.0, 4.0):
+        c = dataclasses.replace(cfg, capacity_factor=cf)
+        y, _ = L.moe(params, x, c)
+        norms.append(float(jnp.linalg.norm(y)))
+    assert norms[0] <= norms[1] + 1e-3
+    # full capacity == huge capacity (nothing left to drop)
+    y_full, _ = L.moe(params, x, dataclasses.replace(cfg, capacity_factor=64.0))
+    y_big, _ = L.moe(params, x, dataclasses.replace(cfg, capacity_factor=128.0))
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_big), atol=1e-6)

@@ -1,0 +1,79 @@
+"""End-to-end dedup + delta pipeline: DCR ordering, restore fidelity,
+paper-claim direction (CARD finds more redundancy than content-only)."""
+import numpy as np
+import pytest
+
+from repro.core import chunking, context_model, features, pipeline
+from repro.data import workloads
+
+CCFG = chunking.ChunkerConfig(avg_size=8192)
+WCFG = workloads.WorkloadConfig(base_size=1 << 20, versions=4)
+
+
+def _card(**kw):
+    return pipeline.CARDDetector(
+        feat_cfg=features.FeatureConfig(k=32, m=64, n=2),
+        model_cfg=context_model.ContextModelConfig(m=64, d=50, steps=150),
+        use_kernel=False, **kw)
+
+
+@pytest.fixture(scope="module")
+def versions():
+    return {name: workloads.make_workload(name, WCFG)
+            for name in ["kernel", "sql_dump", "vmdk"]}
+
+
+def test_delta_improves_over_dedup_only(versions):
+    for name, vs in versions.items():
+        plain = pipeline.run_workload(pipeline.NullDetector(), vs, CCFG)
+        card = pipeline.run_workload(_card(), vs, CCFG)
+        assert card.dcr > plain.dcr, name
+        assert card.delta_chunks > 0, name
+
+
+def test_card_beats_or_matches_finesse(versions):
+    for name, vs in versions.items():
+        fin = pipeline.run_workload(pipeline.finesse_detector(), vs, CCFG)
+        card = pipeline.run_workload(_card(), vs, CCFG)
+        assert card.dcr >= 0.95 * fin.dcr, (name, card.dcr, fin.dcr)
+
+
+def test_restore_byte_identical(versions):
+    vs = versions["kernel"]
+    store = pipeline.DedupStore(_card(), CCFG)
+    store.fit(vs[:1])
+    for v in vs:
+        store.ingest(v)
+    for i, v in enumerate(vs):
+        assert store.restore(i) == v
+
+
+def test_restore_byte_identical_baselines(versions):
+    vs = versions["sql_dump"][:3]
+    for det in [pipeline.finesse_detector(), pipeline.ntransform_detector()]:
+        store = pipeline.DedupStore(det, CCFG)
+        store.fit(vs[:1])
+        for v in vs:
+            store.ingest(v)
+        for i, v in enumerate(vs):
+            assert store.restore(i) == v
+
+
+def test_exact_dup_detection(versions):
+    """Ingesting the same stream twice stores (almost) nothing new."""
+    v = versions["vmdk"][0]
+    store = pipeline.DedupStore(pipeline.NullDetector(), CCFG)
+    store.ingest(v)
+    before = store.stats.bytes_stored
+    store.ingest(v)
+    assert store.stats.bytes_stored == before
+    assert store.restore(1) == v
+
+
+def test_banded_lsh_agrees_with_exact(versions):
+    vs = versions["sql_dump"][:3]
+    exact = pipeline.run_workload(_card(), vs, CCFG)
+    banded = pipeline.run_workload(_card(use_lsh_bands=True), vs, CCFG)
+    # banding is approximate but should find most of what exact finds
+    assert banded.delta_chunks >= 0.5 * exact.delta_chunks
+    assert banded.dcr >= 0.9 * exact.dcr

@@ -1,0 +1,53 @@
+"""GPipe pipeline parallelism: pipelined == sequential oracle, grads flow."""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+
+def _run(script):
+    env = dict(os.environ, PYTHONPATH="src")
+    p = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env=env, cwd=Path.cwd(), timeout=540)
+    assert p.returncode == 0, p.stderr[-3000:]
+    return p.stdout
+
+
+def test_pipeline_matches_sequential():
+    out = _run(textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.pipeline import pipeline_apply, reference_apply
+
+        mesh = jax.make_mesh((4,), ("pod",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        rng = jax.random.PRNGKey(0)
+        S, D = 4, 16
+        params = {"w": jax.random.normal(rng, (S, D, D)) * 0.3,
+                  "b": jax.random.normal(jax.random.PRNGKey(1), (S, D)) * 0.1}
+
+        def stage(p, x):
+            return jnp.tanh(x @ p["w"] + p["b"])
+
+        x = jax.random.normal(jax.random.PRNGKey(2), (8, D))
+        with mesh:
+            y = pipeline_apply(stage, params, x, mesh=mesh, axis="pod",
+                               num_microbatches=4)
+        want = reference_apply(stage, params, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+        # gradients flow through the ppermute chain
+        def loss(p):
+            with mesh:
+                return jnp.sum(pipeline_apply(stage, p, x, mesh=mesh,
+                                              axis="pod") ** 2)
+        g = jax.grad(loss)(params)
+        gw = np.asarray(g["w"])
+        assert np.isfinite(gw).all()
+        assert (np.abs(gw).sum(axis=(1, 2)) > 0).all()  # every stage gets grad
+        print("PIPELINE_OK")
+    """))
+    assert "PIPELINE_OK" in out
