@@ -1,0 +1,21 @@
+# Developer/CI entry points. Tier-1 verify is the `test` target
+# (ROADMAP.md); `ci` = install dev deps + tier-1.
+
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: dev-deps test ci bench quickstart
+
+dev-deps:
+	$(PYTHON) -m pip install -r requirements-dev.txt
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+ci: dev-deps test
+
+bench:
+	$(PYTHON) -m benchmarks.run --quick
+
+quickstart:
+	$(PYTHON) examples/quickstart.py

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import baselines, chunking, context_model, features, pipeline
+from repro import api
 from repro.data import workloads
 
 WORKLOADS = ("sql_dump", "vmdk", "kernel")
@@ -22,33 +22,37 @@ def make_versions(name: str, base_size: int = 6 << 20, versions: int = 4):
         name, workloads.WorkloadConfig(base_size=base_size, versions=versions))
 
 
+def detector_config(kind: str, dim: int = 50, threshold: float = 0.3,
+                    avg_size: int = 8192) -> api.DedupConfig:
+    """Declarative pipeline config for every benchmark cell; `card-poly`
+    is the paper-literal exact-hash sub-chunk LSH ablation."""
+    if kind in ("card", "card-poly"):
+        feat = {"k": 32, "m": 64, "n": 2}
+        if kind == "card-poly":
+            feat["lsh"] = "poly"
+        d = {"detector": "card",
+             "detector_args": {"feat": feat,
+                               "model": {"m": 64, "d": dim, "steps": 150},
+                               "threshold": threshold, "use_kernel": False}}
+    else:
+        d = {"detector": kind}
+    d["chunker_args"] = {"avg_size": avg_size}
+    return api.DedupConfig.from_dict(d)
+
+
 def detector(kind: str, dim: int = 50, threshold: float = 0.3):
-    if kind == "card":
-        return pipeline.CARDDetector(
-            feat_cfg=features.FeatureConfig(k=32, m=64, n=2),
-            model_cfg=context_model.ContextModelConfig(m=64, d=dim, steps=150),
-            threshold=threshold, use_kernel=False)
-    if kind == "card-poly":  # ablation: paper-literal exact-hash sub-chunk LSH
-        return pipeline.CARDDetector(
-            feat_cfg=features.FeatureConfig(k=32, m=64, n=2, lsh="poly"),
-            model_cfg=context_model.ContextModelConfig(m=64, d=dim, steps=150),
-            threshold=threshold, use_kernel=False)
-    if kind == "finesse":
-        return pipeline.finesse_detector()
-    if kind == "n-transform":
-        return pipeline.ntransform_detector()
-    if kind == "dedup-only":
-        return pipeline.NullDetector()
-    raise KeyError(kind)
+    return api.build_detector(detector_config(kind, dim=dim, threshold=threshold))
 
 
 def run_cell(kind: str, versions, avg_size: int, dim: int = 50):
-    det = detector(kind, dim=dim)
-    cfg = chunking.ChunkerConfig(avg_size=avg_size)
+    cfg = detector_config(kind, dim=dim, avg_size=avg_size)
+    store = api.build_store(cfg)
     t0 = time.perf_counter()
-    stats = pipeline.run_workload(det, versions, cfg)
+    store.fit(list(versions[:1]))
+    for v in versions:
+        store.ingest(v)
     wall = time.perf_counter() - t0
-    return stats, wall
+    return store.stats, wall
 
 
 def emit(rows: list[dict], name: str) -> None:

@@ -1,13 +1,16 @@
 """End-to-end driver (the paper's scenario): a backup service ingesting
 nightly versions of three datasets, with CARD's context model trained on
-the first night, per-night stats, and full restore validation.
+the first night, a per-night IngestReport from each committed stream
+session, and full restore validation — optionally against the on-disk
+container backend.
 
-    PYTHONPATH=src python examples/dedup_backup_run.py [--size-mb 8] [--nights 5]
+    PYTHONPATH=src python examples/dedup_backup_run.py [--size-mb 8] \
+        [--nights 5] [--backend file --store-dir /tmp/containers]
 """
 import argparse
 import time
 
-from repro.core import CARDDetector, ChunkerConfig, DedupStore
+from repro import api
 from repro.data import make_workload, WorkloadConfig
 
 
@@ -16,33 +19,44 @@ def main():
     ap.add_argument("--size-mb", type=int, default=6)
     ap.add_argument("--nights", type=int, default=5)
     ap.add_argument("--avg-chunk", type=int, default=16384)
+    ap.add_argument("--backend", choices=("memory", "file"), default="memory")
+    ap.add_argument("--store-dir", default="/tmp/repro_containers")
     args = ap.parse_args()
 
     for wl in ("sql_dump", "vmdk", "kernel"):
         versions = make_workload(wl, WorkloadConfig(
             base_size=args.size_mb << 20, versions=args.nights))
-        store = DedupStore(CARDDetector(use_kernel=False),
-                           ChunkerConfig(avg_size=args.avg_chunk))
+        cfg = api.DedupConfig.from_dict({
+            "detector": "card",
+            "detector_args": {"use_kernel": False},
+            "chunker_args": {"avg_size": args.avg_chunk},
+            "backend": args.backend,
+            "backend_args": ({"path": f"{args.store_dir}/{wl}"}
+                             if args.backend == "file" else {}),
+        })
+        store = api.build_store(cfg)
         t0 = time.time()
         store.fit(versions[:1])           # offline context-model training
         fit_s = time.time() - t0
         print(f"\n=== {wl}: {args.nights} nights x {args.size_mb} MiB "
-              f"(model fit {fit_s:.1f}s) ===")
-        prev_stored = 0
+              f"({args.backend} backend, model fit {fit_s:.1f}s) ===")
+        handles = []
         for night, v in enumerate(versions):
-            store.ingest(v)
-            s = store.stats
-            stored_tonight = s.bytes_stored - prev_stored
-            prev_stored = s.bytes_stored
-            print(f"night {night}: ingested {len(v) >> 20} MiB, "
-                  f"stored {stored_tonight >> 10} KiB new, "
-                  f"cumulative DCR {s.dcr:.2f} "
-                  f"(dup {s.dup_chunks} / delta {s.delta_chunks} / raw {s.raw_chunks})")
-        for night in range(args.nights):
-            assert store.restore(night) == versions[night]
+            session = store.open_stream()
+            session.write(v)
+            rep = session.commit()
+            handles.append(rep.handle)
+            print(f"night {night}: ingested {rep.bytes_in >> 20} MiB, "
+                  f"stored {rep.bytes_stored >> 10} KiB new, "
+                  f"night DCR {rep.dcr:.2f} / cumulative {store.stats.dcr:.2f} "
+                  f"(dup {rep.dup_chunks} / delta {rep.delta_chunks} / "
+                  f"raw {rep.raw_chunks})")
+        for night, h in enumerate(handles):
+            assert store.restore(h) == versions[night]
         print(f"restore: all {args.nights} nights byte-exact | "
               f"total detect {store.stats.detect_seconds:.2f}s "
               f"delta-io {store.stats.delta_seconds:.2f}s")
+        store.close()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,61 @@
+"""repro.api — the layered public surface of the dedup/delta system.
+
+Layers (DESIGN.md §2), each depending only on the ones above it:
+
+  types        DetectBatch / DetectResult / IngestReport / StoreStats
+  detect       staged detector protocol (extract -> score -> observe),
+               legacy-``detect`` compatibility shim
+  containers   ContainerBackend protocol; memory + file backends
+  store        DedupStore with transactional StreamSession ingestion
+  registry     name -> factory tables for detectors/indexes/chunkers/backends
+  config       DedupConfig.from_dict(...) -> build_store(...)
+
+Quick start:
+
+    from repro import api
+    store = api.build_store(api.DedupConfig.from_dict({"detector": "card"}))
+    store.fit([first_version])
+    with store.open_stream() as s:
+        s.write(first_version)
+    report = store.reports[-1]          # or: s = store.open_stream();
+    restored = store.restore(report.handle)
+"""
+from repro.api.types import (  # noqa: F401
+    DetectBatch,
+    DetectResult,
+    IngestReport,
+    StoreStats,
+)
+from repro.api.detect import (  # noqa: F401
+    LegacyDetectMixin,
+    StagedDetector,
+    is_staged,
+    run_detect,
+)
+from repro.api.containers import (  # noqa: F401
+    ContainerBackend,
+    FileBackend,
+    InMemoryBackend,
+)
+from repro.api.store import DedupStore, StreamSession, chunk_with  # noqa: F401
+from repro.api.registry import (  # noqa: F401
+    available_backends,
+    available_chunkers,
+    available_detectors,
+    available_indexes,
+    get_backend,
+    get_chunker,
+    get_detector,
+    get_index,
+    register_backend,
+    register_chunker,
+    register_detector,
+    register_index,
+)
+from repro.api.config import (  # noqa: F401
+    DedupConfig,
+    build_backend,
+    build_chunker,
+    build_detector,
+    build_store,
+)

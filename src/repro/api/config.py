@@ -1,0 +1,76 @@
+"""Declarative pipeline construction: ``DedupConfig.from_dict`` -> ``build_store``.
+
+One construction path for everything (benchmarks, examples, the
+checkpoint store, services): a plain-dict config names each component by
+its registry key plus keyword arguments for its factory:
+
+    cfg = DedupConfig.from_dict({
+        "detector": "card",
+        "detector_args": {"feat": {"k": 32, "m": 64, "n": 2},
+                          "model": {"d": 50, "steps": 150},
+                          "index": "banded-lsh",       # vs "exact"
+                          "use_kernel": False},
+        "chunker": "fastcdc",
+        "chunker_args": {"avg_size": 8192},
+        "backend": "file",
+        "backend_args": {"path": "/data/containers"},
+    })
+    store = build_store(cfg)
+
+Configs are JSON-serializable (``to_dict`` round-trips) so a service can
+ship them over the wire or pin them in a manifest next to the containers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.api import registry
+from repro.api.store import DedupStore
+
+_KNOWN_KEYS = {"detector", "detector_args", "chunker", "chunker_args",
+               "backend", "backend_args"}
+
+
+@dataclasses.dataclass
+class DedupConfig:
+    detector: str = "card"
+    detector_args: dict[str, Any] = dataclasses.field(default_factory=dict)
+    chunker: str = "fastcdc"
+    chunker_args: dict[str, Any] = dataclasses.field(default_factory=dict)
+    backend: str = "memory"
+    backend_args: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "DedupConfig":
+        unknown = set(d) - _KNOWN_KEYS
+        if unknown:
+            raise ValueError(f"unknown DedupConfig keys {sorted(unknown)}; "
+                             f"known: {sorted(_KNOWN_KEYS)}")
+        cfg = cls(**{k: dict(v) if isinstance(v, dict) else v
+                     for k, v in d.items()})
+        for name in ("detector", "chunker", "backend"):
+            if not isinstance(getattr(cfg, name), str):
+                raise TypeError(f"{name} must be a registry name (str)")
+        return cfg
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def build_detector(cfg: DedupConfig) -> Any:
+    return registry.get_detector(cfg.detector)(**cfg.detector_args)
+
+
+def build_chunker(cfg: DedupConfig) -> Any:
+    return registry.get_chunker(cfg.chunker)(**cfg.chunker_args)
+
+
+def build_backend(cfg: DedupConfig) -> Any:
+    return registry.get_backend(cfg.backend)(**cfg.backend_args)
+
+
+def build_store(cfg: DedupConfig) -> DedupStore:
+    """Resolve every component through the registry and assemble the store."""
+    return DedupStore(build_detector(cfg), build_chunker(cfg),
+                      backend=build_backend(cfg))

@@ -1,0 +1,270 @@
+"""Pluggable container backends (DESIGN.md §2.3).
+
+A ``ContainerBackend`` owns the three persistent artifacts of the store:
+chunk payloads (raw bytes or a delta patch + base reference), and stream
+recipes (the ordered chunk-id list that reconstructs a stream). All store
+*policy* — exact dedup, resemblance detection, delta-vs-raw decision,
+accounting — stays above the backend in ``repro.api.store``; backends only
+move bytes.
+
+    InMemoryBackend   dict-based, keeps materialized bytes per chunk (the
+                      v0 DedupStore behaviour: O(1) base lookup during
+                      delta encoding at the cost of RAM);
+    FileBackend       append-only chunk log + recipe journal on disk.
+                      Stores what is *logically* stored (patch bytes for
+                      delta chunks), materializes on read by resolving the
+                      base chain, and can be reopened on an existing
+                      directory for restore (byte-identical; tested).
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+from pathlib import Path
+from typing import Protocol, Sequence, runtime_checkable
+
+from repro.api.registry import register_backend
+from repro.core import delta
+
+_REC_HEADER = struct.Struct("<BqqQ")  # kind, cid, base, payload length
+_KIND_RAW = 0
+_KIND_DELTA = 1
+
+
+@runtime_checkable
+class ContainerBackend(Protocol):
+    """Byte storage behind the dedup store; see module docstring."""
+
+    def put_raw(self, cid: int, data: bytes) -> None: ...
+
+    def put_delta(self, cid: int, base: int, patch: bytes,
+                  data: bytes | None = None) -> None:
+        """Store chunk `cid` as a patch against `base`. `data` is the
+        already-materialized raw bytes — backends MAY cache it but must
+        not count on it (restore-after-reopen has only the patch)."""
+        ...
+
+    def get(self, cid: int) -> bytes:
+        """Materialized raw bytes of a chunk (delta chains resolved)."""
+        ...
+
+    def contains(self, cid: int) -> bool: ...
+
+    def max_chunk_id(self) -> int:
+        """Largest chunk id ever stored, -1 when empty — a store opened on
+        an existing backend seeds its id counter past this so new chunks
+        never collide with (and silently shadow) persisted ones."""
+        ...
+
+    def add_recipe(self, chunk_ids: Sequence[int]) -> int:
+        """Persist a stream recipe; returns the stream handle."""
+        ...
+
+    def recipe(self, handle: int) -> list[int]: ...
+
+    def num_streams(self) -> int: ...
+
+    def flush(self) -> None: ...
+
+    def close(self) -> None: ...
+
+
+@register_backend("memory")
+class InMemoryBackend:
+    """Everything in dicts; materialized bytes kept for every chunk."""
+
+    name = "memory"
+
+    def __init__(self) -> None:
+        self._kind: dict[int, tuple] = {}   # cid -> (RAW,) | (DELTA, base, patch)
+        self._data: dict[int, bytes] = {}   # cid -> materialized bytes
+        self._recipes: list[list[int]] = []
+
+    def put_raw(self, cid: int, data: bytes) -> None:
+        self._kind[cid] = (_KIND_RAW,)
+        self._data[cid] = data
+
+    def put_delta(self, cid: int, base: int, patch: bytes,
+                  data: bytes | None = None) -> None:
+        self._kind[cid] = (_KIND_DELTA, base, patch)
+        if data is None:
+            data = delta.decode(patch, self.get(base))
+        self._data[cid] = data
+
+    def get(self, cid: int) -> bytes:
+        return self._data[cid]
+
+    def contains(self, cid: int) -> bool:
+        return cid in self._kind
+
+    def max_chunk_id(self) -> int:
+        return max(self._kind, default=-1)
+
+    def add_recipe(self, chunk_ids: Sequence[int]) -> int:
+        self._recipes.append([int(c) for c in chunk_ids])
+        return len(self._recipes) - 1
+
+    def recipe(self, handle: int) -> list[int]:
+        return self._recipes[handle]
+
+    def num_streams(self) -> int:
+        return len(self._recipes)
+
+    def flush(self) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+@register_backend("file")
+class FileBackend:
+    """Append-only on-disk containers.
+
+    Layout under `path`:
+        chunks.log     [header cid base len][payload] records, appended
+        recipes.jsonl  one JSON array of chunk ids per committed stream
+
+    An index {cid -> (kind, base, offset, length)} is rebuilt by scanning
+    the log on open, so a fresh FileBackend on an existing directory can
+    serve restores immediately. Materialized chunks are cached in memory
+    (same RAM/speed trade as InMemoryBackend once warm); the cache fills
+    lazily on reopen.
+    """
+
+    name = "file"
+
+    def __init__(self, path: str | Path) -> None:
+        self.path = Path(path)
+        self.path.mkdir(parents=True, exist_ok=True)
+        self._log_path = self.path / "chunks.log"
+        self._recipes_path = self.path / "recipes.jsonl"
+        self._index: dict[int, tuple[int, int, int, int]] = {}
+        self._cache: dict[int, bytes] = {}
+        self._recipes: list[list[int]] = []
+        self._scan()
+        self._log = open(self._log_path, "ab")
+        self._recipes_f = open(self._recipes_path, "a")
+        self._log_read = open(self._log_path, "rb")
+        self._log_dirty = False
+
+    def _scan(self) -> None:
+        # A kill -9 mid-ingest can tear the tail of either file; the torn
+        # record belongs to a commit that never produced an IngestReport,
+        # so dropping it loses nothing — but indexing it would serve short
+        # reads (silent corruption) and a torn recipe line would make the
+        # directory unopenable.
+        if self._log_path.exists():
+            size = self._log_path.stat().st_size
+            good_end = 0
+            with open(self._log_path, "rb") as f:
+                while True:
+                    header = f.read(_REC_HEADER.size)
+                    if len(header) < _REC_HEADER.size:
+                        break
+                    kind, cid, base, length = _REC_HEADER.unpack(header)
+                    if f.tell() + length > size:      # torn payload tail
+                        break
+                    self._index[cid] = (kind, base, f.tell(), length)
+                    f.seek(length, 1)
+                    good_end = f.tell()
+            if good_end < size:   # drop the torn bytes so later appends
+                os.truncate(self._log_path, good_end)   # start on a boundary
+        if self._recipes_path.exists():
+            good_end = 0
+            torn = False
+            with open(self._recipes_path, "rb") as f:
+                for line in f:
+                    # an unterminated final line is torn even when it
+                    # parses — the next append would merge onto it
+                    if not line.endswith(b"\n"):
+                        torn = True
+                        break
+                    if line.strip():
+                        try:
+                            recipe = json.loads(line)
+                        except json.JSONDecodeError:  # torn recipe tail
+                            torn = True
+                            break
+                        self._recipes.append(recipe)
+                    good_end += len(line)
+            if torn:
+                os.truncate(self._recipes_path, good_end)
+
+    def _append(self, kind: int, cid: int, base: int, payload: bytes) -> None:
+        self._log.write(_REC_HEADER.pack(kind, cid, base, len(payload)))
+        offset = self._log.tell()
+        self._log.write(payload)
+        self._log_dirty = True
+        self._index[cid] = (kind, base, offset, len(payload))
+
+    def put_raw(self, cid: int, data: bytes) -> None:
+        self._append(_KIND_RAW, cid, -1, data)
+        self._cache[cid] = data
+
+    def put_delta(self, cid: int, base: int, patch: bytes,
+                  data: bytes | None = None) -> None:
+        self._append(_KIND_DELTA, cid, base, patch)
+        if data is not None:
+            self._cache[cid] = data
+
+    def _read_payload(self, offset: int, length: int) -> bytes:
+        if self._log_dirty:
+            self._log.flush()
+            self._log_dirty = False
+        self._log_read.seek(offset)
+        return self._log_read.read(length)
+
+    def get(self, cid: int) -> bytes:
+        data = self._cache.get(cid)
+        if data is not None:
+            return data
+        # walk the base chain down to a raw/cached ancestor, then apply
+        # patches back up (iterative: delta chains can outgrow recursion)
+        chain: list[tuple[int, bytes]] = []
+        cur = cid
+        while True:
+            data = self._cache.get(cur)
+            if data is not None:
+                break
+            kind, base, offset, length = self._index[cur]
+            payload = self._read_payload(offset, length)
+            if kind == _KIND_RAW:
+                data = payload
+                self._cache[cur] = data
+                break
+            chain.append((cur, payload))
+            cur = base
+        for c, patch in reversed(chain):
+            data = delta.decode(patch, data)
+            self._cache[c] = data
+        return data
+
+    def contains(self, cid: int) -> bool:
+        return cid in self._index
+
+    def max_chunk_id(self) -> int:
+        return max(self._index, default=-1)
+
+    def add_recipe(self, chunk_ids: Sequence[int]) -> int:
+        recipe = [int(c) for c in chunk_ids]
+        self._recipes.append(recipe)
+        self._recipes_f.write(json.dumps(recipe) + "\n")
+        return len(self._recipes) - 1
+
+    def recipe(self, handle: int) -> list[int]:
+        return self._recipes[handle]
+
+    def num_streams(self) -> int:
+        return len(self._recipes)
+
+    def flush(self) -> None:
+        self._log.flush()
+        self._recipes_f.flush()
+
+    def close(self) -> None:
+        self.flush()
+        self._log.close()
+        self._log_read.close()
+        self._recipes_f.close()

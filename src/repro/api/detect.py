@@ -1,0 +1,74 @@
+"""Staged detector protocol (DESIGN.md §2.1).
+
+The v0 ``Detector.detect(chunks, ids, is_new, stream_hashes)`` god-method
+hid three different concerns behind one call: feature extraction (pure,
+expensive, batchable), candidate scoring against current index state
+(pure), and index admission (the only mutation). The staged protocol makes
+each explicit:
+
+    extract(batch)            -> features     pure; the heavy batched work
+    score(features, batch)    -> DetectResult pure; no index mutation
+    observe(features, batch)  -> None         the ONE mutating step
+
+``score`` must behave as if every chunk of the batch were scored against
+the index state at batch entry plus earlier chunks of the *same* batch —
+i.e. exactly what the v0 interleaved query/insert loop produced — without
+touching the shared index, so a crashed or aborted stream admits nothing.
+
+``run_detect`` drives either shape (staged detectors, or third-party
+legacy detectors that only implement ``detect``), and ``LegacyDetectMixin``
+gives staged detectors the v0 ``detect`` method for free, bit-identical to
+the pre-refactor behaviour.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+from repro.api.types import DetectBatch, DetectResult
+
+
+@runtime_checkable
+class StagedDetector(Protocol):
+    name: str
+
+    def fit(self, training_streams: Sequence[bytes], cfg: Any) -> None: ...
+
+    def extract(self, batch: DetectBatch) -> Any: ...
+
+    def score(self, features: Any, batch: DetectBatch) -> DetectResult: ...
+
+    def observe(self, features: Any, batch: DetectBatch) -> None: ...
+
+
+def is_staged(detector: Any) -> bool:
+    return (hasattr(detector, "extract") and hasattr(detector, "score")
+            and hasattr(detector, "observe"))
+
+
+def run_detect(detector: Any, batch: DetectBatch) -> DetectResult:
+    """Full detection pass for one stream: extract -> score -> observe.
+
+    Falls back to the legacy single-call protocol for detectors that only
+    implement ``detect`` so third-party detectors keep working unchanged.
+    """
+    if is_staged(detector):
+        features = detector.extract(batch)
+        result = detector.score(features, batch)
+        detector.observe(features, batch)
+        return result
+    base_ids = detector.detect(list(batch.chunks), batch.ids, batch.is_new,
+                               batch.stream_hashes)
+    return DetectResult(base_ids=np.asarray(base_ids, np.int64))
+
+
+class LegacyDetectMixin:
+    """v0 compatibility shim: provides ``detect(chunks, ids, is_new,
+    stream_hashes)`` on top of the staged methods, bit-identical to the
+    pre-refactor monolithic implementations."""
+
+    def detect(self, chunks, ids, is_new, stream_hashes) -> np.ndarray:
+        batch = DetectBatch(chunks=list(chunks), ids=ids, is_new=is_new,
+                            stream_hashes=stream_hashes)
+        return run_detect(self, batch).base_ids

@@ -1,0 +1,99 @@
+"""Name -> factory registries for every pluggable pipeline component.
+
+Four registries, one per seam the pipeline varies along (the CDC survey
+literature's observation that chunkers, resemblance schemes, and stores
+evolve independently):
+
+    detectors   "card", "finesse", "n-transform", "dedup-only"
+    indexes     "exact" (cosine top-1), "banded-lsh" (SimHash banding)
+    chunkers    "fastcdc" (a ChunkerConfig factory); custom chunker
+                factories must return an object with
+                ``chunk(stream) -> (chunks, stream_hashes)`` — the store
+                dispatches through ``repro.api.store.chunk_with``
+    backends    "memory", "file" container backends
+
+Built-ins register themselves via the decorators at their definition site
+(e.g. ``@register_index("exact")`` in core/similarity.py); third-party
+code registers the same way. Lookup is by name through ``get_*``; the
+declarative config path (api/config.py) resolves every component here so
+benchmarks, examples, and the checkpoint store construct pipelines one
+way.
+
+This module imports nothing from repro.core at module scope — core modules
+import *it* for the decorators — so there is no import cycle. Built-in
+registration is triggered lazily on first lookup.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, TypeVar
+
+F = TypeVar("F", bound=Callable[..., Any])
+
+_DETECTORS: dict[str, Callable[..., Any]] = {}
+_INDEXES: dict[str, Callable[..., Any]] = {}
+_CHUNKERS: dict[str, Callable[..., Any]] = {}
+_BACKENDS: dict[str, Callable[..., Any]] = {}
+
+_builtins_loaded = False
+
+
+def _ensure_builtins() -> None:
+    """Import the modules whose import side effect registers built-ins."""
+    global _builtins_loaded
+    if _builtins_loaded:
+        return
+    from repro.api import containers  # noqa: F401  (backends)
+    from repro.core import chunking, pipeline, similarity  # noqa: F401
+    _CHUNKERS.setdefault("fastcdc", chunking.ChunkerConfig)
+    # only after every import succeeded — a failure above must surface
+    # again on the next lookup, not leave the registries silently empty
+    _builtins_loaded = True
+
+
+def _make_register(table: dict[str, Callable[..., Any]],
+                   kind: str) -> Callable[[str], Callable[[F], F]]:
+    def register(name: str) -> Callable[[F], F]:
+        def deco(factory: F) -> F:
+            existing = table.get(name)
+            if existing is not None and existing is not factory:
+                raise ValueError(f"{kind} {name!r} already registered")
+            table[name] = factory
+            return factory
+        return deco
+    return register
+
+
+def _make_get(table: dict[str, Callable[..., Any]],
+              kind: str) -> Callable[[str], Callable[..., Any]]:
+    def get(name: str) -> Callable[..., Any]:
+        _ensure_builtins()
+        try:
+            return table[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown {kind} {name!r}; available: "
+                f"{sorted(table)}") from None
+    return get
+
+
+def _make_available(table: dict[str, Callable[..., Any]]) -> Callable[[], list[str]]:
+    def available() -> list[str]:
+        _ensure_builtins()
+        return sorted(table)
+    return available
+
+
+register_detector = _make_register(_DETECTORS, "detector")
+register_index = _make_register(_INDEXES, "index")
+register_chunker = _make_register(_CHUNKERS, "chunker")
+register_backend = _make_register(_BACKENDS, "backend")
+
+get_detector = _make_get(_DETECTORS, "detector")
+get_index = _make_get(_INDEXES, "index")
+get_chunker = _make_get(_CHUNKERS, "chunker")
+get_backend = _make_get(_BACKENDS, "backend")
+
+available_detectors = _make_available(_DETECTORS)
+available_indexes = _make_available(_INDEXES)
+available_chunkers = _make_available(_CHUNKERS)
+available_backends = _make_available(_BACKENDS)

@@ -1,0 +1,225 @@
+"""Session-oriented dedup + delta-compression store (DESIGN.md §2.2).
+
+The store composes the three pluggable seams — a (possibly staged)
+detector, a chunker config, and a ``ContainerBackend`` — and owns the
+policy between them: exact dedup by content digest, the delta-vs-raw
+decision, and accounting.
+
+Ingestion is transactional per stream:
+
+    session = store.open_stream()
+    session.write(part1); session.write(part2)   # stage bytes
+    report = session.commit()                    # chunk/detect/store
+    store.restore(report.handle)                 # byte-identical
+
+``commit()`` returns an immutable per-stream ``IngestReport`` (handle,
+per-stream DCR, chunk/dup/delta counts, detect time); the store-lifetime
+``StoreStats`` aggregate is the running sum of all reports plus fit time.
+Until ``commit()``, nothing — not even detector index admission — has
+happened, so an abandoned session leaves no trace. With a staged
+detector, admission runs only after every backend write succeeded, so a
+commit that fails mid-storage admits nothing to the index either (chunk
+records already appended by the failed commit remain as unreferenced
+garbage; digests stored before the failure may still dedup against them,
+which is safe — the payloads exist).
+
+The v0 surface (``ingest``, integer stream indexes for ``restore``)
+remains as thin wrappers: handles are assigned densely in commit order, so
+v0 callers keep working unchanged.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.api import containers
+from repro.api.detect import is_staged
+from repro.api.types import DetectBatch, IngestReport, StoreStats
+from repro.core import chunking, delta, hashing
+
+
+def chunk_with(chunker: Any, stream: bytes):
+    """Dispatch chunking through a registered chunker.
+
+    Custom chunkers implement ``chunk(stream) -> (chunks, stream_hashes)``
+    where chunks are ``repro.core.chunking.Chunk`` and stream_hashes are
+    the per-position window hashes detectors reuse (may be the gear scan
+    or the chunker's own). Anything without a ``chunk`` method is treated
+    as a FastCDC ``ChunkerConfig`` (the "fastcdc" builtin) and goes
+    through the parallel gear-hash scan.
+    """
+    if hasattr(chunker, "chunk"):
+        return chunker.chunk(stream)
+    buf = np.frombuffer(stream, dtype=np.uint8)
+    stream_hashes = hashing.gear_hashes_np(buf)
+    return chunking.chunk_stream(stream, chunker, hashes=stream_hashes), stream_hashes
+
+
+class StreamSession:
+    """Write-then-commit handle for ingesting one stream. After a
+    successful ``commit()`` (including via the context manager) the
+    IngestReport is also available as ``session.report``."""
+
+    def __init__(self, store: "DedupStore") -> None:
+        self._store = store
+        self._parts: list[bytes] = []
+        self._closed = False
+        self.report: IngestReport | None = None
+
+    def write(self, data: bytes) -> None:
+        if self._closed:
+            raise RuntimeError("stream session already committed/aborted")
+        self._parts.append(bytes(data))
+
+    def commit(self) -> IngestReport:
+        if self._closed:
+            raise RuntimeError("stream session already committed/aborted")
+        self._closed = True
+        self.report = self._store._commit_stream(b"".join(self._parts))
+        return self.report
+
+    def abort(self) -> None:
+        self._closed = True
+        self._parts.clear()
+
+    def __enter__(self) -> "StreamSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if not self._closed:
+            if exc_type is None:
+                self.commit()
+            else:
+                self.abort()
+
+
+class DedupStore:
+    """Container store with exact dedup + detector-driven delta compression."""
+
+    def __init__(self, detector: Any,
+                 chunker_cfg: chunking.ChunkerConfig | None = None,
+                 backend: containers.ContainerBackend | None = None):
+        self.detector = detector
+        self.cfg = chunker_cfg or chunking.ChunkerConfig()
+        self.backend = backend if backend is not None else containers.InMemoryBackend()
+        self.stats = StoreStats()
+        self.reports: list[IngestReport] = []
+        self._by_digest: dict[bytes, int] = {}
+        # a reopened (file-backed) backend already holds chunk ids; start
+        # past them so new chunks never shadow persisted records
+        self._next_id = self.backend.max_chunk_id() + 1
+
+    def fit(self, training_streams: Sequence[bytes]) -> None:
+        t0 = time.perf_counter()
+        self.detector.fit(training_streams, self.cfg)
+        self.stats.fit_seconds += time.perf_counter() - t0
+
+    def open_stream(self) -> StreamSession:
+        return StreamSession(self)
+
+    def ingest(self, stream: bytes) -> StoreStats:
+        """v0 surface: one-shot session commit; returns the aggregate."""
+        session = self.open_stream()
+        session.write(stream)
+        session.commit()
+        return self.stats
+
+    def _commit_stream(self, stream: bytes) -> IngestReport:
+        # pass 0: chunk
+        t0 = time.perf_counter()
+        chunks, stream_hashes = chunk_with(self.cfg, stream)
+        chunk_seconds = time.perf_counter() - t0
+
+        # pass 1: exact dedup; assign ids
+        n = len(chunks)
+        ids = np.empty(n, np.int64)
+        is_new = np.zeros(n, bool)
+        digests = [ck.digest for ck in chunks]
+        seen_in_stream: dict[bytes, int] = {}
+        for i, dig in enumerate(digests):
+            ref = self._by_digest.get(dig)
+            if ref is None:
+                ref = seen_in_stream.get(dig)
+            if ref is not None:
+                ids[i] = ref
+            else:
+                ids[i] = self._next_id
+                self._next_id += 1
+                is_new[i] = True
+                seen_in_stream[dig] = int(ids[i])
+
+        # pass 2: resemblance detection (batched, staged). For staged
+        # detectors, index admission (`observe`) is deferred until the
+        # backend writes succeed, so a commit that fails mid-storage
+        # admits nothing to the detector index. Legacy single-call
+        # detectors mutate inside detect() and can't make that promise.
+        t0 = time.perf_counter()
+        batch = DetectBatch(chunks=chunks, ids=ids, is_new=is_new,
+                            stream_hashes=stream_hashes)
+        staged = is_staged(self.detector)
+        if staged:
+            feats = self.detector.extract(batch)
+            base_ids = self.detector.score(feats, batch).base_ids
+        else:
+            base_ids = np.asarray(
+                self.detector.detect(chunks, ids, is_new, stream_hashes),
+                np.int64)
+        detect_seconds = time.perf_counter() - t0
+
+        # pass 3: store through the container backend
+        backend = self.backend
+        bytes_in = bytes_stored = 0
+        dup_chunks = delta_chunks = raw_chunks = 0
+        delta_seconds = 0.0
+        recipe: list[int] = []
+        for i, ck in enumerate(chunks):
+            bytes_in += ck.length
+            cid = int(ids[i])
+            recipe.append(cid)
+            if not is_new[i]:
+                dup_chunks += 1
+                continue
+            stored = None
+            base = int(base_ids[i])
+            if base >= 0 and backend.contains(base):
+                t0 = time.perf_counter()
+                d = delta.encode(ck.data, backend.get(base))
+                delta_seconds += time.perf_counter() - t0
+                if len(d) < ck.length:
+                    stored = len(d) + 8  # + recipe metadata
+                    backend.put_delta(cid, base, d, data=ck.data)
+                    delta_chunks += 1
+            if stored is None:
+                stored = ck.length
+                backend.put_raw(cid, ck.data)
+                raw_chunks += 1
+            self._by_digest[digests[i]] = cid
+            bytes_stored += stored
+        handle = backend.add_recipe(recipe)
+        backend.flush()
+
+        if staged:
+            t0 = time.perf_counter()
+            self.detector.observe(feats, batch)
+            detect_seconds += time.perf_counter() - t0
+
+        report = IngestReport(
+            handle=handle, bytes_in=bytes_in, bytes_stored=bytes_stored,
+            chunks=n, dup_chunks=dup_chunks, delta_chunks=delta_chunks,
+            raw_chunks=raw_chunks, detect_seconds=detect_seconds,
+            chunk_seconds=chunk_seconds, delta_seconds=delta_seconds)
+        self.reports.append(report)
+        self.stats.absorb(report)
+        return report
+
+    def restore(self, handle: int) -> bytes:
+        """Reconstruct a committed stream byte-for-byte by its handle."""
+        out = bytearray()
+        for cid in self.backend.recipe(handle):
+            out.extend(self.backend.get(cid))
+        return bytes(out)
+
+    def close(self) -> None:
+        self.backend.close()

@@ -1,0 +1,132 @@
+"""Value types of the layered detection & store API (DESIGN.md §2).
+
+These are the *only* objects that cross layer boundaries:
+
+  DetectBatch    one stream's worth of chunks handed to a detector —
+                 replaces the positional ``(chunks, ids, is_new,
+                 stream_hashes)`` array soup of the v0 ``Detector.detect``
+                 protocol;
+  DetectResult   per-chunk resemblance verdict (base chunk id, score);
+  IngestReport   immutable per-stream accounting returned by
+                 ``StreamSession.commit()`` — the stream handle plus the
+                 stream's own byte/chunk/time counters;
+  StoreStats     the store-lifetime aggregate (sum of every IngestReport
+                 plus offline fit time). Kept for the v0 surface; new code
+                 should prefer per-stream IngestReports.
+
+Nothing in this module mutates anything and nothing here imports the
+pipeline, so every layer (core detectors, container backends, registry,
+benchmarks) can depend on it without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Sequence
+
+import numpy as np
+
+if TYPE_CHECKING:  # avoid an import cycle at runtime; chunking is a leaf
+    from repro.core.chunking import Chunk
+
+
+@dataclasses.dataclass
+class DetectBatch:
+    """One stream of chunks, exact-dedup already resolved.
+
+    chunks         the stream's chunks, in stream order
+    ids            [n] int64 chunk id per chunk (duplicates share ids)
+    is_new         [n] bool — True where the chunk's content was never
+                   stored before (first occurrence wins inside a stream)
+    stream_hashes  [len(stream)] uint32 windowed gear hashes of the whole
+                   stream, as produced by the chunker scan — detectors
+                   reuse them for free sub-chunk features
+    """
+
+    chunks: "Sequence[Chunk]"
+    ids: np.ndarray
+    is_new: np.ndarray
+    stream_hashes: np.ndarray
+
+    def __post_init__(self) -> None:
+        self.ids = np.asarray(self.ids, np.int64)
+        self.is_new = np.asarray(self.is_new, bool)
+        if len(self.chunks) != self.ids.shape[0] or self.ids.shape != self.is_new.shape:
+            raise ValueError(
+                f"DetectBatch shape mismatch: {len(self.chunks)} chunks, "
+                f"ids {self.ids.shape}, is_new {self.is_new.shape}")
+
+    def __len__(self) -> int:
+        return len(self.chunks)
+
+    @property
+    def offsets(self) -> np.ndarray:
+        return np.asarray([c.offset for c in self.chunks], np.int64)
+
+
+@dataclasses.dataclass
+class DetectResult:
+    """Per-chunk verdict: base chunk id to delta-encode against (-1 = store
+    raw) and, when the detector produces one, the resemblance score."""
+
+    base_ids: np.ndarray
+    scores: np.ndarray | None = None
+
+    def __post_init__(self) -> None:
+        self.base_ids = np.asarray(self.base_ids, np.int64)
+
+    def __len__(self) -> int:
+        return int(self.base_ids.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestReport:
+    """What one committed stream did to the store (returned by
+    ``StreamSession.commit()``; never mutated afterwards)."""
+
+    handle: int                 # pass to DedupStore.restore()
+    bytes_in: int = 0
+    bytes_stored: int = 0
+    chunks: int = 0
+    dup_chunks: int = 0
+    delta_chunks: int = 0
+    raw_chunks: int = 0
+    detect_seconds: float = 0.0
+    chunk_seconds: float = 0.0
+    delta_seconds: float = 0.0
+
+    @property
+    def dcr(self) -> float:
+        """This stream's own deduplication-compression ratio."""
+        return self.bytes_in / max(1, self.bytes_stored)
+
+
+@dataclasses.dataclass
+class StoreStats:
+    """Store-lifetime aggregate: the sum of every committed IngestReport
+    plus offline model-fit time (invariant tested in tests/test_api.py)."""
+
+    bytes_in: int = 0
+    bytes_stored: int = 0
+    chunks: int = 0
+    dup_chunks: int = 0
+    delta_chunks: int = 0
+    raw_chunks: int = 0
+    detect_seconds: float = 0.0
+    chunk_seconds: float = 0.0
+    delta_seconds: float = 0.0
+    fit_seconds: float = 0.0
+
+    @property
+    def dcr(self) -> float:
+        return self.bytes_in / max(1, self.bytes_stored)
+
+    def absorb(self, report: IngestReport) -> None:
+        self.bytes_in += report.bytes_in
+        self.bytes_stored += report.bytes_stored
+        self.chunks += report.chunks
+        self.dup_chunks += report.dup_chunks
+        self.delta_chunks += report.delta_chunks
+        self.raw_chunks += report.raw_chunks
+        self.detect_seconds += report.detect_seconds
+        self.chunk_seconds += report.chunk_seconds
+        self.delta_seconds += report.delta_seconds

@@ -20,6 +20,7 @@ from typing import Any, Optional
 
 import numpy as np
 
+from repro import api
 from repro.core import chunking, context_model, features, pipeline
 from repro.checkpoint import store as base_store
 
@@ -56,11 +57,13 @@ def _unbyte_planes(raw: bytes, itemsize: int) -> bytes:
 class DedupCheckpointStore:
     def __init__(self, detector: Optional[pipeline.Detector] = None,
                  chunker_cfg: Optional[chunking.ChunkerConfig] = None,
-                 byte_plane: bool = True):
-        self._store = pipeline.DedupStore(
+                 byte_plane: bool = True,
+                 backend: Optional[api.ContainerBackend] = None):
+        self._store = api.DedupStore(
             detector or _default_detector(),
-            chunker_cfg or chunking.ChunkerConfig(avg_size=16 * 1024))
-        self._steps: dict[int, tuple[int, dict]] = {}  # step -> (stream idx, manifest)
+            chunker_cfg or chunking.ChunkerConfig(avg_size=16 * 1024),
+            backend=backend)
+        self._steps: dict[int, tuple[int, dict]] = {}  # step -> (handle, manifest)
         self._fitted = False
         self._byte_plane = byte_plane
 
@@ -83,8 +86,10 @@ class DedupCheckpointStore:
         if not self._fitted:
             self._store.fit([stream])
             self._fitted = True
-        self._store.ingest(stream)
-        self._steps[step] = (len(self._store._recipes) - 1, manifest)
+        session = self._store.open_stream()
+        session.write(stream)
+        report = session.commit()
+        self._steps[step] = (report.handle, manifest)
         return self.stats
 
     def restore(self, like: Any, step: int) -> Any:

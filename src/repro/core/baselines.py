@@ -96,19 +96,38 @@ class Finesse:
 
 
 class SuperFeatureIndex:
-    """FirstFit store: any-SF-match -> similar; first match is the base."""
+    """FirstFit store: any-SF-match -> similar; first match is the base.
+
+    `query`/`stage` accept an *overlay* (same table-list shape, holding
+    staged-but-not-admitted entries) so a batch can be scored as if its
+    earlier chunks were already inserted — without mutating the index.
+    Persistent tables win over the overlay, matching insert's
+    first-writer-wins `setdefault`. The FirstFit ordering lives only
+    here; callers never touch the tables directly.
+    """
 
     def __init__(self):
         self._tables: list[dict[int, int]] = []
 
-    def query(self, sfs: tuple[int, ...]) -> int | None:
-        while len(self._tables) < len(sfs):
-            self._tables.append({})
+    def query(self, sfs: tuple[int, ...],
+              overlay: list[dict[int, int]] | None = None) -> int | None:
         for j, sf in enumerate(sfs):
-            hit = self._tables[j].get(sf)
+            hit = self._tables[j].get(sf) if j < len(self._tables) else None
+            if hit is None and overlay is not None and j < len(overlay):
+                hit = overlay[j].get(sf)
             if hit is not None:
                 return hit
         return None
+
+    def stage(self, sfs: tuple[int, ...], chunk_id: int,
+              overlay: list[dict[int, int]]) -> None:
+        """Record an insert in `overlay` only (the index is untouched),
+        preserving first-writer-wins across persistent + staged entries."""
+        while len(overlay) < len(sfs):
+            overlay.append({})
+        for j, sf in enumerate(sfs):
+            if j >= len(self._tables) or sf not in self._tables[j]:
+                overlay[j].setdefault(sf, chunk_id)
 
     def insert(self, sfs: tuple[int, ...], chunk_id: int) -> None:
         while len(self._tables) < len(sfs):

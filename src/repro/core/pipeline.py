@@ -1,53 +1,46 @@
-"""End-to-end deduplication + delta-compression pipeline (paper §5 system).
+"""Detectors + the end-to-end dedup/delta pipeline (paper §5 system).
 
     stream -> FastCDC chunks -> exact dedup (blake2b)
            -> resemblance detection (pluggable: CARD / Finesse / N-transform)
            -> delta-encode against the detected base | store raw
-           -> container store; DCR = bytes_in / bytes_stored
+           -> container backend; DCR = bytes_in / bytes_stored
 
-Detectors implement:
+Detectors implement the staged protocol (repro.api.detect, DESIGN.md §2.1):
 
-    fit(training_streams, chunker_cfg)            offline model training
-    detect(chunks, ids, is_new, stream_hashes)    -> base chunk id per chunk
-                                                     (-1 = store raw), and
-                                                     must index new chunks
+    fit(training_streams, chunker_cfg)   offline model training
+    extract(batch) -> features           pure, batched heavy lifting
+    score(features, batch) -> result     pure candidate scoring
+    observe(features, batch)             the one index-mutating step
 
-`detect` sees the whole stream at once so feature extraction and index
+`extract` sees the whole stream at once so feature extraction and index
 search batch properly (CARD queries are one matmul, not n python calls);
-FirstFit baselines keep their sequential any-SF-match semantics internally.
-Detection time (the paper's speed metric) = wall time inside `detect`,
-excluding chunking and delta I/O, matching the paper's accounting.
+FirstFit baselines keep their sequential any-SF-match semantics via a
+pure overlay in `score`. The v0 single-call `detect(chunks, ids, is_new,
+stream_hashes)` surface survives via LegacyDetectMixin, bit-identical.
+Detection time (the paper's speed metric) = wall time across the three
+stages, excluding chunking and delta I/O, matching the paper's accounting.
+
+The store itself lives in repro.api.store (StreamSession ingestion over a
+ContainerBackend); DedupStore/StoreStats are re-exported here for the v0
+import surface.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Protocol, Sequence
+from typing import Any, Protocol, Sequence
 
 import numpy as np
 
-from repro.core import baselines, chunking, context_model, delta, features, hashing, similarity
-
-
-@dataclasses.dataclass
-class StoreStats:
-    bytes_in: int = 0
-    bytes_stored: int = 0
-    chunks: int = 0
-    dup_chunks: int = 0
-    delta_chunks: int = 0
-    raw_chunks: int = 0
-    detect_seconds: float = 0.0
-    chunk_seconds: float = 0.0
-    delta_seconds: float = 0.0
-    fit_seconds: float = 0.0
-
-    @property
-    def dcr(self) -> float:
-        return self.bytes_in / max(1, self.bytes_stored)
+from repro.api.detect import LegacyDetectMixin
+from repro.api.registry import register_detector
+from repro.api.store import DedupStore, StreamSession, chunk_with  # noqa: F401  (v0 surface)
+from repro.api.types import DetectBatch, DetectResult, IngestReport, StoreStats  # noqa: F401
+from repro.core import baselines, chunking, context_model, features
 
 
 class Detector(Protocol):
+    """v0 single-call protocol; still accepted everywhere (run_detect
+    falls back to it for detectors that are not staged)."""
+
     name: str
 
     def fit(self, training_streams: Sequence[bytes],
@@ -57,19 +50,34 @@ class Detector(Protocol):
                is_new: np.ndarray, stream_hashes: np.ndarray) -> np.ndarray: ...
 
 
-class NullDetector:
+class NullDetector(LegacyDetectMixin):
     """Exact dedup only (no delta compression)."""
     name = "dedup-only"
 
     def fit(self, training_streams, cfg):
         pass
 
-    def detect(self, chunks, ids, is_new, stream_hashes):
-        return np.full(len(chunks), -1, np.int64)
+    def extract(self, batch: DetectBatch) -> None:
+        return None
+
+    def score(self, feats: None, batch: DetectBatch) -> DetectResult:
+        return DetectResult(np.full(len(batch), -1, np.int64))
+
+    def observe(self, feats: None, batch: DetectBatch) -> None:
+        pass
 
 
-class SuperFeatureDetector:
-    """Shared FirstFit wrapper for N-transform / Finesse."""
+class SuperFeatureDetector(LegacyDetectMixin):
+    """Shared FirstFit wrapper for N-transform / Finesse.
+
+    FirstFit is inherently sequential (chunk i may delta against chunk
+    j < i of the same stream, inserted moments earlier), so `score`
+    replays that order against a *pure overlay* of the shared index:
+    persistent tables are consulted first (insert is first-writer-wins),
+    then same-batch entries. `observe` then admits the batch for real —
+    the final index state and every verdict are bit-identical to the v0
+    interleaved query/insert loop.
+    """
 
     def __init__(self, scheme, name: str):
         self._scheme = scheme
@@ -79,16 +87,26 @@ class SuperFeatureDetector:
     def fit(self, training_streams, cfg):
         pass  # content-only schemes have no training phase
 
-    def detect(self, chunks, ids, is_new, stream_hashes):
-        out = np.full(len(chunks), -1, np.int64)
-        for i, ck in enumerate(chunks):
-            sfs = self._scheme.super_features(ck.data)
-            if is_new[i]:
-                hit = self._index.query(sfs)
-                if hit is not None and hit != ids[i]:
+    def extract(self, batch: DetectBatch) -> list[tuple[int, ...]]:
+        return [self._scheme.super_features(ck.data) for ck in batch.chunks]
+
+    def score(self, sfs_list: list[tuple[int, ...]],
+              batch: DetectBatch) -> DetectResult:
+        n = len(batch)
+        out = np.full(n, -1, np.int64)
+        overlay: list[dict[int, int]] = []
+        for i, sfs in enumerate(sfs_list):
+            if batch.is_new[i]:
+                hit = self._index.query(sfs, overlay=overlay)
+                if hit is not None and hit != batch.ids[i]:
                     out[i] = hit
-            self._index.insert(sfs, int(ids[i]))
-        return out
+            self._index.stage(sfs, int(batch.ids[i]), overlay)
+        return DetectResult(out)
+
+    def observe(self, sfs_list: list[tuple[int, ...]],
+                batch: DetectBatch) -> None:
+        for sfs, cid in zip(sfs_list, batch.ids):
+            self._index.insert(sfs, int(cid))
 
 
 def ntransform_detector(cfg: baselines.SuperFeatureConfig | None = None):
@@ -99,12 +117,16 @@ def finesse_detector(cfg: baselines.SuperFeatureConfig | None = None):
     return SuperFeatureDetector(baselines.Finesse(cfg), "finesse")
 
 
-class CARDDetector:
+class CARDDetector(LegacyDetectMixin):
     """The paper's scheme: initial features -> context model -> cosine index.
 
     Batch two-phase search: one top-1 query of all new chunks against the
     stored index, plus one intra-stream similarity pass (earlier chunks of
     the same stream are eligible bases), then a single batched insert.
+
+    The resemblance index is a registry knob (`index="exact"` |
+    "banded-lsh" | an already-built index object), not a constructor
+    branch; `use_lsh_bands` survives as a v0 alias.
     """
 
     name = "card"
@@ -114,28 +136,33 @@ class CARDDetector:
                  model_cfg: context_model.ContextModelConfig | None = None,
                  threshold: float = 0.3,
                  use_lsh_bands: bool = False,
-                 use_kernel: bool = True):
+                 use_kernel: bool = True,
+                 index: str | Any | None = None,
+                 index_args: dict | None = None):
         self.feat_cfg = feat_cfg or features.FeatureConfig()
         self.model_cfg = model_cfg or context_model.ContextModelConfig(m=self.feat_cfg.m)
         assert self.model_cfg.m == self.feat_cfg.m
         self.threshold = threshold
         self.extractor = features.FeatureExtractor(self.feat_cfg, use_kernel=use_kernel)
         self.model = context_model.ContextModel(self.model_cfg)
-        if use_lsh_bands:
-            self.index: similarity.CosineIndex | similarity.BandedLSHIndex = \
-                similarity.BandedLSHIndex(self.model_cfg.d, threshold=threshold)
+        if index is None:
+            index = "banded-lsh" if use_lsh_bands else "exact"
+        if isinstance(index, str):
+            from repro.api.registry import get_index
+            kwargs = dict(index_args or {})
+            if index == "exact":
+                kwargs.setdefault("use_kernel", use_kernel)
+            self.index = get_index(index)(self.model_cfg.d,
+                                          threshold=threshold, **kwargs)
         else:
-            self.index = similarity.CosineIndex(self.model_cfg.d, threshold=threshold,
-                                                use_kernel=use_kernel)
+            self.index = index
 
     def fit(self, training_streams, cfg):
         """Training process (paper Fig. 3 left): chunk the training data in
         stream order, extract initial features, train the CBOW model."""
         feats = []
         for stream in training_streams:
-            buf = np.frombuffer(stream, dtype=np.uint8)
-            h = hashing.gear_hashes_np(buf)
-            chunks = chunking.chunk_stream(stream, cfg, hashes=h)
+            chunks, h = chunk_with(cfg, stream)
             if chunks:
                 offs = np.asarray([c.offset for c in chunks])
                 feats.append(self.extractor([c.data for c in chunks], h, offs))
@@ -143,11 +170,13 @@ class CARDDetector:
             raise ValueError("CARD needs at least one training stream")
         self.model.fit(np.concatenate(feats, axis=0))
 
-    def detect(self, chunks, ids, is_new, stream_hashes):
-        offs = np.asarray([c.offset for c in chunks])
-        init = self.extractor([c.data for c in chunks], stream_hashes, offs)
-        feats = self.model.transform(init)                    # [n, D]
-        n = len(chunks)
+    def extract(self, batch: DetectBatch) -> np.ndarray:
+        init = self.extractor([c.data for c in batch.chunks],
+                              batch.stream_hashes, batch.offsets)
+        return self.model.transform(init)                     # [n, D]
+
+    def score(self, feats: np.ndarray, batch: DetectBatch) -> DetectResult:
+        n = len(batch)
         out = np.full(n, -1, np.int64)
 
         # phase 1: against the stored index
@@ -161,107 +190,49 @@ class CARDDetector:
         intra_s = sims[np.arange(n), intra_j]
 
         use_intra = intra_s >= np.maximum(ext_scores, self.threshold)
-        best_id = np.where(use_intra, ids[intra_j], ext_ids)
+        best_id = np.where(use_intra, batch.ids[intra_j], ext_ids)
         best_sc = np.where(use_intra, intra_s, ext_scores)
-        ok = (best_sc >= self.threshold) & is_new & (best_id != ids)
+        ok = (best_sc >= self.threshold) & batch.is_new & (best_id != batch.ids)
         out[ok] = best_id[ok]
+        return DetectResult(out, scores=np.where(ok, best_sc, 0.0))
 
-        new_mask = is_new.astype(bool)
+    def observe(self, feats: np.ndarray, batch: DetectBatch) -> None:
+        new_mask = batch.is_new.astype(bool)
         if new_mask.any():
-            self.index.insert_batch(feats[new_mask], ids[new_mask])
-        return out
+            self.index.insert_batch(feats[new_mask], batch.ids[new_mask])
 
 
-class DedupStore:
-    """Container store with exact dedup + detector-driven delta compression."""
+# --- registry factories (repro.api.config builds through these) --------------
 
-    def __init__(self, detector: Detector,
-                 chunker_cfg: chunking.ChunkerConfig | None = None):
-        self.detector = detector
-        self.cfg = chunker_cfg or chunking.ChunkerConfig()
-        self.stats = StoreStats()
-        self._by_digest: dict[bytes, int] = {}
-        self._payload: dict[int, bytes] = {}   # chunk_id -> raw bytes
-        self._kind: dict[int, tuple] = {}      # chunk_id -> ("raw",)|("delta",base,d)
-        self._next_id = 0
-        self._recipes: list[list[int]] = []    # stream -> chunk ids (restore)
+@register_detector("dedup-only")
+def _build_null() -> NullDetector:
+    return NullDetector()
 
-    def fit(self, training_streams: Sequence[bytes]) -> None:
-        t0 = time.perf_counter()
-        self.detector.fit(training_streams, self.cfg)
-        self.stats.fit_seconds += time.perf_counter() - t0
 
-    def ingest(self, stream: bytes) -> StoreStats:
-        t0 = time.perf_counter()
-        buf = np.frombuffer(stream, dtype=np.uint8)
-        stream_hashes = hashing.gear_hashes_np(buf)
-        chunks = chunking.chunk_stream(stream, self.cfg, hashes=stream_hashes)
-        self.stats.chunk_seconds += time.perf_counter() - t0
+@register_detector("finesse")
+def _build_finesse(**sf_args) -> SuperFeatureDetector:
+    cfg = baselines.SuperFeatureConfig(**sf_args) if sf_args else None
+    return finesse_detector(cfg)
 
-        # pass 1: exact dedup; assign ids
-        n = len(chunks)
-        ids = np.empty(n, np.int64)
-        is_new = np.zeros(n, bool)
-        digests = [ck.digest for ck in chunks]
-        seen_in_stream: dict[bytes, int] = {}
-        for i, dig in enumerate(digests):
-            ref = self._by_digest.get(dig)
-            if ref is None:
-                ref = seen_in_stream.get(dig)
-            if ref is not None:
-                ids[i] = ref
-            else:
-                ids[i] = self._next_id
-                self._next_id += 1
-                is_new[i] = True
-                seen_in_stream[dig] = int(ids[i])
 
-        # pass 2: resemblance detection (batched)
-        t0 = time.perf_counter()
-        base_ids = self.detector.detect(chunks, ids, is_new, stream_hashes)
-        self.stats.detect_seconds += time.perf_counter() - t0
+@register_detector("n-transform")
+def _build_ntransform(**sf_args) -> SuperFeatureDetector:
+    cfg = baselines.SuperFeatureConfig(**sf_args) if sf_args else None
+    return ntransform_detector(cfg)
 
-        # pass 3: store
-        recipe: list[int] = []
-        for i, ck in enumerate(chunks):
-            self.stats.bytes_in += ck.length
-            self.stats.chunks += 1
-            cid = int(ids[i])
-            recipe.append(cid)
-            if not is_new[i]:
-                self.stats.dup_chunks += 1
-                continue
-            stored = None
-            base = int(base_ids[i])
-            if base >= 0 and base in self._payload:
-                t0 = time.perf_counter()
-                d = delta.encode(ck.data, self._payload[base])
-                self.stats.delta_seconds += time.perf_counter() - t0
-                if len(d) < ck.length:
-                    stored = len(d) + 8  # + recipe metadata
-                    self._kind[cid] = ("delta", base, d)
-                    self.stats.delta_chunks += 1
-            if stored is None:
-                stored = ck.length
-                self._kind[cid] = ("raw",)
-                self.stats.raw_chunks += 1
-            self._payload[cid] = ck.data
-            self._by_digest[digests[i]] = cid
-            self.stats.bytes_stored += stored
-        self._recipes.append(recipe)
-        return self.stats
 
-    def restore(self, stream_idx: int) -> bytes:
-        """Reconstruct a stream byte-for-byte from stored containers."""
-        out = bytearray()
-        for cid in self._recipes[stream_idx]:
-            kind = self._kind[cid]
-            if kind[0] == "raw":
-                out.extend(self._payload[cid])
-            else:
-                _, base_id, d = kind
-                out.extend(delta.decode(d, self._payload[base_id]))
-        return bytes(out)
+@register_detector("card")
+def _build_card(*, feat: dict | None = None, model: dict | None = None,
+                threshold: float = 0.3, index: str | None = None,
+                index_args: dict | None = None,
+                use_kernel: bool = True) -> CARDDetector:
+    feat_cfg = features.FeatureConfig(**(feat or {}))
+    model_kw = dict(model or {})
+    model_kw.setdefault("m", feat_cfg.m)
+    model_cfg = context_model.ContextModelConfig(**model_kw)
+    return CARDDetector(feat_cfg=feat_cfg, model_cfg=model_cfg,
+                        threshold=threshold, index=index,
+                        index_args=index_args, use_kernel=use_kernel)
 
 
 def run_workload(detector: Detector, versions: Sequence[bytes],

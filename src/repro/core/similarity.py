@@ -14,7 +14,10 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
+from repro.api.registry import register_index
 
+
+@register_index("exact")
 class CosineIndex:
     """Append-only exact cosine top-1 index (features assumed L2-normalized).
 
@@ -73,6 +76,7 @@ class CosineIndex:
         return ids, score
 
 
+@register_index("banded-lsh")
 class BandedLSHIndex:
     """SimHash banding: `bands` tables keyed by `band_bits`-bit sign patterns."""
 
@@ -88,25 +92,32 @@ class BandedLSHIndex:
         self._feats: dict[int, np.ndarray] = {}
 
     def _keys(self, feature: np.ndarray) -> np.ndarray:
-        signs = (np.einsum("bkd,d->bk", self._planes, feature) > 0)
+        return self._keys_batch(feature[None, :])[0]
+
+    def _keys_batch(self, features: np.ndarray) -> np.ndarray:
+        """[n, D] -> [n, bands] bucket keys in one projection einsum."""
+        signs = (np.einsum("bkd,nd->nbk", self._planes, features) > 0)
         weights = (1 << np.arange(self.band_bits, dtype=np.uint64))
-        return (signs.astype(np.uint64) * weights).sum(axis=1)
+        return (signs.astype(np.uint64) * weights).sum(axis=2)
 
     def insert(self, feature: np.ndarray, chunk_id: int) -> None:
-        feature = np.asarray(feature, np.float32)
-        self._feats[chunk_id] = feature
-        for b, key in enumerate(self._keys(feature)):
-            self._tables[b].setdefault(int(key), []).append(chunk_id)
+        self.insert_batch(np.asarray(feature, np.float32)[None, :],
+                          np.asarray([chunk_id], np.int64))
 
     def insert_batch(self, features: np.ndarray, chunk_ids: np.ndarray) -> None:
-        for f, cid in zip(features, chunk_ids):
-            self.insert(f, int(cid))
+        features = np.asarray(features, np.float32)
+        keys = self._keys_batch(features)                # one [n, bands] einsum
+        for i, cid in enumerate(chunk_ids):
+            cid = int(cid)
+            self._feats[cid] = features[i]
+            row = keys[i]
+            for b in range(self.bands):
+                self._tables[b].setdefault(int(row[b]), []).append(cid)
 
-    def query_one(self, feature: np.ndarray) -> tuple[int, float]:
-        feature = np.asarray(feature, np.float32)
+    def _rerank(self, feature: np.ndarray, keys: np.ndarray) -> tuple[int, float]:
         cands: list[int] = []
-        for b, key in enumerate(self._keys(feature)):
-            cands.extend(self._tables[b].get(int(key), ()))
+        for b in range(self.bands):
+            cands.extend(self._tables[b].get(int(keys[b]), ()))
         if not cands:
             return -1, 0.0
         cand_ids = np.unique(np.asarray(cands, np.int64))
@@ -118,10 +129,15 @@ class BandedLSHIndex:
             return -1, score
         return int(cand_ids[best]), score
 
+    def query_one(self, feature: np.ndarray) -> tuple[int, float]:
+        feature = np.asarray(feature, np.float32)
+        return self._rerank(feature, self._keys(feature))
+
     def query(self, features: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         q = np.atleast_2d(np.asarray(features, np.float32))
+        keys = self._keys_batch(q)                       # one [B, bands] einsum
         out_id = np.empty(q.shape[0], np.int64)
         out_sc = np.empty(q.shape[0], np.float32)
         for i, f in enumerate(q):
-            out_id[i], out_sc[i] = self.query_one(f)
+            out_id[i], out_sc[i] = self._rerank(f, keys[i])
         return out_id, out_sc

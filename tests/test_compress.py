@@ -3,6 +3,9 @@ feedback, and trains a model to a similar loss."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.distributed import compress

@@ -1,5 +1,8 @@
 """Delta codec: byte-identical roundtrip on arbitrary inputs (hypothesis)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import delta
