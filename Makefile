@@ -1,10 +1,10 @@
 # Developer/CI entry points. Tier-1 verify is the `test` target
-# (ROADMAP.md); `ci` = install dev deps + tier-1.
+# (ROADMAP.md); `ci` = install dev deps + tier-1 + the lifecycle suite.
 
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: dev-deps test ci bench quickstart
+.PHONY: dev-deps test test-lifecycle ci bench gc-bench quickstart
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -12,10 +12,18 @@ dev-deps:
 test:
 	$(PYTHON) -m pytest -x -q
 
-ci: dev-deps test
+# space-reclamation suite on its own (also part of the tier-1 collection)
+test-lifecycle:
+	$(PYTHON) -m pytest tests/test_lifecycle.py tests/test_lifecycle_property.py -q
+
+ci: dev-deps test test-lifecycle
 
 bench:
 	$(PYTHON) -m benchmarks.run --quick
+
+# delete+compact throughput smoke; writes BENCH_GC.json for perf tracking
+gc-bench:
+	$(PYTHON) -m benchmarks.bench_gc --quick
 
 quickstart:
 	$(PYTHON) examples/quickstart.py

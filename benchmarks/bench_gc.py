@@ -1,0 +1,105 @@
+"""Reclamation throughput (DESIGN.md §7): a retention-style churn loop —
+ingest N backup generations per workload, expire the oldest until only
+`retain` survive, then collect + compact a FileBackend container.
+
+Reported per cell: delete and compact wall time, reclaimed bytes, the
+rebase mix, delete+compact throughput in MB/s of container rewritten,
+and the DCR of the surviving generations *after* compaction (bytes the
+survivors represent / container bytes actually on disk) — the paper's
+DCR metric carried through the churn the append-only v0 store could not
+express. Rows also land in BENCH_GC.json so the reclamation perf
+trajectory is tracked across PRs.
+
+    PYTHONPATH=src python -m benchmarks.bench_gc [--quick] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from pathlib import Path
+
+from benchmarks import common
+from repro import api
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_GC.json"
+
+
+def run(base_size: int = 6 << 20, versions: int = 6, retain: int = 3,
+        detectors=("dedup-only", "finesse", "card")) -> list[dict]:
+    rows = []
+    for wl in common.WORKLOADS:
+        vs = common.make_versions(wl, base_size, versions)
+        for kind in detectors:
+            cfg = common.detector_config(kind, avg_size=8192)
+            with tempfile.TemporaryDirectory() as tmp:
+                cfg.backend, cfg.backend_args = "file", {"path": tmp}
+                store = api.build_store(cfg)
+                t0 = time.perf_counter()
+                store.fit(list(vs[:1]))
+                handles = []
+                for v in vs:
+                    session = store.open_stream()
+                    session.write(v)
+                    handles.append(session.commit().handle)
+                ingest_s = time.perf_counter() - t0
+                dcr_before = store.stats.dcr
+                size_before = store.backend.storage_bytes()
+
+                t0 = time.perf_counter()
+                for h in handles[:versions - retain]:
+                    store.delete(h)
+                delete_s = time.perf_counter() - t0
+                t0 = time.perf_counter()
+                collect_rep = store.collect()
+                collect_s = time.perf_counter() - t0
+                run_rep = store.compact()
+
+                survivors = vs[versions - retain:]
+                for h, v in zip(handles[versions - retain:], survivors):
+                    assert store.restore(h) == v
+                dcr_post = (sum(len(v) for v in survivors)
+                            / max(1, store.backend.storage_bytes()))
+                churn_s = delete_s + collect_s + run_rep.seconds
+                rows.append({
+                    "bench": "gc", "workload": wl, "detector": kind,
+                    "versions": versions, "retain": retain,
+                    "ingest_s": round(ingest_s, 3),
+                    "delete_s": round(delete_s, 4),
+                    "collect_s": round(collect_s, 4),
+                    "compact_s": round(run_rep.seconds, 4),
+                    "swept_chunks": run_rep.swept_chunks,
+                    "rebased_delta": run_rep.rebased_delta,
+                    "rebased_raw": run_rep.rebased_raw,
+                    "reclaimed_mb": round(run_rep.reclaimed_bytes / 2**20, 3),
+                    "dead_mb_marked": round(
+                        collect_rep.reclaimable_bytes / 2**20, 3),
+                    "churn_mbps": round(size_before / 2**20 / max(1e-9,
+                                                                  churn_s), 2),
+                    "dcr_before": round(dcr_before, 4),
+                    "dcr_post": round(dcr_post, 4),
+                })
+                store.close()
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workloads (CI smoke)")
+    ap.add_argument("--json", default=str(JSON_PATH),
+                    help="where to write the JSON row dump")
+    args = ap.parse_args()
+    if args.quick:
+        rows = run(base_size=2 << 20, versions=4, retain=2,
+                   detectors=("dedup-only", "finesse"))
+    else:
+        rows = run()
+    common.emit(rows, "gc")
+    Path(args.json).write_text(json.dumps(rows, indent=2) + "\n")
+    print(f"# wrote {len(rows)} rows to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

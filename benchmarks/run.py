@@ -14,13 +14,14 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller workloads (CI-speed)")
     ap.add_argument("--only", default=None,
-                    help="comma list: dcr,time,dims,kernels,ckpt,ablation,roofline")
+                    help="comma list: dcr,time,dims,kernels,ckpt,ablation,"
+                         "roofline,gc")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (bench_ablation, bench_ckpt_store, bench_dcr,
-                            bench_dims, bench_kernels, bench_roofline,
-                            bench_time, common)
+                            bench_dims, bench_gc, bench_kernels,
+                            bench_roofline, bench_time, common)
 
     base = (2 << 20) if args.quick else (6 << 20)
     sizes = common.CHUNK_SIZES[:3] if args.quick else common.CHUNK_SIZES[:4]
@@ -33,6 +34,9 @@ def main() -> None:
         "ckpt": bench_ckpt_store.run,
         "ablation": lambda: bench_ablation.run(base_size=min(base, 4 << 20)),
         "roofline": bench_roofline.run,
+        "gc": lambda: bench_gc.run(base_size=base,
+                                   versions=4 if args.quick else 6,
+                                   retain=2 if args.quick else 3),
     }
 
     for name, fn in sections.items():

@@ -1,13 +1,17 @@
 """repro.api — the layered public surface of the dedup/delta system.
 
-Layers (DESIGN.md §2), each depending only on the ones above it:
+Layers (DESIGN.md §2 and §7), each depending only on the ones above it:
 
   types        DetectBatch / DetectResult / IngestReport / StoreStats
   detect       staged detector protocol (extract -> score -> observe),
                legacy-``detect`` compatibility shim
   containers   ContainerBackend protocol; memory + file backends
+  refcount     chunk recipe/base refcounting for space reclamation
   store        DedupStore with transactional StreamSession ingestion
-  registry     name -> factory tables for detectors/indexes/chunkers/backends
+  lifecycle    delete / mark-sweep collect / compaction with rebase,
+               pluggable reclamation policies
+  registry     name -> factory tables for detectors/indexes/chunkers/
+               backends/policies
   config       DedupConfig.from_dict(...) -> build_store(...)
 
 Quick start:
@@ -17,8 +21,14 @@ Quick start:
     store.fit([first_version])
     with store.open_stream() as s:
         s.write(first_version)
-    report = store.reports[-1]          # or: s = store.open_stream();
-    restored = store.restore(report.handle)
+    report = s.report                     # IngestReport from the commit
+    assert store.restore(report.handle) == first_version
+    store.delete(report.handle)           # retire the stream ...
+    store.collect()
+    store.compact()                       # ... and reclaim its bytes
+
+(The snippet above is executed verbatim by tests/test_api.py, so it
+stays honest.)
 """
 from repro.api.types import (  # noqa: F401
     DetectBatch,
@@ -37,25 +47,38 @@ from repro.api.containers import (  # noqa: F401
     FileBackend,
     InMemoryBackend,
 )
+from repro.api.refcount import RefcountTable  # noqa: F401
 from repro.api.store import DedupStore, StreamSession, chunk_with  # noqa: F401
+from repro.api.lifecycle import (  # noqa: F401
+    CollectReport,
+    CompactionRun,
+    EagerPolicy,
+    NeverPolicy,
+    ReclamationPolicy,
+    ThresholdPolicy,
+)
 from repro.api.registry import (  # noqa: F401
     available_backends,
     available_chunkers,
     available_detectors,
     available_indexes,
+    available_policies,
     get_backend,
     get_chunker,
     get_detector,
     get_index,
+    get_policy,
     register_backend,
     register_chunker,
     register_detector,
     register_index,
+    register_policy,
 )
 from repro.api.config import (  # noqa: F401
     DedupConfig,
     build_backend,
     build_chunker,
     build_detector,
+    build_policy,
     build_store,
 )

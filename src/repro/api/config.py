@@ -14,6 +14,8 @@ its registry key plus keyword arguments for its factory:
         "chunker_args": {"avg_size": 8192},
         "backend": "file",
         "backend_args": {"path": "/data/containers"},
+        "policy": "threshold",               # reclamation (DESIGN.md §7.4)
+        "policy_args": {"ratio": 0.25},
     })
     store = build_store(cfg)
 
@@ -29,7 +31,7 @@ from repro.api import registry
 from repro.api.store import DedupStore
 
 _KNOWN_KEYS = {"detector", "detector_args", "chunker", "chunker_args",
-               "backend", "backend_args"}
+               "backend", "backend_args", "policy", "policy_args"}
 
 
 @dataclasses.dataclass
@@ -40,6 +42,8 @@ class DedupConfig:
     chunker_args: dict[str, Any] = dataclasses.field(default_factory=dict)
     backend: str = "memory"
     backend_args: dict[str, Any] = dataclasses.field(default_factory=dict)
+    policy: str = "never"
+    policy_args: dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @classmethod
     def from_dict(cls, d: dict[str, Any]) -> "DedupConfig":
@@ -49,7 +53,7 @@ class DedupConfig:
                              f"known: {sorted(_KNOWN_KEYS)}")
         cfg = cls(**{k: dict(v) if isinstance(v, dict) else v
                      for k, v in d.items()})
-        for name in ("detector", "chunker", "backend"):
+        for name in ("detector", "chunker", "backend", "policy"):
             if not isinstance(getattr(cfg, name), str):
                 raise TypeError(f"{name} must be a registry name (str)")
         return cfg
@@ -70,7 +74,11 @@ def build_backend(cfg: DedupConfig) -> Any:
     return registry.get_backend(cfg.backend)(**cfg.backend_args)
 
 
+def build_policy(cfg: DedupConfig) -> Any:
+    return registry.get_policy(cfg.policy)(**cfg.policy_args)
+
+
 def build_store(cfg: DedupConfig) -> DedupStore:
     """Resolve every component through the registry and assemble the store."""
     return DedupStore(build_detector(cfg), build_chunker(cfg),
-                      backend=build_backend(cfg))
+                      backend=build_backend(cfg), policy=build_policy(cfg))

@@ -1,11 +1,11 @@
-"""Pluggable container backends (DESIGN.md §2.3).
+"""Pluggable container backends (DESIGN.md §2.3, lifecycle in §7).
 
 A ``ContainerBackend`` owns the three persistent artifacts of the store:
 chunk payloads (raw bytes or a delta patch + base reference), and stream
 recipes (the ordered chunk-id list that reconstructs a stream). All store
 *policy* — exact dedup, resemblance detection, delta-vs-raw decision,
-accounting — stays above the backend in ``repro.api.store``; backends only
-move bytes.
+accounting, and when to reclaim — stays above the backend in
+``repro.api.store`` / ``repro.api.lifecycle``; backends only move bytes.
 
     InMemoryBackend   dict-based, keeps materialized bytes per chunk (the
                       v0 DedupStore behaviour: O(1) base lookup during
@@ -15,6 +15,18 @@ move bytes.
                       delta chunks), materializes on read by resolving the
                       base chain, and can be reopened on an existing
                       directory for restore (byte-identical; tested).
+
+Reclamation hooks (DESIGN.md §7): recipes are *retired* (tombstoned, the
+handle slot survives so later handles stay stable) rather than removed;
+``rewrite_live`` atomically replaces the stored record set with the
+compacted one. ``FileBackend`` stamps a monotonically increasing
+**compaction epoch** in the chunk-log header and the recipe journal
+header so a reopen can tell a compacted directory from an append-only
+one; the two files are replaced by separate renames, so after a crash
+mid-compaction the epochs may disagree by one — both intermediate states
+are consistent (the new recipe set only drops retired streams, and the
+old log is a record superset of the new one), and the reopen adopts the
+larger epoch.
 """
 from __future__ import annotations
 
@@ -22,7 +34,7 @@ import json
 import os
 import struct
 from pathlib import Path
-from typing import Protocol, Sequence, runtime_checkable
+from typing import Iterable, Protocol, Sequence, runtime_checkable
 
 from repro.api.registry import register_backend
 from repro.core import delta
@@ -31,10 +43,20 @@ _REC_HEADER = struct.Struct("<BqqQ")  # kind, cid, base, payload length
 _KIND_RAW = 0
 _KIND_DELTA = 1
 
+# chunk-log file header: magic + compaction epoch. Logs written before the
+# header existed start directly with a record whose first byte is a kind
+# (0 or 1), never the magic's 'R', so both parse unambiguously.
+_LOG_MAGIC = b"RCL1"
+_LOG_HEADER = struct.Struct("<4sQ")
+
 
 @runtime_checkable
 class ContainerBackend(Protocol):
     """Byte storage behind the dedup store; see module docstring."""
+
+    # compaction epoch: starts at 0, bumped by every rewrite_live; the
+    # lifecycle layer reports it and reopen logic persists it
+    epoch: int
 
     def put_raw(self, cid: int, data: bytes) -> None: ...
 
@@ -57,13 +79,51 @@ class ContainerBackend(Protocol):
         never collide with (and silently shadow) persisted ones."""
         ...
 
+    def chunk_ids(self) -> Iterable[int]: ...
+
+    def base_of(self, cid: int) -> int:
+        """Base chunk id a stored patch decodes against; -1 for raw."""
+        ...
+
+    def payload_size(self, cid: int) -> int:
+        """Logically stored bytes (patch size for delta chunks)."""
+        ...
+
+    def record(self, cid: int) -> tuple[int, int, bytes]:
+        """The stored record as (kind, base, payload) — the payload is the
+        patch for delta chunks, not the materialized bytes."""
+        ...
+
     def add_recipe(self, chunk_ids: Sequence[int]) -> int:
         """Persist a stream recipe; returns the stream handle."""
         ...
 
     def recipe(self, handle: int) -> list[int]: ...
 
-    def num_streams(self) -> int: ...
+    def retire_recipe(self, handle: int) -> None:
+        """Tombstone a stream recipe. The handle slot survives (later
+        handles stay stable); `recipe(handle)` raises KeyError after."""
+        ...
+
+    def num_streams(self) -> int:
+        """Total handles ever issued, retired slots included."""
+        ...
+
+    def live_handles(self) -> list[int]: ...
+
+    def storage_bytes(self) -> int:
+        """Current on-disk/in-core container footprint (what compaction
+        shrinks); durable backends must flush before measuring."""
+        ...
+
+    def rewrite_live(self, records: Iterable[tuple[int, int, int, bytes]]) -> None:
+        """Atomically replace the record set with `records` (cid, kind,
+        base, payload — consumed once, so callers may stream a generator
+        and backends must not hold all payloads at once) and drop
+        retired-recipe tombstones, bumping the compaction epoch. Callers
+        guarantee every base referenced by a delta record is itself in
+        `records`."""
+        ...
 
     def flush(self) -> None: ...
 
@@ -79,7 +139,8 @@ class InMemoryBackend:
     def __init__(self) -> None:
         self._kind: dict[int, tuple] = {}   # cid -> (RAW,) | (DELTA, base, patch)
         self._data: dict[int, bytes] = {}   # cid -> materialized bytes
-        self._recipes: list[list[int]] = []
+        self._recipes: list[list[int] | None] = []
+        self.epoch = 0
 
     def put_raw(self, cid: int, data: bytes) -> None:
         self._kind[cid] = (_KIND_RAW,)
@@ -101,15 +162,62 @@ class InMemoryBackend:
     def max_chunk_id(self) -> int:
         return max(self._kind, default=-1)
 
+    def chunk_ids(self) -> list[int]:
+        return list(self._kind)
+
+    def base_of(self, cid: int) -> int:
+        rec = self._kind[cid]
+        return rec[1] if rec[0] == _KIND_DELTA else -1
+
+    def payload_size(self, cid: int) -> int:
+        rec = self._kind[cid]
+        return len(rec[2]) if rec[0] == _KIND_DELTA else len(self._data[cid])
+
+    def record(self, cid: int) -> tuple[int, int, bytes]:
+        rec = self._kind[cid]
+        if rec[0] == _KIND_DELTA:
+            return (_KIND_DELTA, rec[1], rec[2])
+        return (_KIND_RAW, -1, self._data[cid])
+
     def add_recipe(self, chunk_ids: Sequence[int]) -> int:
         self._recipes.append([int(c) for c in chunk_ids])
         return len(self._recipes) - 1
 
     def recipe(self, handle: int) -> list[int]:
-        return self._recipes[handle]
+        # no negative aliasing: delete(-1) must never retire the newest
+        if not 0 <= handle < len(self._recipes):
+            raise IndexError(f"unknown stream handle {handle}")
+        recipe = self._recipes[handle]
+        if recipe is None:
+            raise KeyError(f"stream {handle} retired")
+        return recipe
+
+    def retire_recipe(self, handle: int) -> None:
+        self.recipe(handle)                 # raises on unknown/retired
+        self._recipes[handle] = None
 
     def num_streams(self) -> int:
         return len(self._recipes)
+
+    def live_handles(self) -> list[int]:
+        return [h for h, r in enumerate(self._recipes) if r is not None]
+
+    def storage_bytes(self) -> int:
+        return sum(self.payload_size(cid) for cid in self._kind)
+
+    def rewrite_live(self, records: Iterable[tuple[int, int, int, bytes]]) -> None:
+        kept_data: dict[int, bytes] = {}
+        kept_kind: dict[int, tuple] = {}
+        for cid, kind, base, payload in records:
+            if kind == _KIND_DELTA:
+                kept_kind[cid] = (_KIND_DELTA, base, payload)
+            else:
+                kept_kind[cid] = (_KIND_RAW,)
+            # materialized content is invariant under compaction
+            kept_data[cid] = self._data[cid]
+        self._kind = kept_kind
+        self._data = kept_data
+        self.epoch += 1
 
     def flush(self) -> None:
         pass
@@ -123,14 +231,21 @@ class FileBackend:
     """Append-only on-disk containers.
 
     Layout under `path`:
-        chunks.log     [header cid base len][payload] records, appended
-        recipes.jsonl  one JSON array of chunk ids per committed stream
+        chunks.log     [RCL1 epoch] then [header cid base len][payload]
+                       records, appended
+        recipes.jsonl  {"epoch": N} header line, then one line per handle
+                       slot: a JSON array (live recipe), ``null`` (slot
+                       retired before the last compaction), or
+                       {"retire": h} (tombstone appended by a delete)
 
     An index {cid -> (kind, base, offset, length)} is rebuilt by scanning
     the log on open, so a fresh FileBackend on an existing directory can
     serve restores immediately. Materialized chunks are cached in memory
     (same RAM/speed trade as InMemoryBackend once warm); the cache fills
-    lazily on reopen.
+    lazily on reopen. ``rewrite_live`` (compaction, DESIGN.md §7.3)
+    rewrites both files through temp-file + atomic rename with the epoch
+    bumped; pre-header directories still open (epoch 0, records at
+    offset 0).
     """
 
     name = "file"
@@ -140,12 +255,21 @@ class FileBackend:
         self.path.mkdir(parents=True, exist_ok=True)
         self._log_path = self.path / "chunks.log"
         self._recipes_path = self.path / "recipes.jsonl"
+        for stale in (self._log_path, self._recipes_path):
+            tmp = stale.with_suffix(stale.suffix + ".tmp")
+            if tmp.exists():        # abandoned mid-compaction; originals win
+                tmp.unlink()
         self._index: dict[int, tuple[int, int, int, int]] = {}
         self._cache: dict[int, bytes] = {}
-        self._recipes: list[list[int]] = []
+        self._recipes: list[list[int] | None] = []
+        self.epoch = 0
         self._scan()
         self._log = open(self._log_path, "ab")
+        if self._log.tell() == 0:
+            self._log.write(_LOG_HEADER.pack(_LOG_MAGIC, self.epoch))
         self._recipes_f = open(self._recipes_path, "a")
+        if self._recipes_f.tell() == 0:
+            self._recipes_f.write(json.dumps({"epoch": self.epoch}) + "\n")
         self._log_read = open(self._log_path, "rb")
         self._log_dirty = False
 
@@ -155,10 +279,17 @@ class FileBackend:
         # so dropping it loses nothing — but indexing it would serve short
         # reads (silent corruption) and a torn recipe line would make the
         # directory unopenable.
+        log_epoch = recipes_epoch = 0
         if self._log_path.exists():
             size = self._log_path.stat().st_size
             good_end = 0
             with open(self._log_path, "rb") as f:
+                head = f.read(_LOG_HEADER.size)
+                if len(head) == _LOG_HEADER.size and head[:4] == _LOG_MAGIC:
+                    log_epoch = _LOG_HEADER.unpack(head)[1]
+                    good_end = _LOG_HEADER.size
+                else:
+                    f.seek(0)       # pre-epoch log: records start at 0
                 while True:
                     header = f.read(_REC_HEADER.size)
                     if len(header) < _REC_HEADER.size:
@@ -174,6 +305,7 @@ class FileBackend:
         if self._recipes_path.exists():
             good_end = 0
             torn = False
+            first = True
             with open(self._recipes_path, "rb") as f:
                 for line in f:
                     # an unterminated final line is torn even when it
@@ -183,14 +315,26 @@ class FileBackend:
                         break
                     if line.strip():
                         try:
-                            recipe = json.loads(line)
+                            entry = json.loads(line)
                         except json.JSONDecodeError:  # torn recipe tail
                             torn = True
                             break
-                        self._recipes.append(recipe)
+                        if isinstance(entry, dict):
+                            if first and "epoch" in entry:
+                                recipes_epoch = int(entry["epoch"])
+                            elif "retire" in entry:
+                                h = int(entry["retire"])
+                                if 0 <= h < len(self._recipes):
+                                    self._recipes[h] = None
+                        else:   # list = live recipe, null = retired slot
+                            self._recipes.append(entry)
+                    first = False
                     good_end += len(line)
             if torn:
                 os.truncate(self._recipes_path, good_end)
+        # a crash between the two compaction renames leaves the epochs one
+        # apart; both file states are consistent (see module docstring)
+        self.epoch = max(log_epoch, recipes_epoch)
 
     def _append(self, kind: int, cid: int, base: int, payload: bytes) -> None:
         self._log.write(_REC_HEADER.pack(kind, cid, base, len(payload)))
@@ -247,6 +391,21 @@ class FileBackend:
     def max_chunk_id(self) -> int:
         return max(self._index, default=-1)
 
+    def chunk_ids(self) -> list[int]:
+        return list(self._index)
+
+    def base_of(self, cid: int) -> int:
+        kind, base, _, _ = self._index[cid]
+        return base if kind == _KIND_DELTA else -1
+
+    def payload_size(self, cid: int) -> int:
+        return self._index[cid][3]
+
+    def record(self, cid: int) -> tuple[int, int, bytes]:
+        kind, base, offset, length = self._index[cid]
+        return (kind, base if kind == _KIND_DELTA else -1,
+                self._read_payload(offset, length))
+
     def add_recipe(self, chunk_ids: Sequence[int]) -> int:
         recipe = [int(c) for c in chunk_ids]
         self._recipes.append(recipe)
@@ -254,10 +413,93 @@ class FileBackend:
         return len(self._recipes) - 1
 
     def recipe(self, handle: int) -> list[int]:
-        return self._recipes[handle]
+        if not 0 <= handle < len(self._recipes):    # no negative aliasing
+            raise IndexError(f"unknown stream handle {handle}")
+        recipe = self._recipes[handle]
+        if recipe is None:
+            raise KeyError(f"stream {handle} retired")
+        return recipe
+
+    def retire_recipe(self, handle: int) -> None:
+        self.recipe(handle)                 # raises on unknown/retired
+        self._recipes[handle] = None
+        self._recipes_f.write(json.dumps({"retire": handle}) + "\n")
+        # deletes are rare and irreversible-by-intent: fsync the tombstone
+        # so a power loss cannot resurrect the stream (commits stay
+        # flush-only; resurrecting a never-reported commit is harmless)
+        self._recipes_f.flush()
+        os.fsync(self._recipes_f.fileno())
 
     def num_streams(self) -> int:
         return len(self._recipes)
+
+    def live_handles(self) -> list[int]:
+        return [h for h, r in enumerate(self._recipes) if r is not None]
+
+    def storage_bytes(self) -> int:
+        self.flush()
+        return (self._log_path.stat().st_size
+                + self._recipes_path.stat().st_size)
+
+    def _fsync_dir(self) -> None:
+        fd = os.open(self.path, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
+    def rewrite_live(self, records: Iterable[tuple[int, int, int, bytes]]) -> None:
+        """Compaction commit: stream `records` into fresh fsync'd files
+        (epoch+1) next to the originals, then atomically rename each into
+        place — recipes first, log second, with a directory fsync between
+        so the ordering survives power loss (the new recipe set with the
+        old log is restorable; a compacted log with pre-compaction recipes
+        would reference swept chunks, so that state must never become
+        durable). The old handles stay open until both renames succeed —
+        a failed rename leaves the backend fully usable on the original
+        files (the stale tmps are cleaned on the next open)."""
+        new_epoch = self.epoch + 1
+        new_index: dict[int, tuple[int, int, int, int]] = {}
+        log_tmp = self._log_path.with_suffix(".log.tmp")
+        with open(log_tmp, "wb") as f:
+            f.write(_LOG_HEADER.pack(_LOG_MAGIC, new_epoch))
+            for cid, kind, base, payload in records:
+                f.write(_REC_HEADER.pack(kind, cid, base, len(payload)))
+                new_index[cid] = (kind, base, f.tell(), len(payload))
+                f.write(payload)
+            f.flush()
+            os.fsync(f.fileno())
+        recipes_tmp = self._recipes_path.with_suffix(".jsonl.tmp")
+        with open(recipes_tmp, "w") as f:
+            f.write(json.dumps({"epoch": new_epoch}) + "\n")
+            for recipe in self._recipes:    # null keeps handle slots stable
+                f.write(json.dumps(recipe) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+        self.flush()                        # don't lose buffered appends
+        os.replace(recipes_tmp, self._recipes_path)
+        try:
+            self._fsync_dir()               # recipes durably renamed first
+            os.replace(log_tmp, self._log_path)
+            self._fsync_dir()
+        finally:
+            # the recipes path changed identity above either way: rebind
+            # the append handle so later commits/tombstones reach the file
+            # on disk even if the log rename failed (new recipes + old log
+            # is a consistent state; see module docstring)
+            self._recipes_f.close()
+            self._recipes_f = open(self._recipes_path, "a")
+
+        self._log.close()
+        self._log_read.close()
+        self.epoch = new_epoch
+        self._index = new_index
+        self._cache = {cid: d for cid, d in self._cache.items()
+                       if cid in new_index}
+        self._log = open(self._log_path, "ab")
+        self._log_read = open(self._log_path, "rb")
+        self._log_dirty = False
 
     def flush(self) -> None:
         self._log.flush()

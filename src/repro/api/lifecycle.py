@@ -1,0 +1,218 @@
+"""Space reclamation: deletion, mark-sweep collection, compaction (DESIGN.md §7).
+
+The store is append-only until something here runs. Three operations,
+each delegated to by ``DedupStore``:
+
+    delete_stream(store, handle)   retire a recipe; decref its chunks in
+                                   the refcount table (repro.api.refcount)
+                                   — a chunk another stream's patch still
+                                   decodes against stays *pinned*, never
+                                   collected out from under the patch;
+    collect(store)                 mark-sweep accounting pass: classify
+                                   every tracked chunk live/pinned/dead,
+                                   refresh StoreStats and the delta
+                                   chain-depth histogram; mutates no data;
+    compact(store)                 rewrite the container with only
+                                   recipe-live records. Live delta chunks
+                                   whose base is *not* kept (it died, or
+                                   is pinned-only and being evicted) are
+                                   **rebased**: re-encoded against their
+                                   nearest surviving ancestor, or
+                                   materialized to raw — whichever is
+                                   smaller. Safe because a patch decodes
+                                   against the base's *materialized*
+                                   bytes, which compaction never changes.
+
+Whether a delete triggers compaction automatically is a pluggable
+``ReclamationPolicy`` chosen via ``DedupConfig`` (registry key
+``policy``): "eager" compacts whenever reclaimable bytes exist,
+"threshold" when the reclaimable fraction of the container crosses a
+ratio, "never" (the default) leaves it to explicit ``compact()`` calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Protocol, runtime_checkable
+
+from repro.api import containers
+from repro.api.refcount import RefcountTable
+from repro.api.registry import register_policy
+from repro.api.types import StoreStats
+from repro.core import delta
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectReport:
+    """One mark-sweep pass over the refcount table (no data mutated)."""
+
+    live_chunks: int
+    pinned_chunks: int
+    dead_chunks: int
+    live_bytes: int
+    pinned_bytes: int
+    dead_bytes: int
+    chain_depth_hist: dict[int, int]
+
+    @property
+    def reclaimable_bytes(self) -> int:
+        """Logical payload bytes a compaction pass would drop (before any
+        growth from rebasing pinned bases into their dependents)."""
+        return self.pinned_bytes + self.dead_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionRun:
+    """What one container rewrite did; ``reclaimed_bytes`` is the measured
+    backend footprint shrink (``storage_bytes`` before minus after)."""
+
+    epoch: int
+    live_chunks: int
+    swept_chunks: int
+    swept_bytes: int            # logical payload bytes of dropped records
+    rebased_delta: int          # live patches re-encoded onto a live ancestor
+    rebased_raw: int            # live patches materialized to raw instead
+    bytes_before: int
+    bytes_after: int
+    reclaimed_bytes: int
+    seconds: float
+
+
+@runtime_checkable
+class ReclamationPolicy(Protocol):
+    name: str
+
+    def should_compact(self, stats: StoreStats) -> bool:
+        """Consulted by the store after every delete; ``stats.dead_bytes``
+        already includes pinned-only bytes (what compaction can free)."""
+        ...
+
+
+@register_policy("eager")
+class EagerPolicy:
+    """Compact after every delete that left anything reclaimable."""
+
+    name = "eager"
+
+    def should_compact(self, stats: StoreStats) -> bool:
+        return stats.dead_bytes > 0
+
+
+@register_policy("threshold")
+class ThresholdPolicy:
+    """Compact once reclaimable bytes exceed `ratio` of the container."""
+
+    name = "threshold"
+
+    def __init__(self, ratio: float = 0.25) -> None:
+        if not 0.0 < ratio <= 1.0:
+            raise ValueError(f"ratio must be in (0, 1], got {ratio}")
+        self.ratio = ratio
+
+    def should_compact(self, stats: StoreStats) -> bool:
+        total = stats.live_bytes + stats.dead_bytes
+        return total > 0 and stats.dead_bytes / total >= self.ratio
+
+
+@register_policy("never")
+class NeverPolicy:
+    """Reclaim only on explicit ``compact()`` calls (the default)."""
+
+    name = "never"
+
+    def should_compact(self, stats: StoreStats) -> bool:
+        return False
+
+
+def delete_stream(store: Any, handle: int) -> int:
+    """Retire stream `handle` and release its chunk references. Returns
+    the logical bytes the delete made reclaimable (dead + newly pinned).
+    The payloads stay on disk until a compaction; until then a new ingest
+    may dedup against them, which revives them (refcount goes back up).
+    Raises KeyError for an already-retired handle (IndexError for one the
+    store never issued)."""
+    refs: RefcountTable = store._refs
+    recipe = store.backend.recipe(handle)
+    store.backend.retire_recipe(handle)     # durable backends fsync the
+    store.backend.flush()                   # tombstone themselves
+    before = refs.dead_bytes + refs.pinned_bytes
+    for cid in recipe:
+        refs.decref_recipe(cid)
+    freed = (refs.dead_bytes + refs.pinned_bytes) - before
+    store._refresh_lifecycle_stats()
+    if store.policy is not None and store.policy.should_compact(store.stats):
+        compact(store)
+    return freed
+
+
+def collect(store: Any) -> CollectReport:
+    """Mark-sweep accounting: classify chunks, refresh lifecycle stats."""
+    refs: RefcountTable = store._refs
+    live = refs.live_cids()
+    pinned = refs.pinned_cids()
+    dead = refs.dead_cids()
+    hist = refs.chain_depth_hist()
+    report = CollectReport(
+        live_chunks=len(live), pinned_chunks=len(pinned),
+        dead_chunks=len(dead), live_bytes=refs.live_bytes,
+        pinned_bytes=refs.pinned_bytes, dead_bytes=refs.dead_bytes,
+        chain_depth_hist=hist)
+    store._refresh_lifecycle_stats()
+    store.stats.chain_depth_hist = dict(hist)
+    return report
+
+
+def compact(store: Any) -> CompactionRun:
+    """Rewrite the container without dead/pinned records, rebasing live
+    patches whose base is evicted; see module docstring."""
+    t0 = time.perf_counter()
+    refs: RefcountTable = store._refs
+    backend = store.backend
+    keep = set(refs.live_cids())
+    swept = [cid for cid in refs.chunk_ids() if cid not in keep]
+    swept_bytes = sum(refs.size_of(cid) for cid in swept)
+
+    rebased = {"delta": 0, "raw": 0}
+
+    def live_records():
+        # streamed, not a list: the backend consumes one record at a time,
+        # so compaction RAM is one payload (plus the rebase working set),
+        # not the whole live container
+        for cid in sorted(keep):
+            kind, base, payload = backend.record(cid)
+            if kind == containers._KIND_DELTA and base not in keep:
+                # nearest surviving ancestor: materialized content is
+                # invariant under compaction, so old patch semantics carry
+                anc = refs.base_of(base)
+                while anc >= 0 and anc not in keep:
+                    anc = refs.base_of(anc)
+                raw = backend.get(cid)
+                patch = (delta.encode(raw, backend.get(anc))
+                         if anc >= 0 else None)
+                if patch is not None and len(patch) < len(raw):
+                    kind, base, payload = containers._KIND_DELTA, anc, patch
+                    rebased["delta"] += 1
+                else:
+                    kind, base, payload = containers._KIND_RAW, -1, raw
+                    rebased["raw"] += 1
+            yield cid, kind, base, payload
+
+    bytes_before = backend.storage_bytes()
+    backend.rewrite_live(live_records())
+    bytes_after = backend.storage_bytes()
+    rebased_delta, rebased_raw = rebased["delta"], rebased["raw"]
+
+    # the durable state changed shape: rederive the refcount view from it
+    # and forget digests of swept payloads so future ingests cannot dedup
+    # against chunks that no longer exist
+    store._refs = RefcountTable.rebuild(backend)
+    store._by_digest = {d: c for d, c in store._by_digest.items() if c in keep}
+    store._refresh_lifecycle_stats()
+    store.stats.reclaimed_bytes += bytes_before - bytes_after
+
+    return CompactionRun(
+        epoch=backend.epoch, live_chunks=len(keep), swept_chunks=len(swept),
+        swept_bytes=swept_bytes, rebased_delta=rebased_delta,
+        rebased_raw=rebased_raw, bytes_before=bytes_before,
+        bytes_after=bytes_after, reclaimed_bytes=bytes_before - bytes_after,
+        seconds=time.perf_counter() - t0)

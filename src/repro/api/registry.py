@@ -11,6 +11,8 @@ evolve independently):
                 ``chunk(stream) -> (chunks, stream_hashes)`` — the store
                 dispatches through ``repro.api.store.chunk_with``
     backends    "memory", "file" container backends
+    policies    "eager", "threshold", "never" reclamation policies
+                (DESIGN.md §7.4) — when a delete should trigger compaction
 
 Built-ins register themselves via the decorators at their definition site
 (e.g. ``@register_index("exact")`` in core/similarity.py); third-party
@@ -33,6 +35,7 @@ _DETECTORS: dict[str, Callable[..., Any]] = {}
 _INDEXES: dict[str, Callable[..., Any]] = {}
 _CHUNKERS: dict[str, Callable[..., Any]] = {}
 _BACKENDS: dict[str, Callable[..., Any]] = {}
+_POLICIES: dict[str, Callable[..., Any]] = {}
 
 _builtins_loaded = False
 
@@ -42,7 +45,7 @@ def _ensure_builtins() -> None:
     global _builtins_loaded
     if _builtins_loaded:
         return
-    from repro.api import containers  # noqa: F401  (backends)
+    from repro.api import containers, lifecycle  # noqa: F401  (backends, policies)
     from repro.core import chunking, pipeline, similarity  # noqa: F401
     _CHUNKERS.setdefault("fastcdc", chunking.ChunkerConfig)
     # only after every import succeeded — a failure above must surface
@@ -87,13 +90,16 @@ register_detector = _make_register(_DETECTORS, "detector")
 register_index = _make_register(_INDEXES, "index")
 register_chunker = _make_register(_CHUNKERS, "chunker")
 register_backend = _make_register(_BACKENDS, "backend")
+register_policy = _make_register(_POLICIES, "policy")
 
 get_detector = _make_get(_DETECTORS, "detector")
 get_index = _make_get(_INDEXES, "index")
 get_chunker = _make_get(_CHUNKERS, "chunker")
 get_backend = _make_get(_BACKENDS, "backend")
+get_policy = _make_get(_POLICIES, "policy")
 
 available_detectors = _make_available(_DETECTORS)
 available_indexes = _make_available(_INDEXES)
 available_chunkers = _make_available(_CHUNKERS)
 available_backends = _make_available(_BACKENDS)
+available_policies = _make_available(_POLICIES)

@@ -26,6 +26,14 @@ which is safe — the payloads exist).
 The v0 surface (``ingest``, integer stream indexes for ``restore``)
 remains as thin wrappers: handles are assigned densely in commit order, so
 v0 callers keep working unchanged.
+
+Space reclamation (DESIGN.md §7) is delegated to ``repro.api.lifecycle``:
+``delete(handle)`` retires a stream and decrefs its chunks (chunks another
+stream's patch depends on stay pinned), ``collect()`` is the mark-sweep
+accounting pass, ``compact()`` rewrites the container without dead
+records, rebasing surviving patches whose base was evicted. The
+``RefcountTable`` is rebuilt from the backend on open, so a store reopened
+on an existing directory can delete/compact streams it did not ingest.
 """
 from __future__ import annotations
 
@@ -34,8 +42,9 @@ from typing import Any, Sequence
 
 import numpy as np
 
-from repro.api import containers
+from repro.api import containers, lifecycle
 from repro.api.detect import is_staged
+from repro.api.refcount import RefcountTable
 from repro.api.types import DetectBatch, IngestReport, StoreStats
 from repro.core import chunking, delta, hashing
 
@@ -100,16 +109,20 @@ class DedupStore:
 
     def __init__(self, detector: Any,
                  chunker_cfg: chunking.ChunkerConfig | None = None,
-                 backend: containers.ContainerBackend | None = None):
+                 backend: containers.ContainerBackend | None = None,
+                 policy: Any | None = None):
         self.detector = detector
         self.cfg = chunker_cfg or chunking.ChunkerConfig()
         self.backend = backend if backend is not None else containers.InMemoryBackend()
+        self.policy = policy if policy is not None else lifecycle.NeverPolicy()
         self.stats = StoreStats()
         self.reports: list[IngestReport] = []
         self._by_digest: dict[bytes, int] = {}
         # a reopened (file-backed) backend already holds chunk ids; start
         # past them so new chunks never shadow persisted records
         self._next_id = self.backend.max_chunk_id() + 1
+        self._refs = RefcountTable.rebuild(self.backend)
+        self._refresh_lifecycle_stats()
 
     def fit(self, training_streams: Sequence[bytes]) -> None:
         t0 = time.perf_counter()
@@ -190,14 +203,18 @@ class DedupStore:
                 if len(d) < ck.length:
                     stored = len(d) + 8  # + recipe metadata
                     backend.put_delta(cid, base, d, data=ck.data)
+                    self._refs.track(cid, base, len(d))
                     delta_chunks += 1
             if stored is None:
                 stored = ck.length
                 backend.put_raw(cid, ck.data)
+                self._refs.track(cid, -1, ck.length)
                 raw_chunks += 1
             self._by_digest[digests[i]] = cid
             bytes_stored += stored
         handle = backend.add_recipe(recipe)
+        for cid in recipe:      # only now do the chunks become live
+            self._refs.incref_recipe(cid)
         backend.flush()
 
         if staged:
@@ -212,14 +229,37 @@ class DedupStore:
             chunk_seconds=chunk_seconds, delta_seconds=delta_seconds)
         self.reports.append(report)
         self.stats.absorb(report)
+        self._refresh_lifecycle_stats()
         return report
 
     def restore(self, handle: int) -> bytes:
-        """Reconstruct a committed stream byte-for-byte by its handle."""
+        """Reconstruct a committed stream byte-for-byte by its handle.
+        Raises KeyError once the stream has been deleted."""
         out = bytearray()
         for cid in self.backend.recipe(handle):
             out.extend(self.backend.get(cid))
         return bytes(out)
+
+    # --- space reclamation (repro.api.lifecycle, DESIGN.md §7) ---------------
+
+    def delete(self, handle: int) -> int:
+        """Retire a committed stream; returns the logical bytes the delete
+        made reclaimable. May trigger compaction per the store policy."""
+        return lifecycle.delete_stream(self, handle)
+
+    def collect(self) -> lifecycle.CollectReport:
+        """Mark-sweep accounting pass (mutates no data)."""
+        return lifecycle.collect(self)
+
+    def compact(self) -> lifecycle.CompactionRun:
+        """Rewrite the container without dead records, rebasing survivors."""
+        return lifecycle.compact(self)
+
+    def _refresh_lifecycle_stats(self) -> None:
+        # dead_bytes = everything compaction can drop: unreferenced records
+        # plus records pinned only as delta bases (rebasing frees them)
+        self.stats.live_bytes = self._refs.live_bytes
+        self.stats.dead_bytes = self._refs.dead_bytes + self._refs.pinned_bytes
 
     def close(self) -> None:
         self.backend.close()

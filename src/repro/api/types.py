@@ -103,7 +103,16 @@ class IngestReport:
 @dataclasses.dataclass
 class StoreStats:
     """Store-lifetime aggregate: the sum of every committed IngestReport
-    plus offline model-fit time (invariant tested in tests/test_api.py)."""
+    plus offline model-fit time (invariant tested in tests/test_api.py).
+
+    The lifecycle fields (DESIGN.md §7) are maintained by the reclamation
+    subsystem, not by ``absorb``: ``live_bytes``/``dead_bytes`` mirror the
+    refcount table after every commit/delete/collect (``dead_bytes``
+    counts everything a compaction pass can drop — unreferenced records
+    plus records pinned only as delta bases, which rebasing frees);
+    ``reclaimed_bytes`` accumulates the measured container shrink across
+    compactions; ``chain_depth_hist`` is the live delta-chain depth
+    histogram from the last ``collect()``."""
 
     bytes_in: int = 0
     bytes_stored: int = 0
@@ -115,6 +124,10 @@ class StoreStats:
     chunk_seconds: float = 0.0
     delta_seconds: float = 0.0
     fit_seconds: float = 0.0
+    live_bytes: int = 0
+    dead_bytes: int = 0
+    reclaimed_bytes: int = 0
+    chain_depth_hist: dict[int, int] = dataclasses.field(default_factory=dict)
 
     @property
     def dcr(self) -> float:

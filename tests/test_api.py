@@ -47,6 +47,29 @@ def _run_store(store, versions):
     return store.stats
 
 
+# --- module docstring quick start --------------------------------------------
+
+def test_api_quickstart_docstring_runs():
+    """The repro.api docstring's quick-start snippet must execute verbatim
+    (it drifted from the real session API once; never again)."""
+    import re
+    import textwrap
+
+    match = re.search(r"Quick start:\n\n((?:    .*\n|\n)+)", api.__doc__)
+    assert match, "quick-start block missing from repro.api docstring"
+    snippet = textwrap.dedent(match.group(1))
+    for call in ("build_store", "open_stream", "restore", "delete",
+                 "collect", "compact"):
+        assert call in snippet
+    rng = np.random.default_rng(0)
+    namespace = {"first_version":
+                 rng.integers(0, 256, 96 * 1024, dtype=np.uint8).tobytes()}
+    exec(compile(snippet, "<repro.api quick start>", "exec"), namespace)
+    store = namespace["store"]
+    assert store.stats.reclaimed_bytes > 0      # the reclaim really happened
+    assert store.stats.live_bytes == 0
+
+
 # --- registry + config construction -----------------------------------------
 
 def test_registry_lists_builtins():

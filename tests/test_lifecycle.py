@@ -1,0 +1,454 @@
+"""Space reclamation subsystem (DESIGN.md §7): stream deletion with
+delta-chain refcounting, mark-sweep collect, container compaction with
+rebase, reclamation policies, and FileBackend epoch/reopen behaviour."""
+import os
+
+import numpy as np
+import pytest
+
+from repro import api
+
+CHUNK = 4096
+N_CHUNKS = 8
+
+
+# --- deterministic fixtures --------------------------------------------------
+
+class FixedChunker:
+    """Fixed-size chunking — keeps chunk boundaries position-stable so the
+    ChainDetector below can build delta chains of exactly known depth."""
+
+    def __init__(self, size=CHUNK):
+        self.size = size
+
+    def chunk(self, stream):
+        from repro.core import chunking, hashing
+        hashes = hashing.gear_hashes_np(np.frombuffer(stream, np.uint8))
+        chunks = [chunking.Chunk(off, len(stream[off:off + self.size]),
+                                 stream[off:off + self.size])
+                  for off in range(0, len(stream), self.size)]
+        return chunks, hashes
+
+
+class ChainDetector:
+    """Deltas every chunk against the same-position chunk of the previous
+    stream — stream k's chunks sit at delta-chain depth exactly k."""
+
+    name = "chain"
+
+    def __init__(self):
+        self._prev = None
+
+    def fit(self, training_streams, cfg):
+        pass
+
+    def detect(self, chunks, ids, is_new, stream_hashes):
+        ids = np.asarray(ids, np.int64)
+        out = np.full(len(chunks), -1, np.int64)
+        if self._prev is not None:
+            k = min(len(self._prev), len(chunks))
+            out[:k] = self._prev[:k]
+        out[~np.asarray(is_new, bool)] = -1
+        out[out == ids] = -1
+        self._prev = ids.copy()
+        return out
+
+
+def _rand(nbytes, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 256, nbytes, dtype=np.uint8).tobytes()
+
+
+def _edit(data, seed, nedits=6, span=40):
+    """A lightly edited copy (same length, so fixed chunks stay aligned)."""
+    rng = np.random.default_rng(seed)
+    buf = bytearray(data)
+    for _ in range(nedits):
+        p = int(rng.integers(0, len(buf) - span))
+        buf[p:p + span] = _rand(span, int(rng.integers(1 << 30)))
+    return bytes(buf)
+
+
+def _chain_versions(generations=3, seed=7):
+    """v0 random; every later generation edits *every* chunk of the one
+    before, so with ChainDetector each generation is all-delta."""
+    versions = [_rand(N_CHUNKS * CHUNK, seed)]
+    rng = np.random.default_rng(seed + 1)
+    for _ in range(generations - 1):
+        buf = bytearray(versions[-1])
+        for c in range(N_CHUNKS):
+            p = c * CHUNK + int(rng.integers(0, CHUNK - 16))
+            buf[p:p + 16] = _rand(16, int(rng.integers(1 << 30)))
+        versions.append(bytes(buf))
+    return versions
+
+
+def _chain_store(backend=None):
+    return api.DedupStore(ChainDetector(), FixedChunker(), backend=backend)
+
+
+def _ingest(store, data):
+    session = store.open_stream()
+    session.write(data)
+    return session.commit().handle
+
+
+def _disk_bytes(path):
+    return sum(os.stat(path / f).st_size
+               for f in ("chunks.log", "recipes.jsonl"))
+
+
+# --- ISSUE acceptance: end-to-end reclamation on a FileBackend ---------------
+
+def test_end_to_end_reclamation_property(tmp_path):
+    """Ingest 3 overlapping streams, delete the one whose chunks serve as
+    delta bases for the survivors, collect + compact on a FileBackend:
+    survivors restore byte-identical, the on-disk container strictly
+    shrinks, and StoreStats.reclaimed_bytes matches the measured delta."""
+    shared = _rand(12 * CHUNK, seed=1)
+    s1 = shared + _rand(20 * CHUNK, seed=2)     # unique tail dies with s1
+    s2 = _edit(shared, seed=3)                  # edit chunks delta-base on s1
+    s3 = _edit(shared, seed=4)
+    cfg = api.DedupConfig.from_dict(
+        {"detector": "finesse", "chunker_args": {"avg_size": CHUNK},
+         "backend": "file", "backend_args": {"path": str(tmp_path)}})
+    store = api.build_store(cfg)
+    store.fit([s1])
+    h1, h2, h3 = (_ingest(store, s) for s in (s1, s2, s3))
+    assert store.stats.delta_chunks > 0
+
+    store.delete(h1)
+    report = store.collect()
+    assert report.pinned_chunks > 0         # s1 chunks held only as bases
+    assert store.stats.dead_bytes == report.reclaimable_bytes > 0
+
+    store.backend.flush()
+    before = _disk_bytes(tmp_path)
+    run = store.compact()
+    after = _disk_bytes(tmp_path)
+
+    assert run.rebased_delta + run.rebased_raw > 0   # bases actually died
+    assert after < before                            # strictly shrinks
+    assert run.reclaimed_bytes == before - after
+    assert store.stats.reclaimed_bytes == before - after
+    assert store.restore(h2) == s2
+    assert store.restore(h3) == s3
+    with pytest.raises(KeyError):
+        store.restore(h1)
+    assert store.stats.dead_bytes == 0
+    store.close()
+
+
+# --- refcount invariants -----------------------------------------------------
+
+def test_pinned_base_survives_until_dependent_dies():
+    store = _chain_store()
+    v0, v1 = _chain_versions(2)
+    h0 = _ingest(store, v0)
+    h1 = _ingest(store, v1)
+    refs = store._refs
+    assert all(refs.is_live(c) for c in refs.chunk_ids())
+
+    store.delete(h0)            # v1 patches decode against v0's chunks
+    assert len(refs.pinned_cids()) == N_CHUNKS
+    assert not refs.dead_cids()                 # nothing is reclaim-unsafe
+    assert store.restore(h1) == v1
+
+    store.delete(h1)            # last dependent gone -> whole chain dead
+    assert not refs.pinned_cids()
+    assert len(refs.dead_cids()) == 2 * N_CHUNKS
+
+
+def test_dedup_against_dead_chunk_revives_its_chain():
+    store = _chain_store()
+    v0, v1 = _chain_versions(2)
+    _ingest(store, v0)
+    h1 = _ingest(store, v1)
+    store.delete(h1)
+    dead = store.stats.dead_bytes
+    assert dead > 0
+    h1b = _ingest(store, v1)    # same content -> dedups against dead chunks
+    assert store.reports[-1].dup_chunks == N_CHUNKS
+    assert store.stats.dead_bytes == 0          # revived, chain and all
+    store.compact()
+    assert store.restore(h1b) == v1
+
+
+def test_refcount_underflow_and_double_track_raise():
+    t = api.RefcountTable()
+    t.track(1, -1, 100)
+    with pytest.raises(ValueError, match="already tracked"):
+        t.track(1, -1, 100)
+    t.incref_recipe(1)
+    t.decref_recipe(1)
+    with pytest.raises(ValueError, match="underflow"):
+        t.decref_recipe(1)
+
+
+def test_delete_semantics():
+    store = _chain_store()
+    v0, v1 = _chain_versions(2)
+    h0 = _ingest(store, v0)
+    _ingest(store, v1)
+    store.delete(h0)
+    with pytest.raises(KeyError):
+        store.restore(h0)
+    with pytest.raises(KeyError):
+        store.delete(h0)                        # double delete
+    with pytest.raises(IndexError):
+        store.delete(99)                        # never issued
+    with pytest.raises(IndexError):
+        store.delete(-1)                        # must not alias the newest
+    assert store.restore(1) == v1
+
+
+def test_chain_depth_histogram_and_rebase_to_live_ancestor():
+    """Deleting the middle generation of a depth-2 chain rebases the
+    grandchild patches onto the surviving grandparent."""
+    store = _chain_store()
+    v0, v1, v2 = _chain_versions(3)
+    h0 = _ingest(store, v0)
+    h1 = _ingest(store, v1)
+    h2 = _ingest(store, v2)
+    assert store.collect().chain_depth_hist == {0: N_CHUNKS, 1: N_CHUNKS,
+                                                2: N_CHUNKS}
+    store.delete(h1)
+    run = store.compact()
+    assert run.swept_chunks == N_CHUNKS
+    assert run.rebased_delta == N_CHUNKS        # re-encoded, not raw'd
+    assert store.restore(h0) == v0
+    assert store.restore(h2) == v2
+    assert store.collect().chain_depth_hist == {0: N_CHUNKS, 1: N_CHUNKS}
+    assert store.stats.chain_depth_hist == {0: N_CHUNKS, 1: N_CHUNKS}
+
+
+def test_rebase_skips_multiple_dead_hops_and_onto_rebased_ancestor():
+    """v0<-v1<-v2<-v3: deleting v1+v2 rebases v3 across two dead hops onto
+    v0; deleting v0+v2 makes v3 rebase onto v1 while v1 itself is being
+    rebased to raw in the same run (patches decode against materialized
+    bytes, so both are sound)."""
+    store = _chain_store()
+    versions = _chain_versions(4)
+    handles = [_ingest(store, v) for v in versions]
+    store.delete(handles[1])
+    store.delete(handles[2])
+    run = store.compact()
+    assert run.swept_chunks == 2 * N_CHUNKS
+    assert run.rebased_delta == N_CHUNKS
+    assert store.restore(handles[0]) == versions[0]
+    assert store.restore(handles[3]) == versions[3]
+
+    store = _chain_store()
+    versions = _chain_versions(4)
+    handles = [_ingest(store, v) for v in versions]
+    store.delete(handles[0])
+    store.delete(handles[2])
+    run = store.compact()
+    assert run.rebased_raw == N_CHUNKS          # v1: no surviving ancestor
+    assert run.rebased_delta == N_CHUNKS        # v3: onto freshly-raw'd v1
+    assert store.restore(handles[1]) == versions[1]
+    assert store.restore(handles[3]) == versions[3]
+    assert store.collect().chain_depth_hist == {0: N_CHUNKS, 1: N_CHUNKS}
+
+
+def test_memory_and_file_backends_agree_on_lifecycle(tmp_path):
+    stores = [_chain_store(),
+              _chain_store(backend=api.FileBackend(tmp_path))]
+    versions = _chain_versions(3)
+    outcomes = []
+    for store in stores:
+        handles = [_ingest(store, v) for v in versions]
+        store.delete(handles[0])
+        rep = store.collect()
+        run = store.compact()
+        outcomes.append((rep.live_chunks, rep.pinned_chunks, rep.dead_chunks,
+                         run.swept_chunks, run.rebased_delta, run.rebased_raw,
+                         [store.restore(h) for h in handles[1:]]))
+    assert outcomes[0] == outcomes[1]
+
+
+# --- policies ----------------------------------------------------------------
+
+def test_policy_registry_and_config_round_trip():
+    assert {"eager", "threshold", "never"} <= set(api.available_policies())
+    cfg = api.DedupConfig.from_dict(
+        {"detector": "dedup-only", "policy": "threshold",
+         "policy_args": {"ratio": 0.5}})
+    assert api.DedupConfig.from_dict(cfg.to_dict()) == cfg
+    assert isinstance(api.build_policy(cfg), api.ThresholdPolicy)
+    with pytest.raises(KeyError, match="available"):
+        api.build_policy(api.DedupConfig.from_dict({"policy": "no-such"}))
+    with pytest.raises(ValueError, match="ratio"):
+        api.ThresholdPolicy(ratio=0.0)
+
+
+@pytest.mark.parametrize("policy,policy_args,compacts", [
+    ("eager", {}, True),
+    ("never", {}, False),
+    ("threshold", {"ratio": 0.3}, True),    # delete frees ~half the store
+    ("threshold", {"ratio": 0.9}, False),
+])
+def test_policy_governs_auto_compaction(policy, policy_args, compacts):
+    cfg = api.DedupConfig.from_dict(
+        {"detector": "dedup-only", "chunker_args": {"avg_size": CHUNK},
+         "policy": policy, "policy_args": policy_args})
+    store = api.build_store(cfg)
+    h0 = _ingest(store, _rand(16 * CHUNK, seed=11))
+    _ingest(store, _rand(16 * CHUNK, seed=12))      # disjoint content
+    store.delete(h0)
+    if compacts:
+        assert store.backend.epoch == 1
+        assert store.stats.reclaimed_bytes > 0
+        assert store.stats.dead_bytes == 0
+    else:
+        assert store.backend.epoch == 0
+        assert store.stats.reclaimed_bytes == 0
+        assert store.stats.dead_bytes > 0
+
+
+# --- FileBackend: compaction epoch, reopen, torn tails (ISSUE satellites) ----
+
+def test_file_backend_reopen_after_compaction(tmp_path):
+    backend = api.FileBackend(tmp_path)
+    store = _chain_store(backend=backend)
+    v0, v1, v2 = _chain_versions(3)
+    h0 = _ingest(store, v0)
+    h1 = _ingest(store, v1)
+    h2 = _ingest(store, v2)
+    store.delete(h1)
+    store.compact()
+    assert backend.epoch == 1
+    store.close()
+
+    reopened = api.FileBackend(tmp_path)            # fresh scan of the dir
+    assert reopened.epoch == 1
+    assert reopened.num_streams() == 3              # handle slots stable
+    assert reopened.live_handles() == [h0, h2]
+    store2 = _chain_store(backend=reopened)         # refcounts rebuilt
+    assert store2.stats.dead_bytes == 0
+    assert store2.restore(h0) == v0
+    assert store2.restore(h2) == v2
+    with pytest.raises(KeyError):
+        store2.restore(h1)
+    h3 = _ingest(store2, _rand(N_CHUNKS * CHUNK, seed=42))
+    assert store2.restore(h3) != v0
+    store2.delete(h0)                               # delete a pre-reopen stream
+    store2.compact()
+    assert reopened.epoch == 2
+    assert store2.restore(h2) == v2
+    store2.close()
+
+
+def test_compacted_log_survives_torn_tail(tmp_path):
+    """Regression: torn-tail truncation must still work on a log that has
+    been compacted (header present, records rewritten)."""
+    backend = api.FileBackend(tmp_path)
+    store = _chain_store(backend=backend)
+    v0, v1, v2 = _chain_versions(3)
+    h0 = _ingest(store, v0)
+    h1 = _ingest(store, v1)
+    store.delete(h1)
+    store.compact()
+    h2 = _ingest(store, v2)                         # appended post-compaction
+    store.close()
+
+    log = tmp_path / "chunks.log"
+    recipes = tmp_path / "recipes.jsonl"
+    log.write_bytes(log.read_bytes()[:-11])         # torn payload
+    recipes.write_bytes(recipes.read_bytes()[:-5])  # torn recipe line
+
+    reopened = api.FileBackend(tmp_path)
+    assert reopened.epoch == 1                      # header survived the tear
+    assert reopened.live_handles() == [h0]          # torn h2 dropped
+    store2 = _chain_store(backend=reopened)
+    assert store2.restore(h0) == v0
+    h2b = _ingest(store2, v2)                       # appends still work...
+    assert store2.restore(h2b) == v2
+    store2.close()
+    third = api.FileBackend(tmp_path)               # ...and re-scan cleanly
+    assert third.epoch == 1
+    assert b"".join(third.get(c) for c in third.recipe(h2b)) == v2
+    third.close()
+
+
+def test_delete_tombstone_is_durable_without_close(tmp_path):
+    """The retire tombstone must hit disk when delete() returns — a crash
+    right after a delete must not resurrect the stream on reopen."""
+    backend = api.FileBackend(tmp_path)
+    store = _chain_store(backend=backend)
+    v0, v1 = _chain_versions(2)
+    h0 = _ingest(store, v0)
+    h1 = _ingest(store, v1)
+    store.delete(h0)
+    # no close()/flush(): a second scan of the directory simulates the
+    # post-crash reopen
+    crashed = api.FileBackend(tmp_path)
+    assert crashed.live_handles() == [h1]
+    crashed.close()
+    store.close()
+
+
+def test_interrupted_compaction_rename_is_recoverable(tmp_path):
+    """A crash between the two compaction renames leaves the epochs one
+    apart; reopen must still serve every live stream (the old log is a
+    record superset of the compacted one)."""
+    backend = api.FileBackend(tmp_path)
+    store = _chain_store(backend=backend)
+    v0, v1 = _chain_versions(2)
+    h0 = _ingest(store, v0)
+    h1 = _ingest(store, v1)
+    old_log = (tmp_path / "chunks.log").read_bytes()
+    store.delete(h0)
+    store.compact()
+    store.close()
+    # simulate the crash: recipes renamed (epoch 1), log still pre-compaction
+    (tmp_path / "chunks.log").write_bytes(old_log)
+
+    reopened = api.FileBackend(tmp_path)
+    assert reopened.epoch == 1                      # adopts the larger epoch
+    store2 = _chain_store(backend=reopened)
+    assert store2.restore(h1) == v1
+    assert store2.stats.dead_bytes > 0              # old records resurfaced...
+    store2.compact()                                # ...and compact again
+    assert reopened.epoch == 2
+    assert store2.restore(h1) == v1
+    store2.close()
+
+
+def test_failed_log_rename_leaves_backend_usable(tmp_path, monkeypatch):
+    """If the chunks.log rename fails after the recipes rename succeeded,
+    the backend must keep serving (new recipes + old log is consistent)
+    and later commits must reach the on-disk recipes file."""
+    backend = api.FileBackend(tmp_path)
+    store = _chain_store(backend=backend)
+    v0, v1 = _chain_versions(2)
+    h0 = _ingest(store, v0)
+    h1 = _ingest(store, v1)
+    store.delete(h0)
+
+    real_replace = os.replace
+
+    def flaky(src, dst):
+        if str(dst).endswith("chunks.log"):
+            raise OSError(28, "No space left on device")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "replace", flaky)
+    with pytest.raises(OSError, match="No space"):
+        store.compact()
+    monkeypatch.undo()
+
+    assert store.restore(h1) == v1              # still serving reads
+    h2 = _ingest(store, v1)                     # and taking commits
+    store.close()
+    reopened = api.FileBackend(tmp_path)        # epoch-mismatch reopen
+    assert sorted(reopened.live_handles()) == [h1, h2]
+    store2 = _chain_store(backend=reopened)
+    store2.compact()                            # next compaction succeeds
+    assert store2.restore(h1) == v1
+    assert store2.restore(h2) == v1
+    store2.close()
+
+
+# The any-interleaving restore/refcount property lives in
+# tests/test_lifecycle_property.py (hypothesis-gated, repo convention).
