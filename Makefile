@@ -4,7 +4,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: dev-deps test test-lifecycle ci bench gc-bench quickstart
+.PHONY: dev-deps test test-lifecycle ci bench bench-smoke gc-bench \
+        ingest-bench quickstart
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -21,9 +22,18 @@ ci: dev-deps test test-lifecycle
 bench:
 	$(PYTHON) -m benchmarks.run --quick
 
+# tiny-input run of EVERY section; exits nonzero if any section raises,
+# so the perf plumbing cannot silently rot
+bench-smoke:
+	$(PYTHON) -m benchmarks.run --smoke
+
 # delete+compact throughput smoke; writes BENCH_GC.json for perf tracking
 gc-bench:
 	$(PYTHON) -m benchmarks.bench_gc --quick
+
+# end-to-end ingest MB/s + stage breakdown; writes BENCH_INGEST.json
+ingest-bench:
+	$(PYTHON) -m benchmarks.bench_ingest
 
 quickstart:
 	$(PYTHON) examples/quickstart.py

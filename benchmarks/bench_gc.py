@@ -73,6 +73,7 @@ def run(base_size: int = 6 << 20, versions: int = 6, retain: int = 3,
                     "rebased_delta": run_rep.rebased_delta,
                     "rebased_raw": run_rep.rebased_raw,
                     "reclaimed_mb": round(run_rep.reclaimed_bytes / 2**20, 3),
+                    "skipped": run_rep.skipped,
                     "dead_mb_marked": round(
                         collect_rep.reclaimable_bytes / 2**20, 3),
                     "churn_mbps": round(size_before / 2**20 / max(1e-9,

@@ -1,0 +1,102 @@
+"""End-to-end ingest throughput + stage breakdown (DESIGN.md §8).
+
+One row per (workload, detector) on the sql_dump and vmdk workloads,
+ingesting a version chain through a file-backed store and reporting
+MB/s end to end plus where the time went (chunk / extract / score /
+observe / delta / store). ``card-unfused`` is the per-chunk numpy
+extraction baseline (``fused=False``) kept so the fused-path speedup
+stays measurable as the code evolves; ``warm_mbps`` excludes the first
+version (jit warm-up), which is the steady-state number the shape
+buckets are supposed to protect.
+
+Rows land in BENCH_INGEST.json so future PRs have a perf trajectory.
+
+    PYTHONPATH=src python -m benchmarks.bench_ingest [--quick] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from pathlib import Path
+
+from benchmarks import common
+from repro import api
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_INGEST.json"
+
+WORKLOADS = ("sql_dump", "vmdk")
+DETECTORS = ("dedup-only", "finesse", "card", "card-unfused")
+
+
+def _config(kind: str, avg_size: int) -> api.DedupConfig:
+    base = "card" if kind == "card-unfused" else kind
+    cfg = common.detector_config(base, avg_size=avg_size)
+    if kind == "card-unfused":
+        cfg.detector_args["fused"] = False
+    return cfg
+
+
+def run(base_size: int = 6 << 20, versions: int = 4,
+        detectors=DETECTORS, workloads=WORKLOADS,
+        avg_size: int = 8192) -> list[dict]:
+    rows = []
+    for wl in workloads:
+        vs = common.make_versions(wl, base_size, versions)
+        for kind in detectors:
+            cfg = _config(kind, avg_size)
+            with tempfile.TemporaryDirectory() as tmp:
+                cfg.backend, cfg.backend_args = "file", {"path": tmp}
+                store = api.build_store(cfg)
+                store.fit(list(vs[:1]))
+                walls = []
+                for v in vs:
+                    t0 = time.perf_counter()
+                    session = store.open_stream()
+                    session.write(v)
+                    session.commit()
+                    walls.append(time.perf_counter() - t0)
+                wall = sum(walls)
+                # steady state: the first commit pays the jit warm-up the
+                # shape buckets then amortize away
+                warm_mb = sum(r.bytes_in for r in store.reports[1:]) / 2**20
+                warm_s = sum(walls[1:])
+                s = store.stats
+                mb = s.bytes_in / 2**20
+                rows.append({
+                    "bench": "ingest", "workload": wl, "detector": kind,
+                    "versions": versions, "avg_size": avg_size,
+                    "bytes_in_mb": round(mb, 2),
+                    "ingest_mbps": round(mb / max(1e-9, wall), 2),
+                    "warm_mbps": round(warm_mb / max(1e-9, warm_s), 2),
+                    "chunk_s": round(s.chunk_seconds, 4),
+                    "extract_s": round(s.extract_seconds, 4),
+                    "score_s": round(s.score_seconds, 4),
+                    "observe_s": round(s.observe_seconds, 4),
+                    "delta_s": round(s.delta_seconds, 4),
+                    "store_s": round(s.store_seconds, 4),
+                    "dcr": round(s.dcr, 4),
+                })
+                store.close()
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workloads (CI smoke)")
+    ap.add_argument("--json", default=str(JSON_PATH),
+                    help="where to write the JSON row dump")
+    args = ap.parse_args()
+    if args.quick:
+        rows = run(base_size=2 << 20, versions=3)
+    else:
+        rows = run()
+    common.emit(rows, "ingest")
+    Path(args.json).write_text(json.dumps(rows, indent=2) + "\n")
+    print(f"# wrote {len(rows)} rows to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

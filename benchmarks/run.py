@@ -13,18 +13,23 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller workloads (CI-speed)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny workloads, every section, fail on first "
+                         "raise (perf-plumbing CI gate; implies --quick)")
     ap.add_argument("--only", default=None,
                     help="comma list: dcr,time,dims,kernels,ckpt,ablation,"
-                         "roofline,gc")
+                         "roofline,gc,ingest")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    quick = args.quick or args.smoke
 
     from benchmarks import (bench_ablation, bench_ckpt_store, bench_dcr,
-                            bench_dims, bench_gc, bench_kernels,
-                            bench_roofline, bench_time, common)
+                            bench_dims, bench_gc, bench_ingest,
+                            bench_kernels, bench_roofline, bench_time,
+                            common)
 
-    base = (2 << 20) if args.quick else (6 << 20)
-    sizes = common.CHUNK_SIZES[:3] if args.quick else common.CHUNK_SIZES[:4]
+    base = (1 << 20) if args.smoke else (2 << 20) if quick else (6 << 20)
+    sizes = common.CHUNK_SIZES[:3] if quick else common.CHUNK_SIZES[:4]
 
     sections = {
         "dcr": lambda: bench_dcr.run(chunk_sizes=sizes, base_size=base),
@@ -35,8 +40,10 @@ def main() -> None:
         "ablation": lambda: bench_ablation.run(base_size=min(base, 4 << 20)),
         "roofline": bench_roofline.run,
         "gc": lambda: bench_gc.run(base_size=base,
-                                   versions=4 if args.quick else 6,
-                                   retain=2 if args.quick else 3),
+                                   versions=4 if quick else 6,
+                                   retain=2 if quick else 3),
+        "ingest": lambda: bench_ingest.run(base_size=base,
+                                           versions=3 if quick else 4),
     }
 
     for name, fn in sections.items():

@@ -67,6 +67,18 @@ class ContainerBackend(Protocol):
         not count on it (restore-after-reopen has only the patch)."""
         ...
 
+    def put_many(self, records: Sequence[tuple[int, int, bytes,
+                                               bytes | None]]) -> None:
+        """Group-commit a stream's new chunks in one batched write
+        (DESIGN.md §8). Each record is ``(cid, base, payload, data)``:
+        ``base < 0`` stores ``payload`` as raw bytes, ``base >= 0``
+        stores it as a patch with optional materialized ``data``.
+        Records arrive in stream order, so any same-stream base precedes
+        its dependents. Durable backends should turn the whole batch into
+        one buffered append; the store issues a single ``flush()`` after
+        the recipe."""
+        ...
+
     def get(self, cid: int) -> bytes:
         """Materialized raw bytes of a chunk (delta chains resolved)."""
         ...
@@ -152,6 +164,16 @@ class InMemoryBackend:
         if data is None:
             data = delta.decode(patch, self.get(base))
         self._data[cid] = data
+
+    def put_many(self, records: Sequence[tuple[int, int, bytes,
+                                               bytes | None]]) -> None:
+        # dict stores have no batching win; delegate so subclasses that
+        # override put_raw/put_delta (tests do) keep their behaviour
+        for cid, base, payload, data in records:
+            if base < 0:
+                self.put_raw(cid, payload)
+            else:
+                self.put_delta(cid, base, payload, data=data)
 
     def get(self, cid: int) -> bytes:
         return self._data[cid]
@@ -250,8 +272,13 @@ class FileBackend:
 
     name = "file"
 
-    def __init__(self, path: str | Path) -> None:
+    def __init__(self, path: str | Path, fsync_on_flush: bool = False) -> None:
+        """``fsync_on_flush=True`` makes every ``flush()`` (one per
+        committed stream — group commit, DESIGN.md §8) durable with a
+        single fsync per file; the default keeps the historical
+        buffered-only commits (deletes always fsync their tombstone)."""
         self.path = Path(path)
+        self._fsync_on_flush = fsync_on_flush
         self.path.mkdir(parents=True, exist_ok=True)
         self._log_path = self.path / "chunks.log"
         self._recipes_path = self.path / "recipes.jsonl"
@@ -352,6 +379,36 @@ class FileBackend:
         self._append(_KIND_DELTA, cid, base, patch)
         if data is not None:
             self._cache[cid] = data
+
+    def put_many(self, records: Sequence[tuple[int, int, bytes,
+                                               bytes | None]]) -> None:
+        """One buffered append for a whole stream's worth of records:
+        headers and payloads are packed into a single buffer and written
+        with one ``write()`` call, so a commit costs one syscall batch
+        instead of two writes per chunk (DESIGN.md §8). Index/cache
+        bookkeeping is identical to the per-chunk puts."""
+        buf = bytearray()
+        start = self._log.tell()
+        entries = []
+        for cid, base, payload, data in records:
+            kind = _KIND_RAW if base < 0 else _KIND_DELTA
+            if kind == _KIND_RAW:
+                data = payload
+            buf += _REC_HEADER.pack(kind, cid, base if kind else -1,
+                                    len(payload))
+            entries.append((cid, kind, base if kind else -1,
+                            start + len(buf), len(payload), data))
+            buf += payload
+        if not buf:
+            return
+        # index/cache only after the write is accepted — a failed write
+        # must not leave phantom index entries at never-written offsets
+        self._log.write(bytes(buf))
+        self._log_dirty = True
+        for cid, kind, base, offset, length, data in entries:
+            self._index[cid] = (kind, base, offset, length)
+            if data is not None:
+                self._cache[cid] = data
 
     def _read_payload(self, offset: int, length: int) -> bytes:
         if self._log_dirty:
@@ -504,6 +561,9 @@ class FileBackend:
     def flush(self) -> None:
         self._log.flush()
         self._recipes_f.flush()
+        if self._fsync_on_flush:
+            os.fsync(self._log.fileno())
+            os.fsync(self._recipes_f.fileno())
 
     def close(self) -> None:
         self.flush()

@@ -64,7 +64,12 @@ class CollectReport:
 @dataclasses.dataclass(frozen=True)
 class CompactionRun:
     """What one container rewrite did; ``reclaimed_bytes`` is the measured
-    backend footprint shrink (``storage_bytes`` before minus after)."""
+    backend footprint shrink (``storage_bytes`` before minus after).
+
+    ``skipped=True`` means the sizing pass found the rewrite would grow
+    the container (rebase materialization outweighing the sweepable
+    bytes) and nothing was mutated — ``reclaimed_bytes`` is 0, never
+    negative (regression-pinned in tests/test_lifecycle.py)."""
 
     epoch: int
     live_chunks: int
@@ -76,6 +81,7 @@ class CompactionRun:
     bytes_after: int
     reclaimed_bytes: int
     seconds: float
+    skipped: bool = False
 
 
 @runtime_checkable
@@ -141,7 +147,13 @@ def delete_stream(store: Any, handle: int) -> int:
     freed = (refs.dead_bytes + refs.pinned_bytes) - before
     store._refresh_lifecycle_stats()
     if store.policy is not None and store.policy.should_compact(store.stats):
-        compact(store)
+        # a previous compact() skipped at this reclaimable level: the
+        # sizing pass (get + delta.encode over every rebase candidate)
+        # would reach the same verdict, so don't re-pay it until more
+        # bytes have actually become reclaimable
+        skip_at = getattr(store, "_compact_skipped_at", None)
+        if skip_at is None or refs.dead_bytes + refs.pinned_bytes > skip_at:
+            compact(store)
     return freed
 
 
@@ -172,29 +184,60 @@ def compact(store: Any) -> CompactionRun:
     swept = [cid for cid in refs.chunk_ids() if cid not in keep]
     swept_bytes = sum(refs.size_of(cid) for cid in swept)
 
+    # sizing pass: decide every rebase up front so a rewrite that would
+    # *grow* the container (patch materialization outweighing the
+    # sweepable bytes — BENCH_GC once measured reclaimed_mb < 0) can be
+    # skipped before anything is mutated. Only re-encoded patches are
+    # held (re-encoding is the expensive part); raw materializations are
+    # re-read from the backend when streamed, so the extra working set is
+    # the patch bytes, not the decoded container.
     rebased = {"delta": 0, "raw": 0}
+    rebases: dict[int, tuple[int, int, bytes | None]] = {}
+    growth = 0
+    for cid in sorted(keep):
+        base = backend.base_of(cid)
+        if base < 0 or base in keep:
+            continue
+        # nearest surviving ancestor: materialized content is invariant
+        # under compaction, so old patch semantics carry
+        anc = refs.base_of(base)
+        while anc >= 0 and anc not in keep:
+            anc = refs.base_of(anc)
+        raw = backend.get(cid)
+        patch = delta.encode(raw, backend.get(anc)) if anc >= 0 else None
+        if patch is not None and len(patch) < len(raw):
+            rebases[cid] = (containers._KIND_DELTA, anc, patch)
+            rebased["delta"] += 1
+            growth += len(patch) - backend.payload_size(cid)
+        else:
+            rebases[cid] = (containers._KIND_RAW, -1, None)  # fetch later
+            rebased["raw"] += 1
+            growth += len(raw) - backend.payload_size(cid)
+
+    if growth > 0 and growth >= swept_bytes:
+        # rewriting would enlarge the container: leave it append-only
+        # until enough dead bytes accumulate to pay for the rebases
+        # (delete_stream consults the marker before re-running sizing)
+        store._compact_skipped_at = refs.dead_bytes + refs.pinned_bytes
+        size = backend.storage_bytes()
+        return CompactionRun(
+            epoch=backend.epoch, live_chunks=len(keep), swept_chunks=0,
+            swept_bytes=0, rebased_delta=0, rebased_raw=0,
+            bytes_before=size, bytes_after=size, reclaimed_bytes=0,
+            seconds=time.perf_counter() - t0, skipped=True)
 
     def live_records():
         # streamed, not a list: the backend consumes one record at a time,
-        # so compaction RAM is one payload (plus the rebase working set),
+        # so compaction RAM is one payload (plus the re-encoded patches),
         # not the whole live container
         for cid in sorted(keep):
-            kind, base, payload = backend.record(cid)
-            if kind == containers._KIND_DELTA and base not in keep:
-                # nearest surviving ancestor: materialized content is
-                # invariant under compaction, so old patch semantics carry
-                anc = refs.base_of(base)
-                while anc >= 0 and anc not in keep:
-                    anc = refs.base_of(anc)
-                raw = backend.get(cid)
-                patch = (delta.encode(raw, backend.get(anc))
-                         if anc >= 0 else None)
-                if patch is not None and len(patch) < len(raw):
-                    kind, base, payload = containers._KIND_DELTA, anc, patch
-                    rebased["delta"] += 1
-                else:
-                    kind, base, payload = containers._KIND_RAW, -1, raw
-                    rebased["raw"] += 1
+            hit = rebases.get(cid)
+            if hit is None:
+                kind, base, payload = backend.record(cid)
+            else:
+                kind, base, payload = hit
+                if payload is None:     # raw materialization, re-read
+                    payload = backend.get(cid)
             yield cid, kind, base, payload
 
     bytes_before = backend.storage_bytes()
@@ -209,6 +252,7 @@ def compact(store: Any) -> CompactionRun:
     store._by_digest = {d: c for d, c in store._by_digest.items() if c in keep}
     store._refresh_lifecycle_stats()
     store.stats.reclaimed_bytes += bytes_before - bytes_after
+    store._compact_skipped_at = None        # state changed; sizing is fresh
 
     return CompactionRun(
         epoch=backend.epoch, live_chunks=len(keep), swept_chunks=len(swept),

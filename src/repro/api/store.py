@@ -16,12 +16,14 @@ Ingestion is transactional per stream:
 per-stream DCR, chunk/dup/delta counts, detect time); the store-lifetime
 ``StoreStats`` aggregate is the running sum of all reports plus fit time.
 Until ``commit()``, nothing — not even detector index admission — has
-happened, so an abandoned session leaves no trace. With a staged
-detector, admission runs only after every backend write succeeded, so a
-commit that fails mid-storage admits nothing to the index either (chunk
-records already appended by the failed commit remain as unreferenced
-garbage; digests stored before the failure may still dedup against them,
-which is safe — the payloads exist).
+happened, so an abandoned session leaves no trace. Storage is a group
+commit (DESIGN.md §8): delta decisions run over a worklist first, then
+the whole stream lands as one batched backend write (``put_many``), one
+recipe append and one flush. Refcount/digest bookkeeping and — with a
+staged detector — index admission run only after every backend write
+succeeded, so a commit that fails mid-storage admits nothing to the
+index and registers no digests (chunk records already appended by the
+failed commit remain as unreferenced, torn-tail-recoverable garbage).
 
 The v0 surface (``ingest``, integer stream indexes for ``restore``)
 remains as thin wrappers: handles are assigned densely in commit order, so
@@ -46,7 +48,7 @@ from repro.api import containers, lifecycle
 from repro.api.detect import is_staged
 from repro.api.refcount import RefcountTable
 from repro.api.types import DetectBatch, IngestReport, StoreStats
-from repro.core import chunking, delta, hashing
+from repro.core import chunking, delta
 
 
 def chunk_with(chunker: Any, stream: bytes):
@@ -57,13 +59,23 @@ def chunk_with(chunker: Any, stream: bytes):
     the per-position window hashes detectors reuse (may be the gear scan
     or the chunker's own). Anything without a ``chunk`` method is treated
     as a FastCDC ``ChunkerConfig`` (the "fastcdc" builtin) and goes
-    through the parallel gear-hash scan.
+    through the device gear-scan program (kernels/ingest, DESIGN.md §8):
+    bytes go up, bit-packed boundary-candidate maps come back, and the
+    returned stream hashes are a device-resident ``StreamScan`` that
+    fused detectors consume without a round-trip (legacy consumers can
+    index it like the old numpy array).
     """
     if hasattr(chunker, "chunk"):
         return chunker.chunk(stream)
     buf = np.frombuffer(stream, dtype=np.uint8)
-    stream_hashes = hashing.gear_hashes_np(buf)
-    return chunking.chunk_stream(stream, chunker, hashes=stream_hashes), stream_hashes
+    n = len(buf)
+    if n == 0:
+        return [], np.zeros(0, np.uint32)
+    from repro.kernels import ingest as kingest
+    scan, cand_s, cand_l = kingest.scan_stream(
+        buf, chunker.mask_s, chunker.mask_l)
+    bounds = chunking.select_boundaries(n, cand_s, cand_l, chunker)
+    return chunking.chunks_from_bounds(stream, bounds), scan
 
 
 class StreamSession:
@@ -168,65 +180,100 @@ class DedupStore:
         # backend writes succeed, so a commit that fails mid-storage
         # admits nothing to the detector index. Legacy single-call
         # detectors mutate inside detect() and can't make that promise.
-        t0 = time.perf_counter()
+        extract_seconds = score_seconds = observe_seconds = 0.0
         batch = DetectBatch(chunks=chunks, ids=ids, is_new=is_new,
                             stream_hashes=stream_hashes)
         staged = is_staged(self.detector)
         if staged:
+            t0 = time.perf_counter()
             feats = self.detector.extract(batch)
+            extract_seconds = time.perf_counter() - t0
+            t0 = time.perf_counter()
             base_ids = self.detector.score(feats, batch).base_ids
+            score_seconds = time.perf_counter() - t0
         else:
+            t0 = time.perf_counter()
             base_ids = np.asarray(
                 self.detector.detect(chunks, ids, is_new, stream_hashes),
                 np.int64)
-        detect_seconds = time.perf_counter() - t0
+            score_seconds = time.perf_counter() - t0
 
-        # pass 3: store through the container backend
+        # pass 3a: delta-vs-raw decisions over a worklist — every
+        # delta.encode runs here, back to back, with no backend I/O
+        # interleaved. A same-stream base that is not persisted yet is
+        # resolved from the staged records (identical semantics to the
+        # old put-then-lookup interleaving).
         backend = self.backend
-        bytes_in = bytes_stored = 0
-        dup_chunks = delta_chunks = raw_chunks = 0
+        bytes_in = sum(ck.length for ck in chunks)
+        bytes_stored = 0
+        dup_chunks = int(n - is_new.sum())
+        delta_chunks = raw_chunks = 0
         delta_seconds = 0.0
-        recipe: list[int] = []
-        for i, ck in enumerate(chunks):
-            bytes_in += ck.length
+        staged_data: dict[int, bytes] = {}
+        records: list[tuple[int, int, bytes, bytes | None]] = []
+        for i in np.flatnonzero(is_new):
+            ck = chunks[i]
             cid = int(ids[i])
-            recipe.append(cid)
-            if not is_new[i]:
-                dup_chunks += 1
-                continue
-            stored = None
+            entry = None
             base = int(base_ids[i])
-            if base >= 0 and backend.contains(base):
-                t0 = time.perf_counter()
-                d = delta.encode(ck.data, backend.get(base))
-                delta_seconds += time.perf_counter() - t0
-                if len(d) < ck.length:
-                    stored = len(d) + 8  # + recipe metadata
-                    backend.put_delta(cid, base, d, data=ck.data)
-                    self._refs.track(cid, base, len(d))
-                    delta_chunks += 1
-            if stored is None:
-                stored = ck.length
-                backend.put_raw(cid, ck.data)
-                self._refs.track(cid, -1, ck.length)
+            if base >= 0:
+                base_data = staged_data.get(base)
+                if base_data is None and backend.contains(base):
+                    base_data = backend.get(base)
+                if base_data is not None:
+                    t0 = time.perf_counter()
+                    d = delta.encode(ck.data, base_data)
+                    delta_seconds += time.perf_counter() - t0
+                    if len(d) < ck.length:
+                        entry = (cid, base, d, ck.data)
+                        bytes_stored += len(d) + 8  # + recipe metadata
+                        delta_chunks += 1
+            if entry is None:
+                entry = (cid, -1, ck.data, None)
+                bytes_stored += ck.length
                 raw_chunks += 1
+            records.append(entry)
+            staged_data[cid] = ck.data
+
+        # pass 3b: one batched backend write + recipe + flush (group
+        # commit: a stream is a single buffered append, DESIGN.md §8).
+        # Refcount/digest bookkeeping happens only after the writes
+        # succeed, so a failed commit cannot leave digests pointing at
+        # payloads that were never stored.
+        t0 = time.perf_counter()
+        put_many = getattr(backend, "put_many", None)
+        if put_many is not None:
+            put_many(records)
+        else:                       # third-party backends: per-chunk puts
+            for cid, base, payload, data in records:
+                if base < 0:
+                    backend.put_raw(cid, payload)
+                else:
+                    backend.put_delta(cid, base, payload, data=data)
+        for i, (cid, base, payload, _) in zip(np.flatnonzero(is_new),
+                                              records):
+            self._refs.track(cid, base, len(payload))
             self._by_digest[digests[i]] = cid
-            bytes_stored += stored
+        recipe = [int(c) for c in ids]
         handle = backend.add_recipe(recipe)
         for cid in recipe:      # only now do the chunks become live
             self._refs.incref_recipe(cid)
         backend.flush()
+        store_seconds = time.perf_counter() - t0
 
         if staged:
             t0 = time.perf_counter()
             self.detector.observe(feats, batch)
-            detect_seconds += time.perf_counter() - t0
+            observe_seconds = time.perf_counter() - t0
 
         report = IngestReport(
             handle=handle, bytes_in=bytes_in, bytes_stored=bytes_stored,
             chunks=n, dup_chunks=dup_chunks, delta_chunks=delta_chunks,
-            raw_chunks=raw_chunks, detect_seconds=detect_seconds,
-            chunk_seconds=chunk_seconds, delta_seconds=delta_seconds)
+            raw_chunks=raw_chunks,
+            detect_seconds=extract_seconds + score_seconds + observe_seconds,
+            chunk_seconds=chunk_seconds, delta_seconds=delta_seconds,
+            extract_seconds=extract_seconds, score_seconds=score_seconds,
+            observe_seconds=observe_seconds, store_seconds=store_seconds)
         self.reports.append(report)
         self.stats.absorb(report)
         self._refresh_lifecycle_stats()

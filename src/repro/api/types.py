@@ -39,7 +39,10 @@ class DetectBatch:
                    stored before (first occurrence wins inside a stream)
     stream_hashes  [len(stream)] uint32 windowed gear hashes of the whole
                    stream, as produced by the chunker scan — detectors
-                   reuse them for free sub-chunk features
+                   reuse them for free sub-chunk features. May be a
+                   device-resident ``kernels.ingest.StreamScan`` (indexes
+                   like the numpy array; fused detectors read its
+                   ``.device`` handle and skip the host round-trip)
     """
 
     chunks: "Sequence[Chunk]"
@@ -93,6 +96,15 @@ class IngestReport:
     detect_seconds: float = 0.0
     chunk_seconds: float = 0.0
     delta_seconds: float = 0.0
+    # detect/store stage breakdown (benchmarks/bench_ingest.py): for a
+    # staged detector, detect_seconds == extract + score + observe;
+    # legacy single-call detectors book everything under score_seconds.
+    # store_seconds is backend I/O (put_many/recipe/flush), excluding the
+    # delta encodes already counted by delta_seconds.
+    extract_seconds: float = 0.0
+    score_seconds: float = 0.0
+    observe_seconds: float = 0.0
+    store_seconds: float = 0.0
 
     @property
     def dcr(self) -> float:
@@ -123,6 +135,10 @@ class StoreStats:
     detect_seconds: float = 0.0
     chunk_seconds: float = 0.0
     delta_seconds: float = 0.0
+    extract_seconds: float = 0.0
+    score_seconds: float = 0.0
+    observe_seconds: float = 0.0
+    store_seconds: float = 0.0
     fit_seconds: float = 0.0
     live_bytes: int = 0
     dead_bytes: int = 0
@@ -143,3 +159,7 @@ class StoreStats:
         self.detect_seconds += report.detect_seconds
         self.chunk_seconds += report.chunk_seconds
         self.delta_seconds += report.delta_seconds
+        self.extract_seconds += report.extract_seconds
+        self.score_seconds += report.score_seconds
+        self.observe_seconds += report.observe_seconds
+        self.store_seconds += report.store_seconds

@@ -119,6 +119,15 @@ def select_boundaries(
     return np.asarray(bounds, dtype=np.int64)
 
 
+def chunks_from_bounds(raw: bytes, bounds: np.ndarray) -> list[Chunk]:
+    """Materialize Chunk objects from boundary offsets (shared by the
+    host path below and the device-scan path in repro.api.store)."""
+    return [
+        Chunk(offset=int(a), length=int(b - a), data=raw[a:b])
+        for a, b in zip(bounds[:-1], bounds[1:])
+    ]
+
+
 def chunk_stream(
     data: bytes | np.ndarray,
     cfg: ChunkerConfig | None = None,
@@ -133,10 +142,7 @@ def chunk_stream(
         return []
     cand_s, cand_l = candidate_bitmaps(buf, cfg, hashes)
     bounds = select_boundaries(n, cand_s, cand_l, cfg)
-    return [
-        Chunk(offset=int(a), length=int(b - a), data=raw[a:b])
-        for a, b in zip(bounds[:-1], bounds[1:])
-    ]
+    return chunks_from_bounds(raw, bounds)
 
 
 def chunk_boundaries_serial(data: bytes, cfg: ChunkerConfig) -> np.ndarray:

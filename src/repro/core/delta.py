@@ -17,6 +17,8 @@ pointer-chasing storage-side work with no TPU analogue (DESIGN.md §3).
 """
 from __future__ import annotations
 
+import bisect
+
 import numpy as np
 
 BLOCK = 16
@@ -45,15 +47,36 @@ def _read_varint(buf: bytes, pos: int) -> tuple[int, int]:
         shift += 7
 
 
+_POLY_P = np.uint32(0x01000193)        # FNV prime, odd => invertible mod 2^32
+_POLY_P_INV = np.uint32(pow(int(_POLY_P), -1, 1 << 32))
+_pow_cache = np.ones(1, np.uint32)     # p^0..; grown on demand
+_ipow_cache = np.full(1, _POLY_P_INV)  # p^-1, p^-2, ...
+
+
+def _powers(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """(p^0..p^{n-1}, p^-1..p^-n) with wraparound, cached across calls."""
+    global _pow_cache, _ipow_cache
+    if len(_pow_cache) < n:
+        m = max(n, 2 * len(_pow_cache))
+        _pow_cache = np.cumprod(np.full(m, _POLY_P, np.uint32),
+                                dtype=np.uint32) * _POLY_P_INV  # p^0..p^{m-1}
+        _ipow_cache = np.cumprod(np.full(m, _POLY_P_INV, np.uint32),
+                                 dtype=np.uint32)               # p^-1..p^-m
+    return _pow_cache[:n], _ipow_cache[:n]
+
+
 def _block_hashes(buf: np.ndarray) -> np.ndarray:
-    """Vectorized FNV-ish hash of every BLOCK-byte window (stride 1)."""
+    """Polynomial hash of every BLOCK-byte window (stride 1), by prefix
+    sums: S_i = sum_{j<i} b_j p^{-(j+1)}, hash(l, l+B) = (S_{l+B} - S_l)
+    * p^{l+B} — three vectorized passes instead of one per window byte
+    (this runs twice per delta encode on the ingest hot path)."""
     n = len(buf)
     if n < BLOCK:
-        return np.zeros(0, np.uint64)
-    h = np.zeros(n - BLOCK + 1, dtype=np.uint64)
-    for k in range(BLOCK):
-        h = (h * np.uint64(0x100000001B3)) ^ buf[k : n - BLOCK + 1 + k].astype(np.uint64)
-    return h
+        return np.zeros(0, np.uint32)
+    pows, ipows = _powers(n + 1)
+    s = np.zeros(n + 1, np.uint32)
+    np.cumsum(buf.astype(np.uint32) * ipows[:n], dtype=np.uint32, out=s[1:])
+    return (s[BLOCK:] - s[:-BLOCK]) * pows[BLOCK:]
 
 
 def _first_mismatch(a: np.ndarray, b: np.ndarray) -> int:
@@ -85,11 +108,17 @@ def encode(target: bytes, base: bytes) -> bytes:
         keys_u, offs_u = keys_sorted[first], np.minimum.reduceat(
             offs_sorted, np.flatnonzero(first))
         th = _block_hashes(t)
-        idx = np.searchsorted(keys_u, th)
+        # 16-bit bitmap prefilter: the binary search over every target
+        # position was ~half of encode wall time; one gather drops the
+        # non-candidates (~<1% survive) before searchsorted runs
+        bitmap = np.zeros(1 << 16, bool)
+        bitmap[keys_u & 0xFFFF] = True
+        maybe = np.flatnonzero(bitmap[th & 0xFFFF])
+        idx = np.searchsorted(keys_u, th[maybe])
         idx = np.clip(idx, 0, len(keys_u) - 1)
-        hit = keys_u[idx] == th
-        cand_pos = np.flatnonzero(hit)
-        cand_off = offs_u[idx[cand_pos]]
+        hit = keys_u[idx] == th[maybe]
+        cand_pos = maybe[hit]
+        cand_off = offs_u[idx[hit]]
 
     add_start = 0
 
@@ -102,15 +131,20 @@ def encode(target: bytes, base: bytes) -> bytes:
     i = 0
     ci = 0  # cursor into candidate arrays
     nc = len(cand_pos)
+    # python ints + bytes slices in the scan loop: the per-candidate numpy
+    # calls (searchsorted/array_equal on tiny arrays) were pure dispatch
+    # overhead — ~30% of encode wall time on the ingest path
+    cand_pos_l = cand_pos.tolist()
+    cand_off_l = cand_off.tolist()
     while ci < nc:
         # jump to the next candidate at or after i
-        ci = int(np.searchsorted(cand_pos[ci:], i)) + ci
+        ci = bisect.bisect_left(cand_pos_l, i, ci)
         if ci >= nc:
             break
-        pos = int(cand_pos[ci])
-        off = int(cand_off[ci])
+        pos = cand_pos_l[ci]
+        off = cand_off_l[ci]
         ci += 1
-        if not np.array_equal(t[pos:pos + BLOCK], b[off:off + BLOCK]):
+        if target[pos:pos + BLOCK] != base[off:off + BLOCK]:
             continue  # hash collision
         # extend forward
         ext_max = min(n - (pos + BLOCK), len(b) - (off + BLOCK))

@@ -53,7 +53,15 @@ class FeatureConfig:
 # -----------------------------------------------------------------------------
 
 def _bounds(n: int, k: int) -> np.ndarray:
-    return np.linspace(0, n, k + 1).astype(np.int64)
+    """Equal-split segment bounds b_j = floor(j*n/k), exact integer math.
+
+    (Formerly ``linspace(0, n, k+1).astype(int64)``, whose float rounding
+    disagreed with the integer position->segment maps used by the jnp and
+    fused device paths at boundaries where k does not divide n; every
+    path now shares the exact-floor convention, so np/jnp/fused are
+    bit-identical by construction, not by luck.)
+    """
+    return (np.arange(k + 1, dtype=np.int64) * n) // k
 
 
 _WARMUP = hashing.GEAR_WINDOW - 1  # positions whose 32B window crosses the
@@ -116,10 +124,13 @@ def batch_subchunk_maxgear_j(gear: jax.Array, lengths: jax.Array, k: int) -> jax
     """jnp path: gear hashes [B, Lmax] + lengths [B] -> [B, K] segment maxes."""
     b, lmax = gear.shape
     pos = jnp.arange(lmax)
-    # segment id of each position: floor(pos * K / len); warm-up positions
-    # and padding -> K (dropped), matching subchunk_maxgear_np
+    # segment id of each position: the exact inverse of the _bounds floor
+    # convention (pos in [floor(j*n/k), floor((j+1)*n/k)) <=> j ==
+    # floor((pos*k + k - 1) / n)); warm-up positions and padding -> K
+    # (dropped), matching subchunk_maxgear_np
     valid = (pos[None, :] < lengths[:, None]) & (pos[None, :] >= _WARMUP)
-    seg = jnp.where(valid, (pos[None, :] * k) // jnp.maximum(lengths[:, None], 1), k)
+    seg = jnp.where(valid, (pos[None, :] * k + (k - 1))
+                    // jnp.maximum(lengths[:, None], 1), k)
     seg = jnp.clip(seg, 0, k)
 
     def one(g_row, seg_row):
@@ -209,8 +220,11 @@ def embed_shingles_j(ids: jax.Array, mask: jax.Array, a: jax.Array,
     return feat
 
 
-def _round_up_pow2(n: int, floor: int = 16) -> int:
-    return max(floor, 1 << (n - 1).bit_length())
+def bucket_pow2(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor) — THE bucketing rule every
+    jit boundary shares (embed batch, fused stream/B/Lmax buckets,
+    context-model rows; DESIGN.md §8.2)."""
+    return max(floor, 1 << max(0, int(n) - 1).bit_length())
 
 
 class FeatureExtractor:
@@ -218,14 +232,23 @@ class FeatureExtractor:
 
     Batches are padded to power-of-two sizes so the jitted embed path
     compiles once per bucket instead of once per batch size.
+
+    With ``fused=True`` (the default) and the chunker's stream scan
+    available, the whole LSH -> shingle -> embed pipeline runs as one
+    jitted device program per stream (kernels/ingest, DESIGN.md §8);
+    ``fused=False`` keeps the per-chunk numpy path — the oracle the fused
+    program is property-tested against, and the pre-fusion baseline
+    benchmarks/bench_ingest.py measures speedups over.
     """
 
-    def __init__(self, cfg: FeatureConfig | None = None, use_kernel: bool = True):
+    def __init__(self, cfg: FeatureConfig | None = None, use_kernel: bool = True,
+                 fused: bool = True):
         self.cfg = cfg or FeatureConfig()
         a, b = hashing.multiply_shift_params(self.cfg.m)
         self._a = jnp.asarray(a)
         self._b = jnp.asarray(b)
         self._use_kernel = use_kernel
+        self.fused = fused
 
     def _embed(self, ids: jax.Array, mask: jax.Array) -> jax.Array:
         if self._use_kernel:
@@ -237,18 +260,49 @@ class FeatureExtractor:
     def features_from_subhashes(self, sub_hashes) -> np.ndarray:
         sub = np.asarray(sub_hashes)
         bsz = sub.shape[0]
-        pad = _round_up_pow2(bsz) - bsz
+        pad = bucket_pow2(bsz, 16) - bsz
         if pad:
             sub = np.pad(sub, ((0, pad), (0, 0)))
         ids = shingle_ids(jnp.asarray(sub), self.cfg.n)
         ids, mask = unique_mask(ids)
         return np.asarray(self._embed(ids, mask))[:bsz]
 
+    @staticmethod
+    def _fused_stream_limit() -> int:
+        # lazy: features is a leaf module, kernels.ingest imports it
+        from repro.kernels.ingest import FUSED_STREAM_LIMIT
+        return FUSED_STREAM_LIMIT
+
+    def features_from_stream(self, stream_hashes: np.ndarray,
+                             offsets: np.ndarray, lengths: np.ndarray,
+                             lmax_floor: int = 0) -> np.ndarray:
+        """Fused fast path: one device program over the chunker's scan.
+
+        ``lmax_floor`` (the chunker's max chunk size, wired through
+        ``CARDDetector.fit``) pins the Lmax bucket so steady-state
+        streams of one chunker config never retrace just because their
+        observed longest chunk straddles a pow2 boundary."""
+        from repro.kernels import ingest as kingest
+        return kingest.extract_stream(
+            stream_hashes, offsets, lengths, self._a, self._b,
+            k=self.cfg.k, n=self.cfg.n, normalize=self.cfg.normalize,
+            use_kernel=self._use_kernel, lmax_floor=lmax_floor)
+
     def __call__(self, chunks: list[bytes],
                  stream_hashes: np.ndarray | None = None,
-                 offsets: np.ndarray | None = None) -> np.ndarray:
+                 offsets: np.ndarray | None = None,
+                 lmax_floor: int = 0) -> np.ndarray:
         """[B, M] float32 initial features for a list of chunk payloads."""
         if not chunks:
             return np.zeros((0, self.cfg.m), np.float32)
+        if (self.fused and self.cfg.lsh == "maxgear"
+                and stream_hashes is not None and offsets is not None
+                # the fused program indexes with int32; oversized streams
+                # take the per-chunk host path instead
+                and len(stream_hashes) <= self._fused_stream_limit()):
+            lengths = np.asarray([len(c) for c in chunks], np.int64)
+            return self.features_from_stream(stream_hashes,
+                                             np.asarray(offsets), lengths,
+                                             lmax_floor=lmax_floor)
         sub = batch_subchunk_lsh_np(chunks, self.cfg, stream_hashes, offsets)
         return self.features_from_subhashes(sub)

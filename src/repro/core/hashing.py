@@ -75,14 +75,23 @@ def gear_hashes_np(data: np.ndarray) -> np.ndarray:
     h_i == the serial FastCDC gear hash after consuming byte i, provided at
     least GEAR_WINDOW bytes precede i (exact match beyond the warm-up run —
     FastCDC only inspects positions >= min_size >> 32, see chunking.py).
+
+    Window-doubling evaluation: a width-w partial hash extends to width 2w
+    via ``h_2w(i) = h_w(i) + h_w(i-w) << w``, so the 32-tap correlation is
+    5 vectorized passes instead of 31 (the ingest scan is on the hot path,
+    DESIGN.md §8). All arithmetic is uint32: shifted-out high bits vanish
+    mod 2^32 exactly as in the serial ``h = (h << 1) + gear[b]`` loop.
     """
     data = np.asarray(data, dtype=np.uint8)
-    g = GEAR_TABLE[data].astype(np.uint64)
-    n = len(g)
-    h = np.zeros(n, dtype=np.uint64)
-    for k in range(min(GEAR_WINDOW, n)):
-        h[k:] += (g[: n - k] << np.uint64(k)) if k else (g << np.uint64(0))
-    return (h & 0xFFFFFFFF).astype(np.uint32)
+    h = GEAR_TABLE[data].copy()
+    n = len(h)
+    w = 1
+    while w < min(GEAR_WINDOW, n):
+        nh = h.copy()
+        nh[w:] += h[: n - w] << np.uint32(w)
+        h = nh
+        w *= 2
+    return h
 
 
 def gear_hashes_serial_np(data: np.ndarray) -> np.ndarray:

@@ -137,13 +137,18 @@ class CARDDetector(LegacyDetectMixin):
                  threshold: float = 0.3,
                  use_lsh_bands: bool = False,
                  use_kernel: bool = True,
+                 fused: bool = True,
                  index: str | Any | None = None,
                  index_args: dict | None = None):
         self.feat_cfg = feat_cfg or features.FeatureConfig()
         self.model_cfg = model_cfg or context_model.ContextModelConfig(m=self.feat_cfg.m)
         assert self.model_cfg.m == self.feat_cfg.m
         self.threshold = threshold
-        self.extractor = features.FeatureExtractor(self.feat_cfg, use_kernel=use_kernel)
+        self.fused = fused
+        self._lmax_floor = 0            # set from the chunker cfg in fit()
+        self.extractor = features.FeatureExtractor(self.feat_cfg,
+                                                   use_kernel=use_kernel,
+                                                   fused=fused)
         self.model = context_model.ContextModel(self.model_cfg)
         if index is None:
             index = "banded-lsh" if use_lsh_bands else "exact"
@@ -160,20 +165,35 @@ class CARDDetector(LegacyDetectMixin):
     def fit(self, training_streams, cfg):
         """Training process (paper Fig. 3 left): chunk the training data in
         stream order, extract initial features, train the CBOW model."""
+        # pin the fused path's Lmax bucket at the chunker's max chunk
+        # size, so steady-state streams of this config never retrace just
+        # because their observed longest chunk straddles a pow2 boundary
+        self._lmax_floor = int(getattr(cfg, "max_size", 0) or 0)
         feats = []
         for stream in training_streams:
             chunks, h = chunk_with(cfg, stream)
             if chunks:
                 offs = np.asarray([c.offset for c in chunks])
-                feats.append(self.extractor([c.data for c in chunks], h, offs))
+                feats.append(self.extractor([c.data for c in chunks], h, offs,
+                                            lmax_floor=self._lmax_floor))
         if not feats:
             raise ValueError("CARD needs at least one training stream")
         self.model.fit(np.concatenate(feats, axis=0))
 
     def extract(self, batch: DetectBatch) -> np.ndarray:
         init = self.extractor([c.data for c in batch.chunks],
-                              batch.stream_hashes, batch.offsets)
-        return self.model.transform(init)                     # [n, D]
+                              batch.stream_hashes, batch.offsets,
+                              lmax_floor=self._lmax_floor)
+        if not self.fused:
+            return self.model.transform(init)                 # [n, D]
+        # bucket the row count so the jitted projection compiles once per
+        # pow2 bucket, not once per stream length (DESIGN.md §8); the
+        # transform is row-wise, so padding rows changes nothing
+        n = init.shape[0]
+        pad = features.bucket_pow2(n, 16) - n
+        if pad:
+            init = np.pad(init, ((0, pad), (0, 0)))
+        return self.model.transform(init)[:n]                 # [n, D]
 
     def score(self, feats: np.ndarray, batch: DetectBatch) -> DetectResult:
         n = len(batch)
@@ -225,14 +245,15 @@ def _build_ntransform(**sf_args) -> SuperFeatureDetector:
 def _build_card(*, feat: dict | None = None, model: dict | None = None,
                 threshold: float = 0.3, index: str | None = None,
                 index_args: dict | None = None,
-                use_kernel: bool = True) -> CARDDetector:
+                use_kernel: bool = True, fused: bool = True) -> CARDDetector:
     feat_cfg = features.FeatureConfig(**(feat or {}))
     model_kw = dict(model or {})
     model_kw.setdefault("m", feat_cfg.m)
     model_cfg = context_model.ContextModelConfig(**model_kw)
     return CARDDetector(feat_cfg=feat_cfg, model_cfg=model_cfg,
                         threshold=threshold, index=index,
-                        index_args=index_args, use_kernel=use_kernel)
+                        index_args=index_args, use_kernel=use_kernel,
+                        fused=fused)
 
 
 def run_workload(detector: Detector, versions: Sequence[bytes],

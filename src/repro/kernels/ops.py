@@ -19,7 +19,10 @@ from repro.kernels import shingle_embed as _shingle
 from repro.kernels import sim_topk as _topk
 
 
+@functools.lru_cache(maxsize=None)
 def _interpret() -> bool:
+    # cached: jax.default_backend() walks the backend registry on every
+    # call, and this gates every kernel dispatch on the ingest hot path
     return jax.default_backend() != "tpu"
 
 
@@ -27,8 +30,13 @@ ROW_WIDTH = 8192
 
 
 def _to_rows(stream: jax.Array, width: int = ROW_WIDTH) -> tuple[jax.Array, int]:
+    """Lay a stream out as [R, C] rows, padding R up to a power of two so
+    the row-grid kernels (grid=(R,)) compile once per bucket instead of
+    once per stream length (DESIGN.md §8)."""
     n = stream.shape[0]
-    pad = (-n) % width
+    rows = max(1, -(-n // width))
+    rows = 1 << (rows - 1).bit_length()
+    pad = rows * width - n
     if pad:
         stream = jnp.pad(stream, (0, pad))
     return stream.reshape(-1, width), n

@@ -450,5 +450,72 @@ def test_failed_log_rename_leaves_backend_usable(tmp_path, monkeypatch):
     store2.close()
 
 
+class StarDetector:
+    """Deltas every later stream's chunks against the same-position chunk
+    of the FIRST stream — deleting that first stream then pins its whole
+    payload while every survivor needs a rebase, the shape that used to
+    drive reclaimed_bytes negative (BENCH_GC finesse regression)."""
+
+    name = "star"
+
+    def __init__(self):
+        self._first = None
+
+    def fit(self, training_streams, cfg):
+        pass
+
+    def detect(self, chunks, ids, is_new, stream_hashes):
+        ids = np.asarray(ids, np.int64)
+        out = np.full(len(chunks), -1, np.int64)
+        if self._first is None:
+            self._first = ids.copy()
+            return out
+        k = min(len(self._first), len(chunks))
+        out[:k] = self._first[:k]
+        out[~np.asarray(is_new, bool)] = -1
+        out[out == ids] = -1
+        return out
+
+
+def test_compaction_skips_rewrite_that_would_grow_container(tmp_path):
+    """Rebasing many small patches to raw can cost more bytes than the
+    sweep reclaims; the sizing pass must skip the rewrite and report
+    reclaimed_bytes == 0 — never negative."""
+    backend = api.FileBackend(tmp_path)
+    store = api.DedupStore(StarDetector(), FixedChunker(), backend=backend)
+    v0 = _rand(N_CHUNKS * CHUNK, seed=11)
+    later = []
+    for i in range(4):                  # touch EVERY chunk, tiny patches
+        buf = bytearray(v0)
+        for c in range(N_CHUNKS):
+            p = c * CHUNK + (i * 97) % (CHUNK - 16)
+            buf[p:p + 16] = _rand(16, seed=100 + 10 * i + c)
+        later.append(bytes(buf))
+    h0 = _ingest(store, v0)
+    handles = [_ingest(store, v) for v in later]
+    assert store.stats.delta_chunks == 4 * N_CHUNKS   # star topology held
+
+    store.delete(h0)
+    size_before = backend.storage_bytes()
+    epoch_before = backend.epoch
+    run = store.compact()
+    assert run.skipped
+    assert run.reclaimed_bytes == 0                   # pinned: never < 0
+    assert run.swept_chunks == 0
+    assert backend.storage_bytes() == size_before     # nothing mutated
+    assert backend.epoch == epoch_before
+    for h, v in zip(handles, later):
+        assert store.restore(h) == v
+
+    # once enough of the star is gone the rewrite pays and runs for real
+    for h in handles[:3]:
+        store.delete(h)
+    run2 = store.compact()
+    assert not run2.skipped
+    assert run2.reclaimed_bytes >= 0                  # the regression pin
+    assert store.restore(handles[3]) == later[3]
+    store.close()
+
+
 # The any-interleaving restore/refcount property lives in
 # tests/test_lifecycle_property.py (hypothesis-gated, repo convention).
