@@ -4,14 +4,18 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: dev-deps test test-lifecycle ci bench bench-smoke gc-bench \
-        ingest-bench quickstart
+.PHONY: dev-deps test test-fast test-lifecycle ci bench bench-smoke \
+        gc-bench ingest-bench restore-bench quickstart
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
 
 test:
 	$(PYTHON) -m pytest -x -q
+
+# tier-1 minus the slow subprocess mesh tests (inner-loop development)
+test-fast:
+	$(PYTHON) -m pytest -x -q -m "not subprocess_mesh"
 
 # space-reclamation suite on its own (also part of the tier-1 collection)
 test-lifecycle:
@@ -34,6 +38,10 @@ gc-bench:
 # end-to-end ingest MB/s + stage breakdown; writes BENCH_INGEST.json
 ingest-bench:
 	$(PYTHON) -m benchmarks.bench_ingest
+
+# cold/warm/ranged/post-compaction restore MB/s; writes BENCH_RESTORE.json
+restore-bench:
+	$(PYTHON) -m benchmarks.bench_restore
 
 quickstart:
 	$(PYTHON) examples/quickstart.py

@@ -1,0 +1,184 @@
+"""Restore/serving throughput + telemetry split (DESIGN.md §9).
+
+One row per (workload, detector) on the sql_dump and vmdk version
+chains: ingest through a file-backed store, then measure the serving
+path the way production reads it —
+
+    cold_mbps       restore every stream on a *freshly reopened* store
+                    (empty decode cache; planner + get_many sequential
+                    I/O is what this number buys)
+    warm_mbps       second full pass on the same store (decode cache
+                    warm; bytes_read should collapse toward 0)
+    range_mbps      1000 random 64 KiB ranged reads on the reopened
+                    store (the partial-object serving primitive)
+    compacted_mbps  cold restore of the newest stream after deleting the
+                    older versions and compacting the container
+
+plus where the cold pass spent its time (read/decode seconds), the
+decode-cache hit/miss split, and cold read amplification (container
+bytes fetched per byte served).
+
+Cold/warm/compacted throughputs are the best of ``repeats`` passes
+(each cold pass is a fresh store reopen with an empty decode cache):
+this box is a shared-CPU container with ±40% run-to-run noise, and
+interference is strictly additive, so min-time is the stable estimator.
+The pre-PR baseline rows were measured with the identical protocol.
+
+Rows land in BENCH_RESTORE.json so future PRs have a perf trajectory;
+rows with variant="per-chunk" are the pre-planner per-chunk ``get``
+path, measured from a worktree at the pre-PR commit on the same machine
+(the ``--label`` flag names the variant when reproducing that).
+
+    PYTHONPATH=src python -m benchmarks.bench_restore [--quick] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks import common
+from repro import api
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_RESTORE.json"
+
+WORKLOADS = ("sql_dump", "vmdk")
+DETECTORS = ("dedup-only", "finesse", "card")
+RANGE_READS = 1000
+RANGE_BYTES = 64 << 10
+
+
+def _reopen(tmp: str) -> api.DedupStore:
+    """Serving-side store on an existing container dir (detector unused
+    by the read path; dedup-only keeps reopen cheap)."""
+    cfg = api.DedupConfig.from_dict(
+        {"detector": "dedup-only", "backend": "file",
+         "backend_args": {"path": tmp}})
+    return api.build_store(cfg)
+
+
+def _restore_all(store: api.DedupStore, handles) -> tuple[float, int]:
+    t0 = time.perf_counter()
+    total = 0
+    for h in handles:
+        total += len(store.restore(h))
+    return time.perf_counter() - t0, total
+
+
+def run(base_size: int = 6 << 20, versions: int = 4,
+        detectors=DETECTORS, workloads=WORKLOADS,
+        avg_size: int = 8192, label: str = "planned",
+        range_reads: int = RANGE_READS, repeats: int = 3) -> list[dict]:
+    rows = []
+    for wl in workloads:
+        vs = common.make_versions(wl, base_size, versions)
+        for kind in detectors:
+            cfg = common.detector_config(kind, avg_size=avg_size)
+            with tempfile.TemporaryDirectory() as tmp:
+                cfg.backend, cfg.backend_args = "file", {"path": tmp}
+                store = api.build_store(cfg)
+                store.fit(list(vs[:1]))
+                handles = []
+                for v in vs:
+                    with store.open_stream() as s:
+                        s.write(v)
+                    handles.append(s.report.handle)
+                dcr = store.stats.dcr
+                store.close()
+
+                cold_s, warm_s = float("inf"), float("inf")
+                cold_row = {}
+                cold = None
+                for _rep in range(repeats):     # each pass: fresh reopen
+                    if cold is not None:
+                        cold.close()
+                    cold = _reopen(tmp)
+                    pass_s, total = _restore_all(cold, handles)
+                    if pass_s < cold_s:
+                        cold_s = pass_s
+                        s = cold.stats
+                        cold_row = {
+                            "read_s": round(s.restore_read_seconds, 4),
+                            "decode_s": round(s.restore_decode_seconds, 4),
+                            "cache_hits": s.restore_cache_hits,
+                            "cache_misses": s.restore_cache_misses,
+                            "read_amp": round(s.restore_bytes_read
+                                              / max(1, s.restore_bytes_out),
+                                              4),
+                        }
+                    warm_s = min(warm_s, _restore_all(cold, handles)[0])
+
+                # ranged reads: the serving primitive (newest version)
+                h, v = handles[-1], vs[-1]
+                rng = np.random.default_rng(0)
+                offs = rng.integers(0, max(1, len(v) - RANGE_BYTES),
+                                    range_reads)
+                t0 = time.perf_counter()
+                range_bytes = 0
+                for off in offs:
+                    range_bytes += len(cold.restore_range(
+                        h, int(off), RANGE_BYTES))
+                range_s = time.perf_counter() - t0
+                cold.close()
+
+                # restore-after-compaction: drop the history, keep latest
+                survivor = _reopen(tmp)
+                for hh in handles[:-1]:
+                    survivor.delete(hh)
+                survivor.compact()
+                survivor.close()
+                comp_s = float("inf")
+                for _rep in range(repeats):
+                    compacted = _reopen(tmp)
+                    pass_s, comp_total = _restore_all(
+                        compacted, [handles[-1]])
+                    comp_s = min(comp_s, pass_s)
+                    compacted.close()
+
+                mb = total / 2**20
+                rows.append({
+                    "bench": "restore", "workload": wl, "detector": kind,
+                    "variant": label, "versions": versions,
+                    "avg_size": avg_size, "bytes_mb": round(mb, 2),
+                    "cold_mbps": round(mb / max(1e-9, cold_s), 2),
+                    "warm_mbps": round(mb / max(1e-9, warm_s), 2),
+                    "range_mbps": round(
+                        range_bytes / 2**20 / max(1e-9, range_s), 2),
+                    "compacted_mbps": round(
+                        comp_total / 2**20 / max(1e-9, comp_s), 2),
+                    **cold_row,
+                    "dcr": round(dcr, 4),
+                })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workloads (CI smoke)")
+    ap.add_argument("--json", default=str(JSON_PATH),
+                    help="where to write the JSON row dump")
+    ap.add_argument("--label", default="planned",
+                    help="variant label for the emitted rows")
+    args = ap.parse_args()
+    if args.quick:
+        rows = run(base_size=2 << 20, versions=3, range_reads=200,
+                   label=args.label)
+    else:
+        rows = run(label=args.label)
+    common.emit(rows, "restore")
+    path = Path(args.json)
+    existing = []
+    if path.exists():       # keep rows from other variants (pre-PR runs)
+        existing = [r for r in json.loads(path.read_text())
+                    if r.get("variant") != args.label]
+    path.write_text(json.dumps(existing + rows, indent=2) + "\n")
+    print(f"# wrote {len(rows)} rows to {path}")
+
+
+if __name__ == "__main__":
+    main()

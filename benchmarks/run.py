@@ -18,15 +18,15 @@ def main() -> None:
                          "raise (perf-plumbing CI gate; implies --quick)")
     ap.add_argument("--only", default=None,
                     help="comma list: dcr,time,dims,kernels,ckpt,ablation,"
-                         "roofline,gc,ingest")
+                         "roofline,gc,ingest,restore")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     quick = args.quick or args.smoke
 
     from benchmarks import (bench_ablation, bench_ckpt_store, bench_dcr,
                             bench_dims, bench_gc, bench_ingest,
-                            bench_kernels, bench_roofline, bench_time,
-                            common)
+                            bench_kernels, bench_restore, bench_roofline,
+                            bench_time, common)
 
     base = (1 << 20) if args.smoke else (2 << 20) if quick else (6 << 20)
     sizes = common.CHUNK_SIZES[:3] if quick else common.CHUNK_SIZES[:4]
@@ -44,6 +44,11 @@ def main() -> None:
                                    retain=2 if quick else 3),
         "ingest": lambda: bench_ingest.run(base_size=base,
                                            versions=3 if quick else 4),
+        "restore": lambda: bench_restore.run(base_size=base,
+                                             versions=3 if quick else 4,
+                                             range_reads=100 if quick
+                                             else 1000,
+                                             repeats=1 if quick else 3),
     }
 
     for name, fn in sections.items():

@@ -7,7 +7,11 @@ Layers (DESIGN.md §2 and §7), each depending only on the ones above it:
                legacy-``detect`` compatibility shim
   containers   ContainerBackend protocol; memory + file backends
   refcount     chunk recipe/base refcounting for space reclamation
-  store        DedupStore with transactional StreamSession ingestion
+  restore      serving-path policy: restore planner (chain-grouped,
+               topologically ordered, offset-sorted reads), byte-budgeted
+               DecodeCache, recipe prefix sums for ranged reads
+  store        DedupStore with transactional StreamSession ingestion and
+               the restore/restore_iter/restore_range serving surface
   lifecycle    delete / mark-sweep collect / compaction with rebase,
                pluggable reclamation policies
   registry     name -> factory tables for detectors/indexes/chunkers/
@@ -34,7 +38,15 @@ from repro.api.types import (  # noqa: F401
     DetectBatch,
     DetectResult,
     IngestReport,
+    RestoreReport,
     StoreStats,
+)
+from repro.api.restore import (  # noqa: F401
+    DEFAULT_CACHE_BYTES,
+    DecodeCache,
+    RecipeLayout,
+    RestorePlan,
+    plan_chains,
 )
 from repro.api.detect import (  # noqa: F401
     LegacyDetectMixin,

@@ -16,6 +16,7 @@ its registry key plus keyword arguments for its factory:
         "backend_args": {"path": "/data/containers"},
         "policy": "threshold",               # reclamation (DESIGN.md §7.4)
         "policy_args": {"ratio": 0.25},
+        "restore_cache_bytes": 64 << 20,     # decode-cache budget (§9.2)
     })
     store = build_store(cfg)
 
@@ -25,13 +26,15 @@ ship them over the wire or pin them in a manifest next to the containers.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Any
 
 from repro.api import registry
 from repro.api.store import DedupStore
 
 _KNOWN_KEYS = {"detector", "detector_args", "chunker", "chunker_args",
-               "backend", "backend_args", "policy", "policy_args"}
+               "backend", "backend_args", "policy", "policy_args",
+               "restore_cache_bytes"}
 
 
 @dataclasses.dataclass
@@ -44,6 +47,11 @@ class DedupConfig:
     backend_args: dict[str, Any] = dataclasses.field(default_factory=dict)
     policy: str = "never"
     policy_args: dict[str, Any] = dataclasses.field(default_factory=dict)
+    # decode-cache budget for the restore path (DESIGN.md §9.2); None
+    # keeps the backend's default. Forwarded as the ``cache_bytes``
+    # factory argument to backends that take one (the file backend);
+    # backends without a decode cache (memory) ignore it.
+    restore_cache_bytes: int | None = None
 
     @classmethod
     def from_dict(cls, d: dict[str, Any]) -> "DedupConfig":
@@ -56,6 +64,11 @@ class DedupConfig:
         for name in ("detector", "chunker", "backend", "policy"):
             if not isinstance(getattr(cfg, name), str):
                 raise TypeError(f"{name} must be a registry name (str)")
+        if cfg.restore_cache_bytes is not None:
+            if (not isinstance(cfg.restore_cache_bytes, int)
+                    or cfg.restore_cache_bytes <= 0):
+                raise ValueError("restore_cache_bytes must be a positive "
+                                 f"int, got {cfg.restore_cache_bytes!r}")
         return cfg
 
     def to_dict(self) -> dict[str, Any]:
@@ -71,7 +84,23 @@ def build_chunker(cfg: DedupConfig) -> Any:
 
 
 def build_backend(cfg: DedupConfig) -> Any:
-    return registry.get_backend(cfg.backend)(**cfg.backend_args)
+    factory = registry.get_backend(cfg.backend)
+    args = dict(cfg.backend_args)
+    if cfg.restore_cache_bytes is not None and "cache_bytes" not in args:
+        # forward only to factories that declare the knob; backends with
+        # no decode cache (memory) legitimately skip it. A factory whose
+        # signature cannot be inspected gets an explicit error instead of
+        # a silently ignored budget — pass backend_args directly there.
+        try:
+            params = inspect.signature(factory).parameters
+        except (TypeError, ValueError) as e:
+            raise ValueError(
+                f"restore_cache_bytes is set but backend {cfg.backend!r} "
+                "has an uninspectable factory signature; pass the budget "
+                "via backend_args instead") from e
+        if "cache_bytes" in params:
+            args["cache_bytes"] = cfg.restore_cache_bytes
+    return factory(**args)
 
 
 def build_policy(cfg: DedupConfig) -> Any:

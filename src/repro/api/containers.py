@@ -33,15 +33,24 @@ from __future__ import annotations
 import json
 import os
 import struct
+import time
 from pathlib import Path
 from typing import Iterable, Protocol, Sequence, runtime_checkable
 
 from repro.api.registry import register_backend
+from repro.api.restore import DEFAULT_CACHE_BYTES, DecodeCache, plan_chains
 from repro.core import delta
 
 _REC_HEADER = struct.Struct("<BqqQ")  # kind, cid, base, payload length
 _KIND_RAW = 0
 _KIND_DELTA = 1
+
+# get_many read coalescing (DESIGN.md §9): payload extents whose gap is at
+# most _READ_MERGE_GAP bytes (record headers, the odd dead record) are
+# fetched as ONE sequential read; runs are capped so a single slab never
+# dwarfs the decode-cache budget.
+_READ_MERGE_GAP = 1 << 12
+_READ_MAX_RUN = 8 << 20
 
 # chunk-log file header: magic + compaction epoch. Logs written before the
 # header existed start directly with a record whose first byte is a kind
@@ -57,6 +66,11 @@ class ContainerBackend(Protocol):
     # compaction epoch: starts at 0, bumped by every rewrite_live; the
     # lifecycle layer reports it and reopen logic persists it
     epoch: int
+
+    # fixed per-record storage overhead in bytes (headers etc.); the store
+    # adds it to bytes_stored so per-stream DCR matches the real container
+    # footprint. 0 for backends that store payloads bare.
+    record_overhead: int
 
     def put_raw(self, cid: int, data: bytes) -> None: ...
 
@@ -83,6 +97,16 @@ class ContainerBackend(Protocol):
         """Materialized raw bytes of a chunk (delta chains resolved)."""
         ...
 
+    def get_many(self, cids: Sequence[int]) -> list[bytes]:
+        """Materialized bytes for each requested chunk, in request order
+        (duplicates allowed). The batched read primitive of the restore
+        planner (DESIGN.md §9): backends may plan the whole batch —
+        shared base chains decoded once, payload reads sorted/coalesced
+        by container offset — instead of resolving each chunk
+        independently. The store falls back to per-chunk ``get`` for
+        third-party backends that never implement this."""
+        ...
+
     def contains(self, cid: int) -> bool: ...
 
     def max_chunk_id(self) -> int:
@@ -106,11 +130,21 @@ class ContainerBackend(Protocol):
         patch for delta chunks, not the materialized bytes."""
         ...
 
-    def add_recipe(self, chunk_ids: Sequence[int]) -> int:
-        """Persist a stream recipe; returns the stream handle."""
+    def add_recipe(self, chunk_ids: Sequence[int],
+                   lengths: Sequence[int] | None = None) -> int:
+        """Persist a stream recipe; returns the stream handle.
+        ``lengths`` are the materialized chunk lengths per recipe slot —
+        persisted so ranged restores can prefix-sum a reopened stream
+        without decoding it (DESIGN.md §9.3)."""
         ...
 
     def recipe(self, handle: int) -> list[int]: ...
+
+    def recipe_lengths(self, handle: int) -> list[int] | None:
+        """Materialized chunk lengths per recipe slot, or None when the
+        recipe predates length recording (the store then derives them by
+        materializing the chunks once). Same errors as ``recipe``."""
+        ...
 
     def retire_recipe(self, handle: int) -> None:
         """Tombstone a stream recipe. The handle slot survives (later
@@ -147,11 +181,13 @@ class InMemoryBackend:
     """Everything in dicts; materialized bytes kept for every chunk."""
 
     name = "memory"
+    record_overhead = 0     # payloads stored bare in dicts
 
     def __init__(self) -> None:
         self._kind: dict[int, tuple] = {}   # cid -> (RAW,) | (DELTA, base, patch)
         self._data: dict[int, bytes] = {}   # cid -> materialized bytes
         self._recipes: list[list[int] | None] = []
+        self._recipe_lens: dict[int, list[int]] = {}
         self.epoch = 0
 
     def put_raw(self, cid: int, data: bytes) -> None:
@@ -178,6 +214,10 @@ class InMemoryBackend:
     def get(self, cid: int) -> bytes:
         return self._data[cid]
 
+    def get_many(self, cids: Sequence[int]) -> list[bytes]:
+        # materialized bytes are already held per chunk; no planning win
+        return [self._data[c] for c in cids]
+
     def contains(self, cid: int) -> bool:
         return cid in self._kind
 
@@ -201,9 +241,13 @@ class InMemoryBackend:
             return (_KIND_DELTA, rec[1], rec[2])
         return (_KIND_RAW, -1, self._data[cid])
 
-    def add_recipe(self, chunk_ids: Sequence[int]) -> int:
+    def add_recipe(self, chunk_ids: Sequence[int],
+                   lengths: Sequence[int] | None = None) -> int:
         self._recipes.append([int(c) for c in chunk_ids])
-        return len(self._recipes) - 1
+        handle = len(self._recipes) - 1
+        if lengths is not None:
+            self._recipe_lens[handle] = [int(n) for n in lengths]
+        return handle
 
     def recipe(self, handle: int) -> list[int]:
         # no negative aliasing: delete(-1) must never retire the newest
@@ -214,9 +258,14 @@ class InMemoryBackend:
             raise KeyError(f"stream {handle} retired")
         return recipe
 
+    def recipe_lengths(self, handle: int) -> list[int] | None:
+        self.recipe(handle)                 # raises on unknown/retired
+        return self._recipe_lens.get(handle)
+
     def retire_recipe(self, handle: int) -> None:
         self.recipe(handle)                 # raises on unknown/retired
         self._recipes[handle] = None
+        self._recipe_lens.pop(handle, None)
 
     def num_streams(self) -> int:
         return len(self._recipes)
@@ -256,27 +305,35 @@ class FileBackend:
         chunks.log     [RCL1 epoch] then [header cid base len][payload]
                        records, appended
         recipes.jsonl  {"epoch": N} header line, then one line per handle
-                       slot: a JSON array (live recipe), ``null`` (slot
-                       retired before the last compaction), or
-                       {"retire": h} (tombstone appended by a delete)
+                       slot: {"recipe": ids, "lens": lengths} (live
+                       recipe with materialized chunk lengths for ranged
+                       restores), a bare JSON array (live recipe written
+                       before lengths existed), ``null`` (slot retired
+                       before the last compaction), or {"retire": h}
+                       (tombstone appended by a delete)
 
     An index {cid -> (kind, base, offset, length)} is rebuilt by scanning
     the log on open, so a fresh FileBackend on an existing directory can
-    serve restores immediately. Materialized chunks are cached in memory
-    (same RAM/speed trade as InMemoryBackend once warm); the cache fills
-    lazily on reopen. ``rewrite_live`` (compaction, DESIGN.md §7.3)
+    serve restores immediately. Materialized chunks live in a
+    byte-budgeted ``DecodeCache`` (DESIGN.md §9.2) — restore working sets
+    rotate LRU under ``cache_bytes`` instead of accumulating the whole
+    dataset in RAM. ``rewrite_live`` (compaction, DESIGN.md §7.3)
     rewrites both files through temp-file + atomic rename with the epoch
     bumped; pre-header directories still open (epoch 0, records at
     offset 0).
     """
 
     name = "file"
+    record_overhead = _REC_HEADER.size
 
-    def __init__(self, path: str | Path, fsync_on_flush: bool = False) -> None:
+    def __init__(self, path: str | Path, fsync_on_flush: bool = False,
+                 cache_bytes: int | None = None) -> None:
         """``fsync_on_flush=True`` makes every ``flush()`` (one per
         committed stream — group commit, DESIGN.md §8) durable with a
         single fsync per file; the default keeps the historical
-        buffered-only commits (deletes always fsync their tombstone)."""
+        buffered-only commits (deletes always fsync their tombstone).
+        ``cache_bytes`` budgets the decode cache (DESIGN.md §9.2;
+        default ``repro.api.restore.DEFAULT_CACHE_BYTES``)."""
         self.path = Path(path)
         self._fsync_on_flush = fsync_on_flush
         self.path.mkdir(parents=True, exist_ok=True)
@@ -287,8 +344,15 @@ class FileBackend:
             if tmp.exists():        # abandoned mid-compaction; originals win
                 tmp.unlink()
         self._index: dict[int, tuple[int, int, int, int]] = {}
-        self._cache: dict[int, bytes] = {}
+        self._cache = DecodeCache(cache_bytes if cache_bytes is not None
+                                  else DEFAULT_CACHE_BYTES)
         self._recipes: list[list[int] | None] = []
+        self._recipe_lens: dict[int, list[int]] = {}
+        # restore telemetry (DESIGN.md §9.4), accumulated forever; the
+        # store snapshots around each restore to report per-call deltas
+        self.read_seconds = 0.0
+        self.decode_seconds = 0.0
+        self.bytes_read = 0
         self.epoch = 0
         self._scan()
         self._log = open(self._log_path, "ab")
@@ -299,6 +363,22 @@ class FileBackend:
             self._recipes_f.write(json.dumps({"epoch": self.epoch}) + "\n")
         self._log_read = open(self._log_path, "rb")
         self._log_dirty = False
+
+    @property
+    def cache_hits(self) -> int:
+        return self._cache.hits
+
+    @property
+    def cache_misses(self) -> int:
+        return self._cache.misses
+
+    @property
+    def cache_bytes(self) -> int:
+        return self._cache.bytes
+
+    @property
+    def cache_peak_bytes(self) -> int:
+        return self._cache.peak_bytes
 
     def _scan(self) -> None:
         # A kill -9 mid-ingest can tear the tail of either file; the torn
@@ -353,6 +433,13 @@ class FileBackend:
                                 h = int(entry["retire"])
                                 if 0 <= h < len(self._recipes):
                                     self._recipes[h] = None
+                                    self._recipe_lens.pop(h, None)
+                            elif "recipe" in entry:
+                                self._recipes.append(entry["recipe"])
+                                lens = entry.get("lens")
+                                if lens is not None:
+                                    self._recipe_lens[
+                                        len(self._recipes) - 1] = lens
                         else:   # list = live recipe, null = retired slot
                             self._recipes.append(entry)
                     first = False
@@ -372,13 +459,13 @@ class FileBackend:
 
     def put_raw(self, cid: int, data: bytes) -> None:
         self._append(_KIND_RAW, cid, -1, data)
-        self._cache[cid] = data
+        self._cache.put(cid, data)
 
     def put_delta(self, cid: int, base: int, patch: bytes,
                   data: bytes | None = None) -> None:
         self._append(_KIND_DELTA, cid, base, patch)
         if data is not None:
-            self._cache[cid] = data
+            self._cache.put(cid, data)
 
     def put_many(self, records: Sequence[tuple[int, int, bytes,
                                                bytes | None]]) -> None:
@@ -408,13 +495,14 @@ class FileBackend:
         for cid, kind, base, offset, length, data in entries:
             self._index[cid] = (kind, base, offset, length)
             if data is not None:
-                self._cache[cid] = data
+                self._cache.put(cid, data)
 
     def _read_payload(self, offset: int, length: int) -> bytes:
         if self._log_dirty:
             self._log.flush()
             self._log_dirty = False
         self._log_read.seek(offset)
+        self.bytes_read += length
         return self._log_read.read(length)
 
     def get(self, cid: int) -> bytes:
@@ -422,7 +510,10 @@ class FileBackend:
         if data is not None:
             return data
         # walk the base chain down to a raw/cached ancestor, then apply
-        # patches back up (iterative: delta chains can outgrow recursion)
+        # patches back up (iterative: delta chains can outgrow recursion).
+        # Correctness never depends on cache retention: `data` is a local
+        # strong reference, so a budget-pressed cache may evict behind us.
+        self._index[cid]        # unknown cid: KeyError before any I/O
         chain: list[tuple[int, bytes]] = []
         cur = cid
         while True:
@@ -433,14 +524,117 @@ class FileBackend:
             payload = self._read_payload(offset, length)
             if kind == _KIND_RAW:
                 data = payload
-                self._cache[cur] = data
+                self._cache.put(cur, data)
                 break
             chain.append((cur, payload))
             cur = base
         for c, patch in reversed(chain):
             data = delta.decode(patch, data)
-            self._cache[c] = data
+            self._cache.put(c, data)
         return data
+
+    def get_many(self, cids: Sequence[int]) -> list[bytes]:
+        """Planned batch materialization (DESIGN.md §9): every requested
+        chunk's base chain is decoded exactly once, payload reads are
+        issued in ascending log order with adjacent records coalesced
+        into single sequential reads, and bases stay pinned in the decode
+        cache only while a dependent patch of this plan still needs
+        them."""
+        if not cids:
+            return []
+        cache = self._cache
+        out: dict[int, bytes] = {}
+        targets = list(dict.fromkeys(int(c) for c in cids))
+        missing = []
+        for cid in targets:
+            data = cache.get(cid)
+            if data is None:
+                missing.append(cid)
+            else:
+                out[cid] = data
+        if missing:
+            index = self._index
+            for cid in missing:     # unknown cids: KeyError before any I/O
+                index[cid]
+
+            def entry(cid: int) -> tuple[int, int, int]:
+                kind, base, offset, length = index[cid]
+                return (base if kind == _KIND_DELTA else -1, offset, length)
+
+            plan = plan_chains(missing, entry, cache.__contains__)
+            wanted = set(plan.targets)
+            pinned: set[int] = set()
+            try:
+                for cid in plan.cached_bases:
+                    cache.pin(cid)
+                    pinned.add(cid)
+
+                # read phase: one sequential read per coalesced extent run
+                t0 = time.perf_counter()
+                if self._log_dirty:
+                    self._log.flush()
+                    self._log_dirty = False
+                f = self._log_read
+                payloads: dict[int, bytes] = {}
+                reads = plan.reads
+                i, n_reads = 0, len(reads)
+                while i < n_reads:
+                    start = reads[i][0]
+                    end = start + reads[i][1]
+                    j = i + 1
+                    while (j < n_reads
+                           and reads[j][0] - end <= _READ_MERGE_GAP
+                           and end - start < _READ_MAX_RUN):
+                        end = max(end, reads[j][0] + reads[j][1])
+                        j += 1
+                    f.seek(start)
+                    blob = memoryview(f.read(end - start))
+                    self.bytes_read += end - start
+                    for off, ln, cid in reads[i:j]:
+                        payloads[cid] = bytes(
+                            blob[off - start:off - start + ln])
+                    i = j
+                self.read_seconds += time.perf_counter() - t0
+
+                # decode phase: topological, each base pinned until its
+                # last dependent of THIS plan has decoded against it
+                t0 = time.perf_counter()
+                remaining = dict(plan.dependents)
+                for cid in plan.decode_order:
+                    kind, base, _, _ = index[cid]
+                    payload = payloads.pop(cid)
+                    if kind == _KIND_RAW:
+                        data = payload
+                    else:
+                        # peek, not get: the base is pinned by this very
+                        # plan, so counting it as a cache hit would
+                        # inflate the telemetry on every cold chain
+                        base_data = cache.peek(base)
+                        if base_data is None:  # pinned: only a logic bug
+                            base_data = self.get(base)
+                        data = delta.decode(payload, base_data)
+                        left = remaining.get(base)
+                        if left is not None:
+                            if left > 1:
+                                remaining[base] = left - 1
+                            else:
+                                del remaining[base]
+                                cache.unpin(base)
+                                pinned.discard(base)
+                    pin = cid in remaining
+                    cache.put(cid, data, pin=pin)
+                    if pin:
+                        pinned.add(cid)
+                    if cid in wanted:
+                        out[cid] = data
+                self.decode_seconds += time.perf_counter() - t0
+            finally:
+                # a failed plan (corrupt patch, truncated read) must not
+                # leak pins — leaked entries would be unevictable forever
+                for cid in pinned:
+                    cache.unpin(cid)
+                pinned.clear()
+        return [out[int(c)] for c in cids]
 
     def contains(self, cid: int) -> bool:
         return cid in self._index
@@ -463,11 +657,19 @@ class FileBackend:
         return (kind, base if kind == _KIND_DELTA else -1,
                 self._read_payload(offset, length))
 
-    def add_recipe(self, chunk_ids: Sequence[int]) -> int:
+    def add_recipe(self, chunk_ids: Sequence[int],
+                   lengths: Sequence[int] | None = None) -> int:
         recipe = [int(c) for c in chunk_ids]
         self._recipes.append(recipe)
-        self._recipes_f.write(json.dumps(recipe) + "\n")
-        return len(self._recipes) - 1
+        handle = len(self._recipes) - 1
+        if lengths is None:
+            self._recipes_f.write(json.dumps(recipe) + "\n")
+        else:
+            lens = [int(n) for n in lengths]
+            self._recipe_lens[handle] = lens
+            self._recipes_f.write(
+                json.dumps({"recipe": recipe, "lens": lens}) + "\n")
+        return handle
 
     def recipe(self, handle: int) -> list[int]:
         if not 0 <= handle < len(self._recipes):    # no negative aliasing
@@ -477,9 +679,14 @@ class FileBackend:
             raise KeyError(f"stream {handle} retired")
         return recipe
 
+    def recipe_lengths(self, handle: int) -> list[int] | None:
+        self.recipe(handle)                 # raises on unknown/retired
+        return self._recipe_lens.get(handle)
+
     def retire_recipe(self, handle: int) -> None:
         self.recipe(handle)                 # raises on unknown/retired
         self._recipes[handle] = None
+        self._recipe_lens.pop(handle, None)
         self._recipes_f.write(json.dumps({"retire": handle}) + "\n")
         # deletes are rare and irreversible-by-intent: fsync the tombstone
         # so a power loss cannot resurrect the stream (commits stay
@@ -529,8 +736,13 @@ class FileBackend:
         recipes_tmp = self._recipes_path.with_suffix(".jsonl.tmp")
         with open(recipes_tmp, "w") as f:
             f.write(json.dumps({"epoch": new_epoch}) + "\n")
-            for recipe in self._recipes:    # null keeps handle slots stable
-                f.write(json.dumps(recipe) + "\n")
+            for h, recipe in enumerate(self._recipes):
+                lens = self._recipe_lens.get(h)
+                if recipe is not None and lens is not None:
+                    f.write(json.dumps({"recipe": recipe, "lens": lens})
+                            + "\n")
+                else:           # null keeps handle slots stable
+                    f.write(json.dumps(recipe) + "\n")
             f.flush()
             os.fsync(f.fileno())
 
@@ -552,8 +764,7 @@ class FileBackend:
         self._log_read.close()
         self.epoch = new_epoch
         self._index = new_index
-        self._cache = {cid: d for cid, d in self._cache.items()
-                       if cid in new_index}
+        self._cache.retain(new_index.__contains__)
         self._log = open(self._log_path, "ab")
         self._log_read = open(self._log_path, "rb")
         self._log_dirty = False

@@ -141,6 +141,7 @@ def delete_stream(store: Any, handle: int) -> int:
     recipe = store.backend.recipe(handle)
     store.backend.retire_recipe(handle)     # durable backends fsync the
     store.backend.flush()                   # tombstone themselves
+    getattr(store, "_layouts", {}).pop(handle, None)   # ranged-read sums
     before = refs.dead_bytes + refs.pinned_bytes
     for cid in recipe:
         refs.decref_recipe(cid)
@@ -247,7 +248,11 @@ def compact(store: Any) -> CompactionRun:
 
     # the durable state changed shape: rederive the refcount view from it
     # and forget digests of swept payloads so future ingests cannot dedup
-    # against chunks that no longer exist
+    # against chunks that no longer exist. Ranged-restore prefix sums
+    # (store._layouts) deliberately survive: rebasing rewrites *patches*,
+    # never materialized bytes, so every live recipe's chunk lengths —
+    # and the lengths persisted next to the recipes — are invariant
+    # under compaction (pinned by tests/test_restore.py).
     store._refs = RefcountTable.rebuild(backend)
     store._by_digest = {d: c for d, c in store._by_digest.items() if c in keep}
     store._refresh_lifecycle_stats()

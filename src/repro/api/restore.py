@@ -1,0 +1,241 @@
+"""Restore/serving fast path: planner + bounded decode cache (DESIGN.md §9).
+
+CARD's whole point is detecting *more* resemblance, which means a larger
+delta-chunk fraction and deeper base chains — so serving a stream back is
+dominated by chain decodes and container reads, not hash lookups. This
+module holds the two pieces of the read path that are pure policy (no
+backend I/O), so every backend and the store share them:
+
+    plan_chains    group the requested chunk ids by shared base chains,
+                   topologically order the decodes so every base is
+                   decoded exactly once per restore, and schedule the
+                   physical payload reads in ascending log-offset order
+                   (the backend coalesces adjacent records into batched
+                   sequential reads);
+    DecodeCache    byte-budgeted LRU over materialized chunk bytes with
+                   chain-aware pinning: an entry a still-pending patch in
+                   the current plan decodes against is pinned and cannot
+                   be evicted, everything else rotates LRU under the
+                   budget. Replaces FileBackend's unbounded dict cache —
+                   restoring a store larger than RAM no longer
+                   materializes the whole dataset.
+    RecipeLayout   prefix sums over a recipe's materialized chunk
+                   lengths; maps a byte range onto the minimal chunk-id
+                   window so ``restore_range`` decodes only what the
+                   range overlaps.
+
+The planner consumes two callbacks instead of a backend so it stays
+dependency-free (and unit-testable on synthetic topologies):
+``entry(cid) -> (base, offset, length)`` describes the stored record
+(``base < 0`` = raw) and ``is_cached(cid)`` asks the decode cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Callable, Sequence
+
+import numpy as np
+
+#: Default decode-cache budget for file-backed stores. Large enough that
+#: version-chain restores stay warm, small enough that restoring a
+#: multi-GB store does not silently become an in-RAM copy of it.
+DEFAULT_CACHE_BYTES = 128 << 20
+
+
+class DecodeCache:
+    """Byte-budgeted LRU of materialized chunk bytes with pinning.
+
+    ``pin``/``unpin`` are refcounted; pinned entries are skipped by
+    eviction (the restore planner pins a base until the last dependent
+    patch of the current plan has decoded against it, so a plan never
+    re-decodes a chain it already walked). ``peak_bytes`` is sampled at
+    stable points (after each eviction pass), which is what the budget
+    acceptance test pins.
+    """
+
+    def __init__(self, budget_bytes: int = DEFAULT_CACHE_BYTES) -> None:
+        if budget_bytes <= 0:
+            raise ValueError(f"cache budget must be positive, got {budget_bytes}")
+        self.budget_bytes = int(budget_bytes)
+        self._entries: "OrderedDict[int, bytes]" = OrderedDict()
+        self._pins: dict[int, int] = {}
+        self.bytes = 0
+        self.peak_bytes = 0
+        self.hits = 0
+        self.misses = 0
+
+    def __contains__(self, cid: int) -> bool:
+        return cid in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, cid: int) -> bytes | None:
+        """Cached bytes (refreshing LRU position) or None; counts hit/miss."""
+        data = self._entries.get(cid)
+        if data is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._entries.move_to_end(cid)
+        return data
+
+    def peek(self, cid: int) -> bytes | None:
+        """``get`` without touching the hit/miss counters or LRU order —
+        for plan-internal base lookups (the plan itself pinned the entry
+        moments ago; counting those as hits would inflate the §9.4
+        telemetry every cold restore of a delta chain)."""
+        return self._entries.get(cid)
+
+    def put(self, cid: int, data: bytes, pin: bool = False) -> None:
+        old = self._entries.get(cid)
+        if old is not None:
+            self.bytes -= len(old)
+        self._entries[cid] = data
+        self._entries.move_to_end(cid)
+        self.bytes += len(data)
+        if pin:
+            self._pins[cid] = self._pins.get(cid, 0) + 1
+        self._evict()
+
+    def pin(self, cid: int) -> None:
+        """Protect an already-cached entry from eviction (refcounted)."""
+        if cid not in self._entries:
+            raise KeyError(f"cannot pin uncached chunk {cid}")
+        self._pins[cid] = self._pins.get(cid, 0) + 1
+
+    def unpin(self, cid: int) -> None:
+        left = self._pins.get(cid, 0) - 1
+        if left < 0:
+            raise ValueError(f"unpin underflow on chunk {cid}")
+        if left:
+            self._pins[cid] = left
+        else:
+            self._pins.pop(cid, None)
+            self._evict()
+
+    def retain(self, keep: Callable[[int], bool]) -> None:
+        """Drop every unpinned entry whose cid fails ``keep`` (compaction)."""
+        for cid in [c for c in self._entries
+                    if not keep(c) and not self._pins.get(c)]:
+            data = self._entries.pop(cid)
+            self.bytes -= len(data)
+
+    def _evict(self) -> None:
+        # oldest-first scan that skips pinned entries; pinned bytes may
+        # transiently exceed the budget (the plan working set), and then
+        # nothing can be dropped until an unpin
+        while self.bytes > self.budget_bytes:
+            victim = next((c for c in self._entries
+                           if not self._pins.get(c)), None)
+            if victim is None:
+                break
+            self.bytes -= len(self._entries.pop(victim))
+        if self.bytes > self.peak_bytes:
+            self.peak_bytes = self.bytes
+
+
+@dataclasses.dataclass
+class RestorePlan:
+    """One restore's worth of work, planned before any I/O happens.
+
+    targets       requested chunk ids, deduplicated, request order
+    decode_order  every chunk the plan decodes, bases strictly before
+                  their dependents, each exactly once
+    reads         (offset, length, cid) payload reads in ascending
+                  container-offset order — the backend merges adjacent
+                  entries into batched sequential reads
+    dependents    cid -> how many patches in this plan decode against it
+                  (the decode loop pins a base until this drains to 0)
+    cached_bases  chain walks that stopped at an already-cached chunk;
+                  the executor pins these up front so eviction cannot
+                  race the plan
+    """
+
+    targets: list[int]
+    decode_order: list[int]
+    reads: list[tuple[int, int, int]]
+    dependents: dict[int, int]
+    cached_bases: list[int]
+
+    def __len__(self) -> int:
+        return len(self.decode_order)
+
+
+def plan_chains(targets: Sequence[int],
+                entry: Callable[[int], tuple[int, int, int]],
+                is_cached: Callable[[int], bool]) -> RestorePlan:
+    """Plan the decode of ``targets`` (see module docstring).
+
+    ``entry(cid)`` -> ``(base, offset, length)`` for the stored record
+    (``base < 0`` raw); ``is_cached`` consults the decode cache. Chains
+    share suffixes freely: a base reached from several targets is read
+    and decoded once, and a walk that hits an already-planned or cached
+    chunk stops there.
+    """
+    decode_order: list[int] = []
+    planned: set[int] = set()
+    dependents: dict[int, int] = {}
+    cached_seen: set[int] = set()
+    cached_bases: list[int] = []
+    reads: list[tuple[int, int, int]] = []
+    uniq = list(dict.fromkeys(int(t) for t in targets))
+    for tgt in uniq:
+        path: list[int] = []
+        cur = tgt
+        while cur not in planned:
+            if is_cached(cur):
+                # record it as a pinnable base only when a patch in this
+                # plan decodes against it — a cached *target* is served
+                # straight from the cache and needs no pin
+                if cur != tgt and cur not in cached_seen:
+                    cached_seen.add(cur)
+                    cached_bases.append(cur)
+                break
+            base, offset, length = entry(cur)
+            path.append(cur)
+            planned.add(cur)
+            reads.append((offset, length, cur))
+            if base < 0:
+                break
+            dependents[base] = dependents.get(base, 0) + 1
+            cur = base
+        decode_order.extend(reversed(path))
+    reads.sort()
+    return RestorePlan(targets=uniq, decode_order=decode_order, reads=reads,
+                       dependents=dependents, cached_bases=cached_bases)
+
+
+class RecipeLayout:
+    """Prefix sums over a recipe's materialized chunk lengths.
+
+    Maps byte ranges onto chunk windows for ``restore_range``. Lengths
+    are invariant under compaction (rebasing rewrites *patches*, never
+    materialized bytes — DESIGN.md §7.2), so a layout stays valid for a
+    handle's whole lifetime; the store drops it on ``delete``.
+    """
+
+    def __init__(self, lengths: Sequence[int]) -> None:
+        self.ends = np.cumsum(np.asarray(lengths, np.int64))
+
+    @property
+    def total_bytes(self) -> int:
+        return int(self.ends[-1]) if len(self.ends) else 0
+
+    def chunk_window(self, offset: int, length: int) -> tuple[int, int, int]:
+        """``(first, last, skip)``: recipe slots ``first..last`` (inclusive)
+        cover ``[offset, offset+length)``, whose first requested byte sits
+        ``skip`` bytes into chunk ``first``. Empty ranges return
+        ``(0, -1, 0)``."""
+        if offset < 0 or length < 0:
+            raise ValueError(f"negative range ({offset}, {length})")
+        total = self.total_bytes
+        start = min(offset, total)
+        end = min(offset + length, total)
+        if end <= start:
+            return (0, -1, 0)
+        first = int(np.searchsorted(self.ends, start, side="right"))
+        last = int(np.searchsorted(self.ends, end, side="left"))
+        chunk_start = int(self.ends[first - 1]) if first else 0
+        return (first, last, start - chunk_start)

@@ -15,15 +15,25 @@ Ingestion is transactional per stream:
 ``commit()`` returns an immutable per-stream ``IngestReport`` (handle,
 per-stream DCR, chunk/dup/delta counts, detect time); the store-lifetime
 ``StoreStats`` aggregate is the running sum of all reports plus fit time.
-Until ``commit()``, nothing — not even detector index admission — has
-happened, so an abandoned session leaves no trace. Storage is a group
-commit (DESIGN.md §8): delta decisions run over a worklist first, then
-the whole stream lands as one batched backend write (``put_many``), one
-recipe append and one flush. Refcount/digest bookkeeping and — with a
-staged detector — index admission run only after every backend write
-succeeded, so a commit that fails mid-storage admits nothing to the
-index and registers no digests (chunk records already appended by the
-failed commit remain as unreferenced, torn-tail-recoverable garbage).
+Until ``commit()`` a session has only buffered bytes in memory — no
+chunking, no detector state, no backend writes — so an *abandoned*
+session leaves no trace. A commit that *fails mid-storage* is messier:
+records already appended by it persist as unreferenced garbage (swept by
+compaction, recovered from by the torn-tail scan), but it still admits
+nothing to the detector index and registers no digests, because that
+bookkeeping runs only after every backend write succeeded. Storage is a
+group commit (DESIGN.md §8): delta decisions run over a worklist first,
+then the whole stream lands as one batched backend write (``put_many``),
+one recipe append and one flush.
+
+The serving path (DESIGN.md §9) is ``restore(handle)`` plus the two
+ranged primitives: ``restore_iter`` yields chunk-aligned views without
+materializing the stream, and ``restore_range`` decodes only the chunks
+a byte range overlaps (recipe prefix sums, persisted with the recipe).
+All three go through the restore planner + ``ContainerBackend.get_many``
+so shared base chains decode once per call, and record per-call
+``RestoreReport`` telemetry (``store.last_restore``, aggregated on
+``StoreStats``).
 
 The v0 surface (``ingest``, integer stream indexes for ``restore``)
 remains as thin wrappers: handles are assigned densely in commit order, so
@@ -39,6 +49,7 @@ on an existing directory can delete/compact streams it did not ingest.
 """
 from __future__ import annotations
 
+import inspect
 import time
 from typing import Any, Sequence
 
@@ -47,8 +58,22 @@ import numpy as np
 from repro.api import containers, lifecycle
 from repro.api.detect import is_staged
 from repro.api.refcount import RefcountTable
-from repro.api.types import DetectBatch, IngestReport, StoreStats
+from repro.api.restore import RecipeLayout
+from repro.api.types import DetectBatch, IngestReport, RestoreReport, StoreStats
 from repro.core import chunking, delta
+
+
+def _accepts_lengths(add_recipe: Any) -> bool:
+    """Whether a backend's ``add_recipe`` takes the ``lengths`` argument
+    (§9.3); conservatively False when the signature is uninspectable —
+    the store then falls back to materialize-once for ranged reads."""
+    try:
+        params = inspect.signature(add_recipe).parameters
+    except (TypeError, ValueError):
+        return False
+    return "lengths" in params or any(
+        p.kind is inspect.Parameter.VAR_POSITIONAL
+        for p in params.values())
 
 
 def chunk_with(chunker: Any, stream: bytes):
@@ -133,7 +158,18 @@ class DedupStore:
         # a reopened (file-backed) backend already holds chunk ids; start
         # past them so new chunks never shadow persisted records
         self._next_id = self.backend.max_chunk_id() + 1
+        # capability probe, once: third-party backends may predate the
+        # two-argument add_recipe (§9.3). Probing the signature up front
+        # beats catching TypeError around the call — a TypeError raised
+        # *inside* a new-signature backend after it mutated state must
+        # propagate, not trigger a second (duplicating) append.
+        self._recipe_lengths_ok = _accepts_lengths(self.backend.add_recipe)
         self._refs = RefcountTable.rebuild(self.backend)
+        # ranged-restore prefix sums per handle (DESIGN.md §9.3), built
+        # lazily; dropped on delete, *kept* across compaction (lengths
+        # are invariant under rebasing)
+        self._layouts: dict[int, RecipeLayout] = {}
+        self.last_restore: RestoreReport | None = None
         self._refresh_lifecycle_stats()
 
     def fit(self, training_streams: Sequence[bytes]) -> None:
@@ -180,11 +216,16 @@ class DedupStore:
         # backend writes succeed, so a commit that fails mid-storage
         # admits nothing to the detector index. Legacy single-call
         # detectors mutate inside detect() and can't make that promise.
+        # A zero-chunk stream (``ingest(b"")``) never reaches a detector
+        # at all — neither path is required to accept an empty batch.
         extract_seconds = score_seconds = observe_seconds = 0.0
         batch = DetectBatch(chunks=chunks, ids=ids, is_new=is_new,
                             stream_hashes=stream_hashes)
-        staged = is_staged(self.detector)
-        if staged:
+        staged = n > 0 and is_staged(self.detector)
+        feats = None
+        if n == 0:
+            base_ids = np.empty(0, np.int64)
+        elif staged:
             t0 = time.perf_counter()
             feats = self.detector.extract(batch)
             extract_seconds = time.perf_counter() - t0
@@ -206,6 +247,10 @@ class DedupStore:
         backend = self.backend
         bytes_in = sum(ck.length for ck in chunks)
         bytes_stored = 0
+        # per-record container overhead (headers etc.), backend-reported
+        # so per-stream DCR matches the real on-disk footprint —
+        # FileBackend's record header is 25 bytes, not a nominal 8
+        overhead = int(getattr(backend, "record_overhead", 0))
         dup_chunks = int(n - is_new.sum())
         delta_chunks = raw_chunks = 0
         delta_seconds = 0.0
@@ -226,11 +271,11 @@ class DedupStore:
                     delta_seconds += time.perf_counter() - t0
                     if len(d) < ck.length:
                         entry = (cid, base, d, ck.data)
-                        bytes_stored += len(d) + 8  # + recipe metadata
+                        bytes_stored += len(d) + overhead
                         delta_chunks += 1
             if entry is None:
                 entry = (cid, -1, ck.data, None)
-                bytes_stored += ck.length
+                bytes_stored += ck.length + overhead
                 raw_chunks += 1
             records.append(entry)
             staged_data[cid] = ck.data
@@ -255,7 +300,11 @@ class DedupStore:
             self._refs.track(cid, base, len(payload))
             self._by_digest[digests[i]] = cid
         recipe = [int(c) for c in ids]
-        handle = backend.add_recipe(recipe)
+        if self._recipe_lengths_ok:     # persist materialized lengths
+            handle = backend.add_recipe(recipe,     # for ranged restores
+                                        [int(ck.length) for ck in chunks])
+        else:                           # pre-§9 backend signature
+            handle = backend.add_recipe(recipe)
         for cid in recipe:      # only now do the chunks become live
             self._refs.incref_recipe(cid)
         backend.flush()
@@ -279,13 +328,112 @@ class DedupStore:
         self._refresh_lifecycle_stats()
         return report
 
+    # --- serving path (repro.api.restore, DESIGN.md §9) ----------------------
+
     def restore(self, handle: int) -> bytes:
         """Reconstruct a committed stream byte-for-byte by its handle.
-        Raises KeyError once the stream has been deleted."""
-        out = bytearray()
-        for cid in self.backend.recipe(handle):
-            out.extend(self.backend.get(cid))
-        return bytes(out)
+        Raises KeyError once the stream has been deleted (IndexError for
+        a handle the store never issued)."""
+        recipe = self.backend.recipe(handle)
+        t0, snap = time.perf_counter(), self._io_snapshot()
+        data = self._fetch_unique(recipe)
+        out = b"".join(data[cid] for cid in recipe)
+        self._note_restore(handle, len(out), len(recipe), t0, snap)
+        return out
+
+    def restore_iter(self, handle: int, batch_chunks: int = 256):
+        """Stream a committed object as chunk-aligned ``bytes`` views.
+
+        Chunks are materialized ``batch_chunks`` recipe slots at a time
+        (one planned ``get_many`` per batch), so serving a stream far
+        larger than the decode-cache budget never holds more than a
+        batch of output in memory. Same errors as ``restore``, raised at
+        call time; the ``RestoreReport`` is recorded when the iterator
+        is exhausted."""
+        recipe = self.backend.recipe(handle)    # raise before iterating
+
+        def gen():
+            t0, snap = time.perf_counter(), self._io_snapshot()
+            total = 0
+            for i in range(0, len(recipe), batch_chunks):
+                part = recipe[i:i + batch_chunks]
+                data = self._fetch_unique(part)
+                for cid in part:
+                    piece = data[cid]
+                    total += len(piece)
+                    yield piece
+            self._note_restore(handle, total, len(recipe), t0, snap)
+
+        return gen()
+
+    def restore_range(self, handle: int, offset: int, length: int) -> bytes:
+        """Serve ``stream[offset:offset + length]`` — the partial-read
+        serving primitive. Recipe prefix sums (persisted at commit) map
+        the byte range onto the minimal chunk window, so only the chunks
+        overlapping the range are read and chain-decoded. Ranges are
+        clamped to the stream tail; negative offset/length raise
+        ValueError; same handle errors as ``restore``."""
+        recipe = self.backend.recipe(handle)
+        t0, snap = time.perf_counter(), self._io_snapshot()
+        first, last, skip = self._layout(handle, recipe).chunk_window(
+            offset, length)
+        if last < first:
+            self._note_restore(handle, 0, 0, t0, snap)
+            return b""
+        part = recipe[first:last + 1]
+        data = self._fetch_unique(part)
+        blob = b"".join(data[cid] for cid in part)
+        out = blob[skip:skip + min(length, len(blob) - skip)]
+        self._note_restore(handle, len(out), len(part), t0, snap)
+        return out
+
+    def stream_length(self, handle: int) -> int:
+        """Total materialized bytes of a committed stream (no decoding
+        when the backend persisted recipe lengths)."""
+        return self._layout(handle, self.backend.recipe(handle)).total_bytes
+
+    def _fetch_unique(self, cids: Sequence[int]) -> dict[int, bytes]:
+        """Materialize each distinct chunk id once: planned ``get_many``
+        when the backend implements it, per-chunk ``get`` otherwise."""
+        uniq = list(dict.fromkeys(int(c) for c in cids))
+        get_many = getattr(self.backend, "get_many", None)
+        if get_many is not None:
+            return dict(zip(uniq, get_many(uniq)))
+        return {cid: self.backend.get(cid) for cid in uniq}
+
+    def _layout(self, handle: int, recipe: Sequence[int]) -> RecipeLayout:
+        layout = self._layouts.get(handle)
+        if layout is None:
+            lengths = None
+            recipe_lengths = getattr(self.backend, "recipe_lengths", None)
+            if recipe_lengths is not None:
+                lengths = recipe_lengths(handle)
+            if lengths is None:     # pre-§9 recipe: materialize once
+                data = self._fetch_unique(recipe)
+                lengths = [len(data[cid]) for cid in recipe]
+            layout = RecipeLayout(lengths)
+            self._layouts[handle] = layout
+        return layout
+
+    def _io_snapshot(self) -> tuple[float, float, int, int, int]:
+        b = self.backend
+        return (getattr(b, "read_seconds", 0.0),
+                getattr(b, "decode_seconds", 0.0),
+                getattr(b, "bytes_read", 0),
+                getattr(b, "cache_hits", 0),
+                getattr(b, "cache_misses", 0))
+
+    def _note_restore(self, handle: int, bytes_out: int, chunks: int,
+                      t0: float, snap: tuple) -> None:
+        read_s, dec_s, b_read, hits, misses = self._io_snapshot()
+        report = RestoreReport(
+            handle=handle, bytes_out=bytes_out, chunks=chunks,
+            seconds=time.perf_counter() - t0,
+            read_seconds=read_s - snap[0], decode_seconds=dec_s - snap[1],
+            bytes_read=b_read - snap[2], cache_hits=hits - snap[3],
+            cache_misses=misses - snap[4])
+        self.last_restore = report
+        self.stats.absorb_restore(report)
 
     # --- space reclamation (repro.api.lifecycle, DESIGN.md §7) ---------------
 

@@ -10,9 +10,13 @@ These are the *only* objects that cross layer boundaries:
   IngestReport   immutable per-stream accounting returned by
                  ``StreamSession.commit()`` — the stream handle plus the
                  stream's own byte/chunk/time counters;
+  RestoreReport  immutable per-restore accounting (DESIGN.md §9.4):
+                 bytes served vs container bytes read, read/decode time
+                 split, decode-cache hits/misses. The store keeps the
+                 latest on ``DedupStore.last_restore``;
   StoreStats     the store-lifetime aggregate (sum of every IngestReport
-                 plus offline fit time). Kept for the v0 surface; new code
-                 should prefer per-stream IngestReports.
+                 and RestoreReport plus offline fit time). Kept for the
+                 v0 surface; new code should prefer the per-call reports.
 
 Nothing in this module mutates anything and nothing here imports the
 pipeline, so every layer (core detectors, container backends, registry,
@@ -112,6 +116,30 @@ class IngestReport:
         return self.bytes_in / max(1, self.bytes_stored)
 
 
+@dataclasses.dataclass(frozen=True)
+class RestoreReport:
+    """What one restore (full, ranged, or fully-consumed iterator) cost
+    (DESIGN.md §9.4). ``read_seconds``/``decode_seconds``/``bytes_read``
+    and the cache counters come from backend telemetry deltas; backends
+    without counters (e.g. the in-memory one) report zeros there while
+    ``seconds``/``bytes_out`` stay exact."""
+
+    handle: int
+    bytes_out: int = 0          # bytes served to the caller
+    chunks: int = 0             # recipe slots touched
+    seconds: float = 0.0        # end-to-end wall time
+    read_seconds: float = 0.0   # container payload I/O
+    decode_seconds: float = 0.0  # delta-chain decoding
+    bytes_read: int = 0         # container bytes fetched (vs bytes_out)
+    cache_hits: int = 0
+    cache_misses: int = 0
+
+    @property
+    def read_amplification(self) -> float:
+        """Container bytes read per byte served (< 1 once cache-warm)."""
+        return self.bytes_read / max(1, self.bytes_out)
+
+
 @dataclasses.dataclass
 class StoreStats:
     """Store-lifetime aggregate: the sum of every committed IngestReport
@@ -144,6 +172,16 @@ class StoreStats:
     dead_bytes: int = 0
     reclaimed_bytes: int = 0
     chain_depth_hist: dict[int, int] = dataclasses.field(default_factory=dict)
+    # restore telemetry (DESIGN.md §9.4): the running sum of every
+    # absorbed RestoreReport, maintained by absorb_restore
+    restores: int = 0
+    restore_bytes_out: int = 0
+    restore_bytes_read: int = 0
+    restore_seconds: float = 0.0
+    restore_read_seconds: float = 0.0
+    restore_decode_seconds: float = 0.0
+    restore_cache_hits: int = 0
+    restore_cache_misses: int = 0
 
     @property
     def dcr(self) -> float:
@@ -163,3 +201,13 @@ class StoreStats:
         self.score_seconds += report.score_seconds
         self.observe_seconds += report.observe_seconds
         self.store_seconds += report.store_seconds
+
+    def absorb_restore(self, report: "RestoreReport") -> None:
+        self.restores += 1
+        self.restore_bytes_out += report.bytes_out
+        self.restore_bytes_read += report.bytes_read
+        self.restore_seconds += report.seconds
+        self.restore_read_seconds += report.read_seconds
+        self.restore_decode_seconds += report.decode_seconds
+        self.restore_cache_hits += report.cache_hits
+        self.restore_cache_misses += report.cache_misses

@@ -4,5 +4,6 @@ from repro.distributed.sharding import (  # noqa: F401
     constrain,
     default_rules,
     param_pspecs,
+    shard_map,
     use_rules,
 )

@@ -68,7 +68,8 @@ def pipeline_apply(stage_fn: Callable, stage_params: Any, x: jax.Array,
         ys = emits[s - 1:]
         return ys
 
-    fn = jax.shard_map(
+    from repro.distributed.sharding import shard_map
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(P(axis), P()),        # params staged; microbatches replicated
         out_specs=P(axis),              # [S, M, mb, ...]; only last stage valid

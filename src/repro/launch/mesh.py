@@ -16,17 +16,30 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` across jax versions.
+
+    jax >= 0.5 grew ``jax.sharding.AxisType`` and ``make_mesh`` takes an
+    ``axis_types`` tuple; 0.4.x has neither. Everything in this repo (and
+    the subprocess scripts in tests) builds meshes through this shim so
+    the explicit-axis-type request is made exactly where it exists and
+    omitted where it would raise AttributeError/TypeError.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1):
     """Small mesh over the real local devices (tests / examples)."""
     n = len(jax.devices())
     assert n % model_axis == 0
-    return jax.make_mesh(
-        (n // model_axis, model_axis), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // model_axis, model_axis), ("data", "model"))

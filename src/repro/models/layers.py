@@ -358,7 +358,8 @@ def moe(params, x, cfg):
         return out.astype(x.dtype).reshape(b, s, d), aux
 
     from jax.sharding import PartitionSpec as P
-    shard_map = jax.shard_map
+
+    from repro.distributed.sharding import shard_map
 
     m_ax = mesh.shape["model"]
     batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)

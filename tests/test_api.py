@@ -327,7 +327,17 @@ def test_memory_and_file_backends_agree(tmp_path, versions):
         {"backend": "file", "backend_args": {"path": str(tmp_path)}}))
     s_mem = _run_store(mem, versions[:2])
     s_fil = _run_store(fil, versions[:2])
-    assert _stat_tuple(s_mem) == _stat_tuple(s_fil)
+
+    def normalized(stats, store):
+        # bytes_stored includes the backend-reported per-record overhead
+        # (25-byte log headers on file, none in dicts); strip it so the
+        # payload accounting must still agree bit-for-bit
+        records = stats.delta_chunks + stats.raw_chunks
+        t = _stat_tuple(stats)
+        return (t[0], t[1] - records * store.backend.record_overhead,
+                *t[2:])
+
+    assert normalized(s_mem, mem) == normalized(s_fil, fil)
     fil.close()
 
 

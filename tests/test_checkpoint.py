@@ -109,6 +109,7 @@ def test_dedup_store_dcr_improves_with_smaller_updates():
         (fine.stats.dcr, coarse.stats.dcr)
 
 
+@pytest.mark.subprocess_mesh
 def test_elastic_reshard_subprocess(tmp_path):
     """Save on an 8-device mesh, restore onto a 4-device mesh."""
     script = r"""
@@ -117,8 +118,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import save, restore
+from repro.launch.mesh import make_mesh
 n = %d
-mesh = jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((n,), ("data",))
 x = jnp.arange(64.0).reshape(8, 8)
 xs = jax.device_put(x, NamedSharding(mesh, P("data", None)))
 mode = sys.argv[1]
@@ -142,6 +144,7 @@ else:
     assert "ELASTIC_OK" in p2.stdout
 
 
+@pytest.mark.subprocess_mesh
 def test_restart_after_injected_failure(tmp_path):
     """Worker crashes at step 12; supervisor restarts; run completes from
     the last committed checkpoint."""

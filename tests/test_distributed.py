@@ -13,6 +13,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, get_shape
 from repro.distributed import hlo_cost, roofline, sharding as shd
+from repro.launch.mesh import make_mesh
 
 
 class TestRules:
@@ -36,12 +37,10 @@ class TestRules:
 
 class TestSanitize:
     def _mesh(self):
-        return jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return make_mesh((1, 1), ("data", "model"))
 
     def test_drop_and_shift(self):
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((1, 1), ("data", "model"))
         # fake a 16-way model axis via a mesh dict stand-in
         class FakeMesh:
             shape = {"data": 16, "model": 16}
@@ -144,6 +143,7 @@ class TestRooflineMath:
         assert 0 < r.roofline_fraction <= 1
 
 
+@pytest.mark.subprocess_mesh
 def test_sharded_train_step_8dev():
     """End-to-end: reduced qwen3 (MoE, shard_map EP path) trains on an
     8-device (2 data x 4 model) CPU mesh with the production sharding rules."""
@@ -155,12 +155,12 @@ def test_sharded_train_step_8dev():
         from repro import optim
         from repro.configs import get_config
         from repro.distributed import sharding as shd
+        from repro.launch.mesh import make_mesh
         from repro.models import make_model
         from repro.train import make_train_step
         from repro.train.step import init_state
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         cfg = get_config("qwen3-moe-30b-a3b").reduced()
         model = make_model(cfg)
         rules = shd.ShardingRules(batch=("data",), p_d_model=None,

@@ -5,6 +5,8 @@ import sys
 import textwrap
 from pathlib import Path
 
+import pytest
+
 
 def _run(script):
     env = dict(os.environ, PYTHONPATH="src")
@@ -14,15 +16,16 @@ def _run(script):
     return p.stdout
 
 
+@pytest.mark.subprocess_mesh
 def test_pipeline_matches_sequential():
     out = _run(textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import jax, jax.numpy as jnp, numpy as np
         from repro.distributed.pipeline import pipeline_apply, reference_apply
+        from repro.launch.mesh import make_mesh
 
-        mesh = jax.make_mesh((4,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("pod",))
         rng = jax.random.PRNGKey(0)
         S, D = 4, 16
         params = {"w": jax.random.normal(rng, (S, D, D)) * 0.3,

@@ -1,0 +1,426 @@
+"""Restore/serving fast path (DESIGN.md §9): planner, bounded decode
+cache, ranged reads, backend parity, and the empty-stream regression."""
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api.restore import DecodeCache, RecipeLayout, plan_chains
+from repro.core import delta
+
+AVG = 2048
+
+
+def _versions(n=3, size=96 << 10, seed=0):
+    """Version chain with heavy cross-version similarity (delta chains)."""
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, 256, size, np.uint8)
+    out = []
+    for v in range(n):
+        cur = base.copy()
+        for _ in range(24):
+            p = int(rng.integers(0, size - 256))
+            cur[p:p + 128] = rng.integers(0, 256, 128, np.uint8)
+        out.append(cur.tobytes())
+        base = cur
+    return out
+
+
+def _card_cfg(extra=None):
+    d = {"detector": "card",
+         "detector_args": {"feat": {"k": 16, "m": 32, "n": 2},
+                           "model": {"m": 32, "d": 20, "steps": 40},
+                           "use_kernel": False},
+         "chunker_args": {"avg_size": AVG}}
+    d.update(extra or {})
+    return api.DedupConfig.from_dict(d)
+
+
+def _ingest(store, versions):
+    store.fit(list(versions[:1]))
+    handles = []
+    for v in versions:
+        with store.open_stream() as s:
+            s.write(v)
+        handles.append(s.report.handle)
+    return handles
+
+
+# --- planner ------------------------------------------------------------------
+
+def _toy_entries(edges):
+    """edges: cid -> base (-1 raw). Offsets/lengths synthesized per cid."""
+    def entry(cid):
+        return (edges[cid], cid * 100, 10)
+    return entry
+
+
+def test_plan_decodes_every_chain_node_exactly_once():
+    # two targets sharing a chain suffix: 5->4->3->0(raw), 7->3->0
+    edges = {0: -1, 3: 0, 4: 3, 5: 4, 7: 3}
+    plan = plan_chains([5, 7], _toy_entries(edges), lambda c: False)
+    assert sorted(plan.decode_order) == [0, 3, 4, 5, 7]
+    # topological: every base decodes before its dependents
+    pos = {c: i for i, c in enumerate(plan.decode_order)}
+    for cid, base in edges.items():
+        if base >= 0 and cid in pos:
+            assert pos[base] < pos[cid]
+    # shared suffix read once, reads ascend by offset
+    assert [r[2] for r in plan.reads] == sorted(
+        {0, 3, 4, 5, 7}, key=lambda c: c * 100)
+    assert plan.dependents == {0: 1, 3: 2, 4: 1}
+
+
+def test_plan_stops_at_cached_base_and_pins_it():
+    edges = {0: -1, 1: 0, 2: 1}
+    plan = plan_chains([2], _toy_entries(edges), lambda c: c == 1)
+    assert plan.decode_order == [2]
+    assert plan.cached_bases == [1]
+    assert plan.dependents == {1: 1}
+    # a cached *target* is not a pinnable base
+    plan2 = plan_chains([1], _toy_entries(edges), lambda c: c == 1)
+    assert plan2.decode_order == [] and plan2.cached_bases == []
+
+
+def test_plan_dedups_duplicate_targets():
+    edges = {0: -1, 1: 0}
+    plan = plan_chains([1, 1, 0, 1], _toy_entries(edges), lambda c: False)
+    assert plan.targets == [1, 0]
+    assert plan.decode_order == [0, 1]
+    assert len(plan.reads) == 2
+
+
+# --- decode cache -------------------------------------------------------------
+
+def test_decode_cache_lru_eviction_under_budget():
+    cache = DecodeCache(budget_bytes=100)
+    cache.put(1, b"a" * 40)
+    cache.put(2, b"b" * 40)
+    cache.get(1)                    # refresh: 2 is now LRU
+    cache.put(3, b"c" * 40)         # evicts 2
+    assert 1 in cache and 3 in cache and 2 not in cache
+    assert cache.bytes <= 100
+    assert cache.peak_bytes <= 100
+
+
+def test_decode_cache_pin_blocks_eviction_until_unpin():
+    cache = DecodeCache(budget_bytes=100)
+    cache.put(1, b"a" * 60, pin=True)
+    cache.put(2, b"b" * 60)         # over budget, but 1 is pinned -> 2 evicted
+    assert 1 in cache and 2 not in cache
+    cache.put(3, b"c" * 30)
+    assert 1 in cache               # still pinned
+    cache.unpin(1)                  # now evictable; next pressure drops it
+    cache.put(4, b"d" * 30)
+    assert 1 not in cache and 3 in cache and 4 in cache
+    with pytest.raises(ValueError):
+        cache.unpin(1)
+    with pytest.raises(KeyError):
+        cache.pin(99)
+
+
+def test_decode_cache_counts_hits_and_misses():
+    cache = DecodeCache(budget_bytes=100)
+    cache.put(1, b"x")
+    assert cache.get(1) == b"x" and cache.get(2) is None
+    assert (cache.hits, cache.misses) == (1, 1)
+
+
+# --- recipe layout ------------------------------------------------------------
+
+def test_recipe_layout_windows():
+    lay = RecipeLayout([10, 20, 30])
+    assert lay.total_bytes == 60
+    assert lay.chunk_window(0, 10) == (0, 0, 0)
+    assert lay.chunk_window(9, 2) == (0, 1, 9)      # straddles 0/1
+    assert lay.chunk_window(10, 1) == (1, 1, 0)
+    assert lay.chunk_window(59, 100) == (2, 2, 29)  # clamped to tail
+    assert lay.chunk_window(60, 5)[1] == -1         # past the end: empty
+    assert lay.chunk_window(5, 0)[1] == -1
+    with pytest.raises(ValueError):
+        lay.chunk_window(-1, 5)
+    assert RecipeLayout([]).total_bytes == 0
+
+
+# --- end-to-end byte identity -------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["memory", "file"])
+def test_restore_surfaces_byte_identical(tmp_path, backend):
+    extra = {}
+    if backend == "file":
+        extra = {"backend": "file", "backend_args": {"path": str(tmp_path)}}
+    store = api.build_store(_card_cfg(extra))
+    versions = _versions()
+    handles = _ingest(store, versions)
+    assert store.stats.delta_chunks > 0     # chains actually exist
+    rng = np.random.default_rng(1)
+    for h, v in zip(handles, versions):
+        assert store.restore(h) == v
+        assert b"".join(store.restore_iter(h, batch_chunks=5)) == v
+        assert store.stream_length(h) == len(v)
+        for _ in range(16):
+            off = int(rng.integers(0, len(v) + AVG))
+            ln = int(rng.integers(0, 3 * AVG))
+            assert store.restore_range(h, off, ln) == v[off:off + ln]
+    store.close()
+
+
+def test_restore_range_survives_compaction(tmp_path):
+    """Compaction rebases patches but never materialized bytes, so the
+    persisted prefix sums — and any cached layout — stay valid."""
+    store = api.build_store(_card_cfg(
+        {"backend": "file", "backend_args": {"path": str(tmp_path)}}))
+    versions = _versions(4)
+    handles = _ingest(store, versions)
+    keep, v_keep = handles[-1], versions[-1]
+    probe = (store.restore_range(keep, 1000, 5000),
+             store.stream_length(keep))     # populate the layout cache
+    for h in handles[:-1]:
+        store.delete(h)
+    run = store.compact()
+    assert not run.skipped and run.swept_chunks > 0
+    assert store.restore(keep) == v_keep
+    assert store.restore_range(keep, 1000, 5000) == probe[0] \
+        == v_keep[1000:6000]
+    assert store.stream_length(keep) == probe[1] == len(v_keep)
+    store.close()
+
+
+def test_reopened_store_serves_ranges_without_decoding_all(tmp_path):
+    store = api.build_store(_card_cfg(
+        {"backend": "file", "backend_args": {"path": str(tmp_path)}}))
+    versions = _versions()
+    handles = _ingest(store, versions)
+    store.close()
+
+    cfg = api.DedupConfig.from_dict(
+        {"detector": "dedup-only", "chunker_args": {"avg_size": AVG},
+         "backend": "file", "backend_args": {"path": str(tmp_path)}})
+    cold = api.build_store(cfg)
+    h, v = handles[0], versions[0]
+    got = cold.restore_range(h, len(v) // 2, AVG)
+    assert got == v[len(v) // 2:len(v) // 2 + AVG]
+    # persisted prefix sums: a ranged read must not fetch the whole stream
+    assert cold.last_restore.bytes_read < len(v) // 2
+    assert cold.last_restore.chunks < len(cold.backend.recipe(h))
+    cold.close()
+
+
+def test_legacy_recipes_without_lengths_still_serve_ranges(tmp_path):
+    """Pre-§9 recipe lines (bare id arrays) have no persisted lengths;
+    the store falls back to materializing the chunks once."""
+    backend = api.FileBackend(tmp_path)
+    backend.put_raw(0, b"a" * 100)
+    backend.put_raw(1, b"b" * 50)
+    h = backend.add_recipe([0, 1, 0])       # legacy signature: no lengths
+    backend.close()
+
+    reopened = api.FileBackend(tmp_path)
+    assert reopened.recipe_lengths(h) is None
+    store = api.DedupStore(api.build_detector(api.DedupConfig.from_dict(
+        {"detector": "dedup-only"})), backend=reopened)
+    assert store.stream_length(h) == 250
+    assert store.restore_range(h, 90, 70) == b"a" * 10 + b"b" * 50 + b"a" * 10
+    store.close()
+
+
+# --- bounded decode cache on the serving path ---------------------------------
+
+def test_file_backend_cache_stays_under_budget_on_large_restore(tmp_path):
+    """Restoring a store larger than the decode-cache budget must not
+    materialize the dataset in RAM (the seed behaviour): peak cache bytes
+    stay under the configured budget, bytes stay identical."""
+    budget = 256 << 10
+    rng = np.random.default_rng(7)
+    # incompressible streams, several multiples of the budget in total
+    versions = [rng.integers(0, 256, 384 << 10, np.uint8).tobytes()
+                for _ in range(4)]
+    cfg = api.DedupConfig.from_dict(
+        {"detector": "dedup-only", "chunker_args": {"avg_size": AVG},
+         "backend": "file", "backend_args": {"path": str(tmp_path)}})
+    store = api.build_store(cfg)
+    handles = [store.ingest(v) and store.reports[-1].handle
+               for v in versions]
+    store.close()
+
+    cfg.restore_cache_bytes = budget
+    cold = api.build_store(cfg)
+    assert cold.backend._cache.budget_bytes == budget
+    total = sum(len(v) for v in versions)
+    assert total > 4 * budget
+    for h, v in zip(handles, versions):
+        assert cold.restore(h) == v
+    assert cold.backend.cache_peak_bytes <= budget
+    assert cold.stats.restore_bytes_out == total
+    cold.close()
+
+
+def test_restore_telemetry_cold_then_warm(tmp_path):
+    store = api.build_store(_card_cfg(
+        {"backend": "file", "backend_args": {"path": str(tmp_path)}}))
+    versions = _versions()
+    handles = _ingest(store, versions)
+    store.close()
+
+    cfg = api.DedupConfig.from_dict(
+        {"detector": "dedup-only", "chunker_args": {"avg_size": AVG},
+         "backend": "file", "backend_args": {"path": str(tmp_path)}})
+    cold = api.build_store(cfg)
+    h, v = handles[-1], versions[-1]
+    assert cold.restore(h) == v
+    first = cold.last_restore
+    assert first.bytes_read > 0 and first.cache_misses > 0
+    assert first.bytes_out == len(v)
+    assert cold.restore(h) == v             # warm: chains cached
+    second = cold.last_restore
+    assert second.cache_hits > 0 and second.bytes_read == 0
+    assert cold.stats.restores == 2
+    assert cold.stats.restore_bytes_out == 2 * len(v)
+    cold.close()
+
+
+# --- backend parity -----------------------------------------------------------
+
+def _both_backends(tmp_path):
+    mem = api.InMemoryBackend()
+    fil = api.FileBackend(tmp_path)
+    return [("memory", mem), ("file", fil)]
+
+
+def test_backends_raise_identical_errors_for_bad_handles(tmp_path):
+    versions = _versions(2)
+    for name, backend in _both_backends(tmp_path):
+        store = api.DedupStore(
+            api.build_detector(api.DedupConfig.from_dict(
+                {"detector": "dedup-only"})), backend=backend)
+        h = store.ingest(versions[0]) and store.reports[-1].handle
+        for surface in (store.restore,
+                        lambda hh: store.restore_iter(hh),
+                        lambda hh: store.restore_range(hh, 0, 1),
+                        backend.recipe, backend.recipe_lengths):
+            with pytest.raises(IndexError):
+                surface(h + 99)             # never issued
+            with pytest.raises(IndexError):
+                surface(-1)                 # no negative aliasing
+        store.delete(h)
+        for surface in (store.restore,
+                        lambda hh: store.restore_iter(hh),
+                        lambda hh: store.restore_range(hh, 0, 1),
+                        backend.recipe, backend.recipe_lengths):
+            with pytest.raises(KeyError):
+                surface(h)                  # retired
+        store.close()
+
+
+def _random_chain_backend(backend, rng, n_chunks):
+    """Random delta-chain topology: every chunk is raw or a patch against
+    an arbitrary earlier chunk (arbitrary fan-out, arbitrary depth)."""
+    datas = {}
+    for cid in range(n_chunks):
+        data = rng.integers(0, 256, int(rng.integers(64, 2048)),
+                            np.uint8).tobytes()
+        if cid and rng.random() < 0.75:
+            base = int(rng.integers(0, cid))
+            # borrow runs from the base so the patch is non-trivial
+            mix = bytearray(datas[base])
+            edit = rng.integers(0, 256, 64, np.uint8).tobytes()
+            pos = int(rng.integers(0, max(1, len(mix) - 64)))
+            mix[pos:pos + 64] = edit
+            data = bytes(mix)
+            backend.put_delta(cid, base, delta.encode(data, datas[base]),
+                              data=data)
+        else:
+            backend.put_raw(cid, data)
+        datas[cid] = data
+    return datas
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_get_many_matches_get_on_random_chain_topologies(tmp_path, seed):
+    """Property test: planned batch materialization is byte-for-byte the
+    per-chunk path, over random chain topologies, orders and cache
+    states, on both backends (cold reopen for the file one)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(10, 60))
+    mem = api.InMemoryBackend()
+    fil = api.FileBackend(tmp_path / f"s{seed}", cache_bytes=32 << 10)
+    datas_m = _random_chain_backend(mem, np.random.default_rng(seed), n)
+    datas_f = _random_chain_backend(fil, np.random.default_rng(seed), n)
+    assert datas_m == datas_f
+    fil.close()
+    cold = api.FileBackend(tmp_path / f"s{seed}", cache_bytes=32 << 10)
+    for backend, datas in ((mem, datas_m), (cold, datas_f)):
+        for _ in range(4):
+            k = int(rng.integers(1, n + 1))
+            query = [int(c) for c in rng.integers(0, n, k)]
+            want = [datas[c] for c in query]
+            assert backend.get_many(query) == want
+            assert [backend.get(c) for c in query] == want
+    with pytest.raises(KeyError):
+        cold.get_many([0, n + 5])
+    cold.close()
+
+
+def test_get_many_failure_leaks_no_pins(tmp_path):
+    """A plan that dies mid-decode (corrupt patch) must release every pin
+    it took — leaked pins would make cache entries unevictable forever."""
+    backend = api.FileBackend(tmp_path, cache_bytes=1 << 10)
+    backend.put_raw(0, b"A" * 600)
+    patch = delta.encode(b"A" * 590 + b"B" * 10, b"A" * 600)
+    backend.put_delta(1, 0, patch)
+    backend.flush()
+    _, _, offset, _ = backend._index[1]
+    with open(tmp_path / "chunks.log", "r+b") as f:
+        f.seek(offset)
+        f.write(b"\x07")                    # invalid opcode: decode raises
+    with pytest.raises(ValueError):
+        backend.get_many([1])
+    assert not backend._cache._pins
+    with open(tmp_path / "chunks.log", "r+b") as f:
+        f.seek(offset)
+        f.write(patch[:1])                  # repair; backend still serves
+    assert backend.get_many([1]) == [b"A" * 590 + b"B" * 10]
+    backend.close()
+
+
+# --- empty stream regression --------------------------------------------------
+
+@pytest.mark.parametrize("detector", ["card", "dedup-only", "finesse"])
+def test_empty_stream_commit_and_restore(tmp_path, detector):
+    """``ingest(b"")`` must commit a zero-chunk recipe and restore to
+    b"" on both staged (card) and legacy detector paths (regression:
+    the staged score() crashed on an empty batch)."""
+    for backend_extra in ({}, {"backend": "file",
+                              "backend_args": {"path": str(
+                                  tmp_path / detector)}}):
+        d = {"detector": detector, "chunker_args": {"avg_size": AVG}}
+        d.update(backend_extra)
+        store = api.build_store(api.DedupConfig.from_dict(d))
+        if detector == "card":
+            store.fit([_versions(1)[0]])
+        store.ingest(b"")
+        report = store.reports[-1]
+        assert (report.bytes_in, report.chunks, report.bytes_stored) == (0, 0, 0)
+        h = report.handle
+        assert store.restore(h) == b""
+        assert list(store.restore_iter(h)) == []
+        assert store.restore_range(h, 0, 100) == b""
+        assert store.stream_length(h) == 0
+        # a later non-empty stream is unaffected
+        v = _versions(1)[0]
+        store.ingest(v)
+        assert store.restore(store.reports[-1].handle) == v
+        store.close()
+
+
+def test_empty_stream_survives_file_reopen(tmp_path):
+    cfg = api.DedupConfig.from_dict(
+        {"detector": "dedup-only", "chunker_args": {"avg_size": AVG},
+         "backend": "file", "backend_args": {"path": str(tmp_path)}})
+    store = api.build_store(cfg)
+    store.ingest(b"")
+    h = store.reports[-1].handle
+    store.close()
+    reopened = api.build_store(cfg)
+    assert reopened.restore(h) == b""
+    assert reopened.stream_length(h) == 0
+    reopened.close()
