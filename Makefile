@@ -5,7 +5,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: dev-deps test test-fast test-lifecycle ci bench bench-smoke \
-        gc-bench ingest-bench restore-bench quickstart
+        gc-bench ingest-bench restore-bench serve-bench quickstart
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -42,6 +42,11 @@ ingest-bench:
 # cold/warm/ranged/post-compaction restore MB/s; writes BENCH_RESTORE.json
 restore-bench:
 	$(PYTHON) -m benchmarks.bench_restore
+
+# concurrent serving engine: aggregate MB/s + p50/p99 latency at 1/2/4
+# restore threads (DESIGN.md §10.7); appends rows to BENCH_RESTORE.json
+serve-bench:
+	$(PYTHON) -m benchmarks.bench_restore --threads 1,2,4
 
 quickstart:
 	$(PYTHON) examples/quickstart.py

@@ -14,6 +14,16 @@ path the way production reads it —
     compacted_mbps  cold restore of the newest stream after deleting the
                     older versions and compacting the container
 
+``--threads N1,N2,...`` instead runs the concurrent serving bench
+(DESIGN.md §10.7): a shared work queue of whole-stream restores drained
+by N threads against one store, recording aggregate MB/s (cold: fresh
+reopen, one restore per stream; warm: repeated restores, cache hot) and
+per-restore p50/p99 latency, plus a per-restore SHA1 byte-identity check
+(the ``errors`` column — nonzero on the pre-§10 code, whose shared seek+
+read handle and unsynchronized cache corrupt concurrent restores).
+``nproc`` is recorded per row: thread scaling is bounded by cores and,
+for pure-Python decode work, by the GIL — read syscalls release it.
+
 plus where the cold pass spent its time (read/decode seconds), the
 decode-cache hit/miss split, and cold read amplification (container
 bytes fetched per byte served).
@@ -34,8 +44,12 @@ path, measured from a worktree at the pre-PR commit on the same machine
 from __future__ import annotations
 
 import argparse
+import hashlib
+import itertools
 import json
+import os
 import tempfile
+import threading
 import time
 from pathlib import Path
 
@@ -156,26 +170,157 @@ def run(base_size: int = 6 << 20, versions: int = 4,
     return rows
 
 
+def _drain_queue(store, jobs, n_threads):
+    """N threads drain a shared queue of (handle, sha1, nbytes) restore
+    jobs; returns (wall_seconds, per_job_latencies, corrupt_count)."""
+    lat: list[float] = []
+    lock = threading.Lock()
+    counter = itertools.count()
+    errors = [0]
+
+    def worker():
+        while True:
+            i = next(counter)
+            if i >= len(jobs):
+                return
+            handle, digest, _ = jobs[i]
+            t0 = time.perf_counter()
+            try:
+                ok = hashlib.sha1(store.restore(handle)).digest() == digest
+            except Exception:       # pre-§10 code corrupts under threads
+                ok = False
+            dt = time.perf_counter() - t0
+            with lock:
+                lat.append(dt)
+                if not ok:
+                    errors[0] += 1
+
+    threads = [threading.Thread(target=worker, daemon=True)
+               for _ in range(n_threads)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0, lat, errors[0]
+
+
+def run_threaded(base_size: int = 6 << 20, versions: int = 4,
+                 detectors=("card",), workloads=WORKLOADS,
+                 avg_size: int = 8192, label: str = "threaded",
+                 threads_list=(1, 2, 4), warm_reps: int = 6,
+                 repeats: int = 3) -> list[dict]:
+    """Concurrent serving rows (see module docstring): one row per
+    (workload, detector, thread count), best-of-``repeats`` aggregates,
+    p50/p99 from the best pass."""
+    rows = []
+    nproc = os.cpu_count()
+    for wl in workloads:
+        vs = common.make_versions(wl, base_size, versions)
+        for kind in detectors:
+            cfg = common.detector_config(kind, avg_size=avg_size)
+            with tempfile.TemporaryDirectory() as tmp:
+                cfg.backend, cfg.backend_args = "file", {"path": tmp}
+                store = api.build_store(cfg)
+                store.fit(list(vs[:1]))
+                jobs = []
+                for v in vs:
+                    with store.open_stream() as s:
+                        s.write(v)
+                    jobs.append((s.report.handle,
+                                 hashlib.sha1(v).digest(), len(v)))
+                store.close()
+                cold_bytes = sum(j[2] for j in jobs)
+                rng = np.random.default_rng(0)
+
+                for n_threads in threads_list:
+                    cold_s = warm_s = float("inf")
+                    cold_lat = warm_lat = []
+                    errs = 0
+                    for _rep in range(repeats):
+                        served = _reopen(tmp)
+                        # cold: every stream exactly once, threads racing
+                        # over overlapping base chains
+                        wall, lat, e1 = _drain_queue(served, jobs, n_threads)
+                        if wall < cold_s:
+                            cold_s, cold_lat = wall, lat
+                        # warm: repeated whole-stream restores, cache hot
+                        warm_jobs = jobs * warm_reps
+                        warm_jobs = [warm_jobs[i] for i in
+                                     rng.permutation(len(warm_jobs))]
+                        wall, lat, e2 = _drain_queue(served, warm_jobs,
+                                                     n_threads)
+                        if wall < warm_s:
+                            warm_s, warm_lat = wall, lat
+                        errs += e1 + e2
+                        served.close()
+                    warm_bytes = cold_bytes * warm_reps
+                    cold_lat = sorted(cold_lat)
+                    warm_lat = sorted(warm_lat)
+                    rows.append({
+                        "bench": "restore_threads", "workload": wl,
+                        "detector": kind, "variant": label,
+                        "threads": n_threads, "nproc": nproc,
+                        "versions": versions, "avg_size": avg_size,
+                        "bytes_mb": round(cold_bytes / 2**20, 2),
+                        "cold_agg_mbps": round(
+                            cold_bytes / 2**20 / max(1e-9, cold_s), 2),
+                        "warm_agg_mbps": round(
+                            warm_bytes / 2**20 / max(1e-9, warm_s), 2),
+                        "cold_p50_ms": round(
+                            1e3 * cold_lat[len(cold_lat) // 2], 3),
+                        "cold_p99_ms": round(
+                            1e3 * cold_lat[
+                                min(len(cold_lat) - 1,
+                                    int(0.99 * len(cold_lat)))], 3),
+                        "warm_p50_ms": round(
+                            1e3 * warm_lat[len(warm_lat) // 2], 3),
+                        "warm_p99_ms": round(
+                            1e3 * warm_lat[
+                                min(len(warm_lat) - 1,
+                                    int(0.99 * len(warm_lat)))], 3),
+                        "errors": errs,
+                    })
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller workloads (CI smoke)")
     ap.add_argument("--json", default=str(JSON_PATH),
                     help="where to write the JSON row dump")
-    ap.add_argument("--label", default="planned",
+    ap.add_argument("--label", default=None,
                     help="variant label for the emitted rows")
+    ap.add_argument("--threads", default=None,
+                    help="comma list of thread counts: run the concurrent "
+                         "serving bench instead of the serial sections")
     args = ap.parse_args()
-    if args.quick:
-        rows = run(base_size=2 << 20, versions=3, range_reads=200,
-                   label=args.label)
+    if args.threads:
+        label = args.label or "threaded"
+        counts = tuple(int(t) for t in args.threads.split(","))
+        if args.quick:
+            rows = run_threaded(base_size=2 << 20, versions=3,
+                                threads_list=counts, warm_reps=3,
+                                repeats=1, label=label)
+        else:
+            rows = run_threaded(threads_list=counts, label=label)
+        section = "restore_threads"
     else:
-        rows = run(label=args.label)
-    common.emit(rows, "restore")
+        label = args.label or "planned"
+        if args.quick:
+            rows = run(base_size=2 << 20, versions=3, range_reads=200,
+                       label=label)
+        else:
+            rows = run(label=label)
+        section = "restore"
+    common.emit(rows, section)
     path = Path(args.json)
     existing = []
-    if path.exists():       # keep rows from other variants (pre-PR runs)
+    if path.exists():       # keep rows from other variants/benches
         existing = [r for r in json.loads(path.read_text())
-                    if r.get("variant") != args.label]
+                    if not (r.get("variant") == label
+                            and r.get("bench") == rows[0]["bench"])]
     path.write_text(json.dumps(existing + rows, indent=2) + "\n")
     print(f"# wrote {len(rows)} rows to {path}")
 

@@ -18,7 +18,7 @@ def main() -> None:
                          "raise (perf-plumbing CI gate; implies --quick)")
     ap.add_argument("--only", default=None,
                     help="comma list: dcr,time,dims,kernels,ckpt,ablation,"
-                         "roofline,gc,ingest,restore")
+                         "roofline,gc,ingest,restore,serve")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     quick = args.quick or args.smoke
@@ -49,6 +49,13 @@ def main() -> None:
                                              range_reads=100 if quick
                                              else 1000,
                                              repeats=1 if quick else 3),
+        # concurrent serving engine (DESIGN.md §10.7): threaded restore
+        # throughput + latency; part of the smoke gate so the reader
+        # pool / sharded cache / readahead plumbing cannot silently rot
+        "serve": lambda: bench_restore.run_threaded(
+            base_size=base, versions=3 if quick else 4,
+            threads_list=(2,) if args.smoke else (1, 2, 4),
+            warm_reps=2 if quick else 6, repeats=1 if quick else 3),
     }
 
     for name, fn in sections.items():

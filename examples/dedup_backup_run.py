@@ -135,6 +135,41 @@ def main():
               f"byte-exact in {time.time() - t0:.3f}s "
               f"(last touched {store.last_restore.chunks} of "
               f"{len(store.backend.recipe(h))} recipe chunks)")
+
+        # concurrent serving phase (DESIGN.md §10): several clients
+        # restoring the surviving nights at once against one store —
+        # sharded decode cache, pread reader pool, per-thread telemetry
+        import threading
+        retained = args.retain if 0 < args.retain < args.nights \
+            else args.nights                    # --retain 0 keeps all
+        survivors = handles[args.nights - retained:]
+        errors = []
+
+        def client(seed):
+            rng = np.random.default_rng(seed)
+            try:
+                for _ in range(3):
+                    night = int(rng.integers(0, len(survivors)))
+                    got = store.restore(survivors[night])
+                    if got != versions[args.nights - retained + night]:
+                        raise AssertionError("concurrent restore mismatch")
+            except Exception as e:
+                errors.append(e)
+
+        t0 = time.time()
+        clients = [threading.Thread(target=client, args=(s,))
+                   for s in range(4)]
+        for c in clients:
+            c.start()
+        for c in clients:
+            c.join()
+        assert not errors, errors
+        stats = store.stats
+        print(f"serve: 4 concurrent clients x 3 restores byte-exact in "
+              f"{time.time() - t0:.3f}s (lifetime {stats.restores} "
+              f"restores, {stats.restore_bytes_out >> 20} MiB served, "
+              f"{stats.restore_prefetch_bytes >> 10} KiB read hidden "
+              f"behind decode)")
         store.close()
 
 

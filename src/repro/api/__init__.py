@@ -5,6 +5,7 @@ Layers (DESIGN.md §2 and §7), each depending only on the ones above it:
   types        DetectBatch / DetectResult / IngestReport / StoreStats
   detect       staged detector protocol (extract -> score -> observe),
                legacy-``detect`` compatibility shim
+  concurrency  RWLock + per-thread I/O telemetry for concurrent serving
   containers   ContainerBackend protocol; memory + file backends
   refcount     chunk recipe/base refcounting for space reclamation
   restore      serving-path policy: restore planner (chain-grouped,
@@ -43,11 +44,14 @@ from repro.api.types import (  # noqa: F401
 )
 from repro.api.restore import (  # noqa: F401
     DEFAULT_CACHE_BYTES,
+    DEFAULT_CACHE_SHARDS,
     DecodeCache,
     RecipeLayout,
     RestorePlan,
+    ShardedDecodeCache,
     plan_chains,
 )
+from repro.api.concurrency import IoTelemetry, RWLock  # noqa: F401
 from repro.api.detect import (  # noqa: F401
     LegacyDetectMixin,
     StagedDetector,

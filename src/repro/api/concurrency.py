@@ -1,0 +1,195 @@
+"""Concurrency primitives for the serving engine (DESIGN.md §10).
+
+Two small, dependency-free pieces shared by the store and the backends:
+
+    RWLock        writer-preferring shared/exclusive lock. Restores take
+                  the shared side (many can run at once), lifecycle
+                  mutations (delete / compact — they swap the chunk index
+                  and reopen file handles) take the exclusive side.
+                  Writer preference keeps a steady stream of restores
+                  from starving a pending compaction.
+    IoTelemetry   per-thread I/O counters that also aggregate to
+                  store-lifetime totals. Under concurrent restores a
+                  global counter delta would attribute other threads'
+                  bytes/seconds to this call's RestoreReport; per-thread
+                  counters make every report exact with no locking on the
+                  hot path (each thread only ever writes its own slot).
+
+Locking rules (also DESIGN.md §10.4): per-shard cache locks and the
+backend's append lock are leaves — no code path acquires another lock
+while holding one, so lock ordering is trivial and deadlock-free.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+
+class RWLock:
+    """Shared/exclusive lock, writer-preferring, not reentrant.
+
+    ``read()`` / ``write()`` are context managers. A thread must not
+    nest acquisitions (a reader re-entering while a writer waits would
+    deadlock under writer preference); callers keep critical sections
+    leaf-shaped instead.
+    """
+
+    def __init__(self) -> None:
+        self._cond = threading.Condition()
+        self._readers = 0
+        self._writer_active = False
+        self._writers_waiting = 0
+
+    # explicit acquire/release pairs for hot paths (a generator-based
+    # contextmanager costs ~4µs per cycle, which ranged reads notice);
+    # the read()/write() context managers below wrap these for callers
+    # off the hot path
+
+    def acquire_read(self) -> None:
+        with self._cond:
+            while self._writer_active or self._writers_waiting:
+                self._cond.wait()
+            self._readers += 1
+
+    def release_read(self) -> None:
+        with self._cond:
+            self._readers -= 1
+            if not self._readers and self._writers_waiting:
+                self._cond.notify_all()
+
+    def acquire_write(self) -> None:
+        with self._cond:
+            self._writers_waiting += 1
+            try:
+                while self._writer_active or self._readers:
+                    self._cond.wait()
+            finally:
+                self._writers_waiting -= 1
+            self._writer_active = True
+
+    def release_write(self) -> None:
+        with self._cond:
+            self._writer_active = False
+            self._cond.notify_all()
+
+    @contextmanager
+    def read(self):
+        self.acquire_read()
+        try:
+            yield
+        finally:
+            self.release_read()
+
+    @contextmanager
+    def write(self):
+        self.acquire_write()
+        try:
+            yield
+        finally:
+            self.release_write()
+
+
+#: Field order of an I/O counter snapshot — shared by the backends that
+#: produce them and the store that turns deltas into RestoreReports.
+COUNTER_FIELDS = ("read_seconds", "decode_seconds", "bytes_read",
+                  "cache_hits", "cache_misses", "prefetch_bytes")
+
+
+class _Counters:
+    """One thread's I/O counters (a plain mutable record)."""
+
+    __slots__ = COUNTER_FIELDS
+
+    def __init__(self) -> None:
+        self.read_seconds = 0.0
+        self.decode_seconds = 0.0
+        self.bytes_read = 0
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.prefetch_bytes = 0
+
+    def snapshot(self) -> tuple:
+        return (self.read_seconds, self.decode_seconds, self.bytes_read,
+                self.cache_hits, self.cache_misses, self.prefetch_bytes)
+
+
+def zero_deltas() -> list:
+    """A fresh all-zero counter accumulator (COUNTER_FIELDS order)."""
+    return [0] * len(COUNTER_FIELDS)
+
+
+def accumulate(acc: list, deltas) -> None:
+    """``acc[i] += deltas[i]`` over COUNTER_FIELDS positions."""
+    for i, d in enumerate(deltas):
+        acc[i] += d
+
+
+class _Fold:
+    """Thread-local anchor: folds its thread's counter record into the
+    telemetry's dead-thread aggregate when the thread exits (CPython
+    tears down thread-local storage then, dropping the last reference).
+    Without this a thread-per-request server would pin one record per
+    thread it ever ran, growing memory and ``totals()`` cost forever."""
+
+    __slots__ = ("_tel", "_c")
+
+    def __init__(self, tel: "IoTelemetry", c: "_Counters") -> None:
+        self._tel = tel
+        self._c = c
+
+    def __del__(self) -> None:
+        try:
+            self._tel._fold(self._c)
+        except Exception:       # interpreter teardown: nothing to save
+            pass
+
+
+class IoTelemetry:
+    """Per-thread counters + lock-free hot path + aggregated totals.
+
+    ``local()`` returns this thread's counter record (created on first
+    use; creation is the only locked operation). ``totals()`` sums the
+    dead-thread aggregate plus every live thread's record — totals drift
+    only by in-flight increments, which is the same guarantee global
+    ``+=`` counters had. Exited threads' records are folded into the
+    aggregate (see ``_Fold``), so lifetime cost is O(live threads).
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._live: list[_Counters] = []
+        self._dead = _Counters()
+        self._tl = threading.local()
+
+    def local(self) -> _Counters:
+        c = getattr(self._tl, "c", None)
+        if c is None:
+            c = _Counters()
+            with self._lock:
+                self._live.append(c)
+            self._tl.c = c
+            self._tl.fold = _Fold(self, c)
+        return c
+
+    def _fold(self, c: _Counters) -> None:
+        with self._lock:
+            try:
+                self._live.remove(c)
+            except ValueError:
+                return              # already folded
+            accumulate_to = self._dead
+            snap = c.snapshot()
+            for field, value in zip(COUNTER_FIELDS, snap):
+                setattr(accumulate_to, field,
+                        getattr(accumulate_to, field) + value)
+
+    def totals(self) -> tuple:
+        with self._lock:
+            rows = [self._dead] + list(self._live)
+        acc = zero_deltas()
+        for c in rows:
+            accumulate(acc, c.snapshot())
+        return tuple(acc)
+
+    def total(self, field: str) -> float | int:
+        return self.totals()[COUNTER_FIELDS.index(field)]

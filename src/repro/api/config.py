@@ -34,7 +34,15 @@ from repro.api.store import DedupStore
 
 _KNOWN_KEYS = {"detector", "detector_args", "chunker", "chunker_args",
                "backend", "backend_args", "policy", "policy_args",
-               "restore_cache_bytes"}
+               "restore_cache_bytes", "restore_cache_shards",
+               "restore_reader_fds", "restore_readahead"}
+
+# serving-engine knobs (DESIGN.md §10) -> backend factory kwargs; each is
+# forwarded only when set and only to factories that declare the kwarg
+_BACKEND_KNOBS = {"restore_cache_bytes": "cache_bytes",
+                  "restore_cache_shards": "cache_shards",
+                  "restore_reader_fds": "reader_fds",
+                  "restore_readahead": "readahead"}
 
 
 @dataclasses.dataclass
@@ -47,11 +55,15 @@ class DedupConfig:
     backend_args: dict[str, Any] = dataclasses.field(default_factory=dict)
     policy: str = "never"
     policy_args: dict[str, Any] = dataclasses.field(default_factory=dict)
-    # decode-cache budget for the restore path (DESIGN.md §9.2); None
-    # keeps the backend's default. Forwarded as the ``cache_bytes``
-    # factory argument to backends that take one (the file backend);
-    # backends without a decode cache (memory) ignore it.
-    restore_cache_bytes: int | None = None
+    # serving-engine knobs (DESIGN.md §9.2, §10); None keeps each
+    # backend's default. Forwarded as the ``cache_bytes`` /
+    # ``cache_shards`` / ``reader_fds`` / ``readahead`` factory
+    # arguments to backends that declare them (the file backend);
+    # backends without a decode cache / reader pool (memory) ignore all.
+    restore_cache_bytes: int | None = None      # decode-cache budget
+    restore_cache_shards: int | None = None     # cache lock stripes
+    restore_reader_fds: int | None = None       # pread pool size
+    restore_readahead: int | None = None        # read runs in flight (0 off)
 
     @classmethod
     def from_dict(cls, d: dict[str, Any]) -> "DedupConfig":
@@ -64,11 +76,14 @@ class DedupConfig:
         for name in ("detector", "chunker", "backend", "policy"):
             if not isinstance(getattr(cfg, name), str):
                 raise TypeError(f"{name} must be a registry name (str)")
-        if cfg.restore_cache_bytes is not None:
-            if (not isinstance(cfg.restore_cache_bytes, int)
-                    or cfg.restore_cache_bytes <= 0):
-                raise ValueError("restore_cache_bytes must be a positive "
-                                 f"int, got {cfg.restore_cache_bytes!r}")
+        for name in _BACKEND_KNOBS:
+            value = getattr(cfg, name)
+            if value is None:
+                continue
+            floor = 0 if name == "restore_readahead" else 1   # 0 = disabled
+            if not isinstance(value, int) or value < floor:
+                raise ValueError(f"{name} must be an int >= {floor}, "
+                                 f"got {value!r}")
         return cfg
 
     def to_dict(self) -> dict[str, Any]:
@@ -86,20 +101,23 @@ def build_chunker(cfg: DedupConfig) -> Any:
 def build_backend(cfg: DedupConfig) -> Any:
     factory = registry.get_backend(cfg.backend)
     args = dict(cfg.backend_args)
-    if cfg.restore_cache_bytes is not None and "cache_bytes" not in args:
+    wanted = {kwarg: getattr(cfg, name)
+              for name, kwarg in _BACKEND_KNOBS.items()
+              if getattr(cfg, name) is not None and kwarg not in args}
+    if wanted:
         # forward only to factories that declare the knob; backends with
-        # no decode cache (memory) legitimately skip it. A factory whose
-        # signature cannot be inspected gets an explicit error instead of
-        # a silently ignored budget — pass backend_args directly there.
+        # no decode cache / reader pool (memory) legitimately skip them.
+        # A factory whose signature cannot be inspected gets an explicit
+        # error instead of a silently ignored knob — pass backend_args
+        # directly there.
         try:
             params = inspect.signature(factory).parameters
         except (TypeError, ValueError) as e:
             raise ValueError(
-                f"restore_cache_bytes is set but backend {cfg.backend!r} "
-                "has an uninspectable factory signature; pass the budget "
-                "via backend_args instead") from e
-        if "cache_bytes" in params:
-            args["cache_bytes"] = cfg.restore_cache_bytes
+                f"serving knobs {sorted(wanted)} are set but backend "
+                f"{cfg.backend!r} has an uninspectable factory signature; "
+                "pass them via backend_args instead") from e
+        args.update({k: v for k, v in wanted.items() if k in params})
     return factory(**args)
 
 

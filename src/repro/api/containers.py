@@ -30,15 +30,21 @@ larger epoch.
 """
 from __future__ import annotations
 
+import itertools
 import json
 import os
 import struct
+import threading
 import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 from typing import Iterable, Protocol, Sequence, runtime_checkable
 
+from repro.api.concurrency import IoTelemetry
 from repro.api.registry import register_backend
-from repro.api.restore import DEFAULT_CACHE_BYTES, DecodeCache, plan_chains
+from repro.api.restore import (DEFAULT_CACHE_BYTES, DEFAULT_CACHE_SHARDS,
+                               ShardedDecodeCache, plan_chains)
 from repro.core import delta
 
 _REC_HEADER = struct.Struct("<BqqQ")  # kind, cid, base, payload length
@@ -57,6 +63,63 @@ _READ_MAX_RUN = 8 << 20
 # (0 or 1), never the magic's 'R', so both parse unambiguously.
 _LOG_MAGIC = b"RCL1"
 _LOG_HEADER = struct.Struct("<4sQ")
+
+# serving-engine knobs (DESIGN.md §10): fds in the pread reader pool (=
+# max payload reads in flight) and how many coalesced read runs the
+# fetcher keeps in flight ahead of the decode loop (0 disables readahead)
+DEFAULT_READER_FDS = 4
+DEFAULT_READAHEAD = 2
+
+
+class _ReaderPool:
+    """A fixed set of O_RDONLY fds over one file, consumed via ``os.pread``.
+
+    ``pread`` is positionless — it never touches the fd offset — so every
+    fd is usable from any thread with no locking; the pool exists so the
+    kernel can keep several reads genuinely in flight (each ``os.pread``
+    releases the GIL for the duration of the syscall). Dispatch is
+    round-robin; fds are interchangeable.
+    """
+
+    def __init__(self, path: str | Path, size: int) -> None:
+        self._path = os.fspath(path)
+        self.size = max(1, int(size))
+        self._fds = [os.open(self._path, os.O_RDONLY)
+                     for _ in range(self.size)]
+        self._rr = itertools.count()
+
+    def pread(self, offset: int, length: int) -> bytes:
+        """Read up to ``length`` bytes at ``offset``; shorter only at EOF
+        (callers treat a short result as a truncated record)."""
+        if length <= 0:
+            return b""
+        fd = self._fds[next(self._rr) % len(self._fds)]
+        data = os.pread(fd, length, offset)
+        if len(data) == length or not data:
+            return data
+        parts = [data]
+        got = len(data)
+        while got < length:       # regular files only short-read at EOF,
+            more = os.pread(fd, length - got, offset + got)   # but be safe
+            if not more:
+                break
+            parts.append(more)
+            got += len(more)
+        return b"".join(parts)
+
+    def reopen(self) -> None:
+        """Swap every fd for a fresh open of the (possibly replaced-by-
+        rename) path — the compaction hook. Callers guarantee no reads
+        are in flight (the store's exclusive lifecycle lock)."""
+        old, self._fds = self._fds, [os.open(self._path, os.O_RDONLY)
+                                     for _ in range(self.size)]
+        for fd in old:
+            os.close(fd)
+
+    def close(self) -> None:
+        old, self._fds = self._fds, []
+        for fd in old:
+            os.close(fd)
 
 
 @runtime_checkable
@@ -315,25 +378,41 @@ class FileBackend:
     An index {cid -> (kind, base, offset, length)} is rebuilt by scanning
     the log on open, so a fresh FileBackend on an existing directory can
     serve restores immediately. Materialized chunks live in a
-    byte-budgeted ``DecodeCache`` (DESIGN.md §9.2) — restore working sets
-    rotate LRU under ``cache_bytes`` instead of accumulating the whole
-    dataset in RAM. ``rewrite_live`` (compaction, DESIGN.md §7.3)
-    rewrites both files through temp-file + atomic rename with the epoch
-    bumped; pre-header directories still open (epoch 0, records at
-    offset 0).
+    byte-budgeted ``ShardedDecodeCache`` (DESIGN.md §9.2, sharded per
+    §10.2) — restore working sets rotate LRU under ``cache_bytes``
+    instead of accumulating the whole dataset in RAM. ``rewrite_live``
+    (compaction, DESIGN.md §7.3) rewrites both files through temp-file +
+    atomic rename with the epoch bumped; pre-header directories still
+    open (epoch 0, records at offset 0).
+
+    Concurrency contract (DESIGN.md §10.4): ``get``/``get_many``/
+    ``record`` and the recipe read surface are safe from any number of
+    threads at once (payload reads are positionless ``os.pread`` on a
+    pooled fd set, the decode cache is sharded and internally locked,
+    telemetry is per-thread). Writes (``put_*``, ``add_recipe``,
+    ``retire_recipe``) may run concurrently with reads but not with each
+    other, and ``rewrite_live``/``close`` require full exclusion — the
+    store enforces both with its commit mutex and lifecycle RW lock.
     """
 
     name = "file"
     record_overhead = _REC_HEADER.size
 
     def __init__(self, path: str | Path, fsync_on_flush: bool = False,
-                 cache_bytes: int | None = None) -> None:
+                 cache_bytes: int | None = None,
+                 cache_shards: int | None = None,
+                 reader_fds: int | None = None,
+                 readahead: int | None = None) -> None:
         """``fsync_on_flush=True`` makes every ``flush()`` (one per
         committed stream — group commit, DESIGN.md §8) durable with a
         single fsync per file; the default keeps the historical
         buffered-only commits (deletes always fsync their tombstone).
         ``cache_bytes`` budgets the decode cache (DESIGN.md §9.2;
-        default ``repro.api.restore.DEFAULT_CACHE_BYTES``)."""
+        default ``repro.api.restore.DEFAULT_CACHE_BYTES``) and
+        ``cache_shards`` how many ways it stripes (§10.2).
+        ``reader_fds`` sizes the pread pool (= payload reads in flight),
+        ``readahead`` how many coalesced read runs the fetcher keeps in
+        flight ahead of the decode loop (0 = strictly serial reads)."""
         self.path = Path(path)
         self._fsync_on_flush = fsync_on_flush
         self.path.mkdir(parents=True, exist_ok=True)
@@ -344,15 +423,18 @@ class FileBackend:
             if tmp.exists():        # abandoned mid-compaction; originals win
                 tmp.unlink()
         self._index: dict[int, tuple[int, int, int, int]] = {}
-        self._cache = DecodeCache(cache_bytes if cache_bytes is not None
-                                  else DEFAULT_CACHE_BYTES)
+        self._cache = ShardedDecodeCache(
+            cache_bytes if cache_bytes is not None else DEFAULT_CACHE_BYTES,
+            shards=cache_shards if cache_shards is not None
+            else DEFAULT_CACHE_SHARDS)
         self._recipes: list[list[int] | None] = []
         self._recipe_lens: dict[int, list[int]] = {}
-        # restore telemetry (DESIGN.md §9.4), accumulated forever; the
-        # store snapshots around each restore to report per-call deltas
-        self.read_seconds = 0.0
-        self.decode_seconds = 0.0
-        self.bytes_read = 0
+        # restore telemetry (DESIGN.md §9.4): per-thread counters so
+        # concurrent restores attribute I/O exactly (§10.5); the
+        # read_seconds/bytes_read/... properties expose lifetime totals
+        self._telemetry = IoTelemetry()
+        self._readahead = (DEFAULT_READAHEAD if readahead is None
+                           else max(0, int(readahead)))
         self.epoch = 0
         self._scan()
         self._log = open(self._log_path, "ab")
@@ -361,8 +443,37 @@ class FileBackend:
         self._recipes_f = open(self._recipes_path, "a")
         if self._recipes_f.tell() == 0:
             self._recipes_f.write(json.dumps({"epoch": self.epoch}) + "\n")
-        self._log_read = open(self._log_path, "rb")
+        self._pool = _ReaderPool(self._log_path,
+                                 reader_fds if reader_fds is not None
+                                 else DEFAULT_READER_FDS)
+        self._executor: ThreadPoolExecutor | None = None
+        self._io_lock = threading.Lock()    # append handle + dirty flag
         self._log_dirty = False
+
+    # --- lifetime I/O totals (telemetry properties, DESIGN.md §9.4) ----------
+
+    @property
+    def read_seconds(self) -> float:
+        return self._telemetry.total("read_seconds")
+
+    @property
+    def decode_seconds(self) -> float:
+        return self._telemetry.total("decode_seconds")
+
+    @property
+    def bytes_read(self) -> int:
+        return self._telemetry.total("bytes_read")
+
+    @property
+    def prefetch_bytes(self) -> int:
+        return self._telemetry.total("prefetch_bytes")
+
+    def io_counters(self) -> tuple:
+        """This thread's I/O counter snapshot, in
+        ``repro.api.concurrency.COUNTER_FIELDS`` order. The store diffs
+        two snapshots around a restore for an exact per-call
+        RestoreReport even while other threads restore concurrently."""
+        return self._telemetry.local().snapshot()
 
     @property
     def cache_hits(self) -> int:
@@ -446,15 +557,30 @@ class FileBackend:
                     good_end += len(line)
             if torn:
                 os.truncate(self._recipes_path, good_end)
+        # Joint-truncation hardening (DESIGN.md §10.6): the two files'
+        # tails tear independently (commits are buffered, not fsync'd, so
+        # the OS may persist a recipe line whose chunks never reached the
+        # log). A live recipe referencing a chunk missing from the index
+        # belongs to a commit that never produced an IngestReport —
+        # retire it at scan time rather than crash the refcount rebuild
+        # or serve KeyErrors later. Idempotent across reopens; committed
+        # streams are untouched (their chunks precede their recipe line,
+        # and truncation is always a prefix of each file).
+        for h, recipe in enumerate(self._recipes):
+            if recipe is not None and any(cid not in self._index
+                                          for cid in recipe):
+                self._recipes[h] = None
+                self._recipe_lens.pop(h, None)
         # a crash between the two compaction renames leaves the epochs one
         # apart; both file states are consistent (see module docstring)
         self.epoch = max(log_epoch, recipes_epoch)
 
     def _append(self, kind: int, cid: int, base: int, payload: bytes) -> None:
-        self._log.write(_REC_HEADER.pack(kind, cid, base, len(payload)))
-        offset = self._log.tell()
-        self._log.write(payload)
-        self._log_dirty = True
+        with self._io_lock:
+            self._log.write(_REC_HEADER.pack(kind, cid, base, len(payload)))
+            offset = self._log.tell()
+            self._log.write(payload)
+            self._log_dirty = True
         self._index[cid] = (kind, base, offset, len(payload))
 
     def put_raw(self, cid: int, data: bytes) -> None:
@@ -474,41 +600,59 @@ class FileBackend:
         with one ``write()`` call, so a commit costs one syscall batch
         instead of two writes per chunk (DESIGN.md §8). Index/cache
         bookkeeping is identical to the per-chunk puts."""
-        buf = bytearray()
-        start = self._log.tell()
-        entries = []
-        for cid, base, payload, data in records:
-            kind = _KIND_RAW if base < 0 else _KIND_DELTA
-            if kind == _KIND_RAW:
-                data = payload
-            buf += _REC_HEADER.pack(kind, cid, base if kind else -1,
-                                    len(payload))
-            entries.append((cid, kind, base if kind else -1,
-                            start + len(buf), len(payload), data))
-            buf += payload
-        if not buf:
-            return
-        # index/cache only after the write is accepted — a failed write
-        # must not leave phantom index entries at never-written offsets
-        self._log.write(bytes(buf))
-        self._log_dirty = True
+        with self._io_lock:
+            buf = bytearray()
+            start = self._log.tell()
+            entries = []
+            for cid, base, payload, data in records:
+                kind = _KIND_RAW if base < 0 else _KIND_DELTA
+                if kind == _KIND_RAW:
+                    data = payload
+                buf += _REC_HEADER.pack(kind, cid, base if kind else -1,
+                                        len(payload))
+                entries.append((cid, kind, base if kind else -1,
+                                start + len(buf), len(payload), data))
+                buf += payload
+            if not buf:
+                return
+            # index/cache only after the write is accepted — a failed write
+            # must not leave phantom index entries at never-written offsets
+            self._log.write(bytes(buf))
+            self._log_dirty = True
         for cid, kind, base, offset, length, data in entries:
             self._index[cid] = (kind, base, offset, length)
             if data is not None:
                 self._cache.put(cid, data)
 
-    def _read_payload(self, offset: int, length: int) -> bytes:
+    def _flush_if_dirty(self) -> None:
+        # double-checked: readers skip the lock entirely once clean
         if self._log_dirty:
-            self._log.flush()
-            self._log_dirty = False
-        self._log_read.seek(offset)
-        self.bytes_read += length
-        return self._log_read.read(length)
+            with self._io_lock:
+                if self._log_dirty:
+                    self._log.flush()
+                    self._log_dirty = False
+
+    def _read_payload(self, offset: int, length: int) -> bytes:
+        self._flush_if_dirty()
+        data = self._pool.pread(offset, length)
+        # count what actually came back, not what was asked for — and a
+        # short read here is a truncated record (external truncation or
+        # torn tail past the scan), which must fail loudly instead of
+        # handing a short payload to delta.decode
+        self._telemetry.local().bytes_read += len(data)
+        if len(data) != length:
+            raise IOError(
+                f"truncated record: wanted {length} bytes at offset "
+                f"{offset} of {self._log_path}, got {len(data)}")
+        return data
 
     def get(self, cid: int) -> bytes:
+        tel = self._telemetry.local()
         data = self._cache.get(cid)
         if data is not None:
+            tel.cache_hits += 1
             return data
+        tel.cache_misses += 1
         # walk the base chain down to a raw/cached ancestor, then apply
         # patches back up (iterative: delta chains can outgrow recursion).
         # Correctness never depends on cache retention: `data` is a local
@@ -519,7 +663,9 @@ class FileBackend:
         while True:
             data = self._cache.get(cur)
             if data is not None:
+                tel.cache_hits += 1
                 break
+            tel.cache_misses += 1
             kind, base, offset, length = self._index[cur]
             payload = self._read_payload(offset, length)
             if kind == _KIND_RAW:
@@ -533,25 +679,41 @@ class FileBackend:
             self._cache.put(c, data)
         return data
 
+    def _reader_executor(self) -> ThreadPoolExecutor:
+        ex = self._executor
+        if ex is None:
+            with self._io_lock:
+                if self._executor is None:
+                    self._executor = ThreadPoolExecutor(
+                        max_workers=self._pool.size,
+                        thread_name_prefix="repro-readahead")
+                ex = self._executor
+        return ex
+
     def get_many(self, cids: Sequence[int]) -> list[bytes]:
-        """Planned batch materialization (DESIGN.md §9): every requested
-        chunk's base chain is decoded exactly once, payload reads are
-        issued in ascending log order with adjacent records coalesced
-        into single sequential reads, and bases stay pinned in the decode
-        cache only while a dependent patch of this plan still needs
-        them."""
+        """Planned batch materialization (DESIGN.md §9, concurrent +
+        double-buffered per §10): every requested chunk's base chain is
+        decoded exactly once, payload reads are issued in ascending log
+        order with adjacent records coalesced into sequential runs, and
+        — when more than one run is scheduled — a background fetcher on
+        the pread reader pool keeps up to ``readahead`` runs in flight
+        while the decode loop chews the runs already fetched. Bases stay
+        pinned in the decode cache only while a dependent patch of this
+        plan still needs them. Safe to call from any number of threads:
+        plans pin atomically (``try_pin``), so a concurrent plan's
+        eviction pressure cannot invalidate this plan between planning
+        and decoding."""
         if not cids:
             return []
         cache = self._cache
-        out: dict[int, bytes] = {}
+        tel = self._telemetry.local()
         targets = list(dict.fromkeys(int(c) for c in cids))
-        missing = []
-        for cid in targets:
-            data = cache.get(cid)
-            if data is None:
-                missing.append(cid)
-            else:
-                out[cid] = data
+        # batched cache probe: one lock round-trip per shard, not per
+        # chunk — this IS the warm restore (every target a hit)
+        out = cache.get_present(targets)
+        missing = [cid for cid in targets if cid not in out]
+        tel.cache_hits += len(out)
+        tel.cache_misses += len(missing)
         if missing:
             index = self._index
             for cid in missing:     # unknown cids: KeyError before any I/O
@@ -561,22 +723,30 @@ class FileBackend:
                 kind, base, offset, length = index[cid]
                 return (base if kind == _KIND_DELTA else -1, offset, length)
 
-            plan = plan_chains(missing, entry, cache.__contains__)
-            wanted = set(plan.targets)
             pinned: set[int] = set()
-            try:
-                for cid in plan.cached_bases:
-                    cache.pin(cid)
-                    pinned.add(cid)
+            pinned_data: dict[int, bytes] = {}
 
-                # read phase: one sequential read per coalesced extent run
-                t0 = time.perf_counter()
-                if self._log_dirty:
-                    self._log.flush()
-                    self._log_dirty = False
-                f = self._log_read
-                payloads: dict[int, bytes] = {}
+            def probe(cid: int) -> bool:
+                # the planner's is_cached callback, made concurrency-safe:
+                # pin-if-present is one atomic step, so another thread's
+                # eviction cannot undo the answer between planning and
+                # decoding (§10.2). At most one pin per cid per plan.
+                if cid in pinned_data:
+                    return True
+                data = cache.try_pin(cid)
+                if data is None:
+                    return False
+                pinned.add(cid)
+                pinned_data[cid] = data
+                return True
+
+            try:
+                plan = plan_chains(missing, entry, probe)
+                wanted = set(plan.targets)
+
+                # coalesce the offset-sorted reads into sequential runs
                 reads = plan.reads
+                runs: list[tuple[int, int, list]] = []
                 i, n_reads = 0, len(reads)
                 while i < n_reads:
                     start = reads[i][0]
@@ -587,47 +757,117 @@ class FileBackend:
                            and end - start < _READ_MAX_RUN):
                         end = max(end, reads[j][0] + reads[j][1])
                         j += 1
-                    f.seek(start)
-                    blob = memoryview(f.read(end - start))
-                    self.bytes_read += end - start
-                    for off, ln, cid in reads[i:j]:
-                        payloads[cid] = bytes(
-                            blob[off - start:off - start + ln])
+                    runs.append((start, end, reads[i:j]))
                     i = j
-                self.read_seconds += time.perf_counter() - t0
 
-                # decode phase: topological, each base pinned until its
-                # last dependent of THIS plan has decoded against it
-                t0 = time.perf_counter()
+                payloads: dict[int, bytes] = {}
                 remaining = dict(plan.dependents)
-                for cid in plan.decode_order:
-                    kind, base, _, _ = index[cid]
-                    payload = payloads.pop(cid)
-                    if kind == _KIND_RAW:
-                        data = payload
-                    else:
-                        # peek, not get: the base is pinned by this very
-                        # plan, so counting it as a cache hit would
-                        # inflate the telemetry on every cold chain
-                        base_data = cache.peek(base)
-                        if base_data is None:  # pinned: only a logic bug
-                            base_data = self.get(base)
-                        data = delta.decode(payload, base_data)
-                        left = remaining.get(base)
-                        if left is not None:
-                            if left > 1:
-                                remaining[base] = left - 1
-                            else:
-                                del remaining[base]
-                                cache.unpin(base)
-                                pinned.discard(base)
-                    pin = cid in remaining
-                    cache.put(cid, data, pin=pin)
-                    if pin:
-                        pinned.add(cid)
-                    if cid in wanted:
-                        out[cid] = data
-                self.decode_seconds += time.perf_counter() - t0
+                order = plan.decode_order
+                decode_pos = 0
+
+                def ingest_run(run: tuple, blob: bytes) -> None:
+                    start, end, extents = run
+                    tel.bytes_read += len(blob)
+                    if len(blob) != end - start:    # truncated record(s)
+                        raise IOError(
+                            f"truncated record run: wanted {end - start} "
+                            f"bytes at offset {start} of "
+                            f"{self._log_path}, got {len(blob)}")
+                    view = memoryview(blob)
+                    for off, ln, cid in extents:
+                        payloads[cid] = bytes(
+                            view[off - start:off - start + ln])
+
+                def decode_ready() -> None:
+                    # decode the available prefix of the topological
+                    # order; stops at the first chunk whose payload is
+                    # still in flight (a later run)
+                    nonlocal decode_pos
+                    t0 = time.perf_counter()
+                    while decode_pos < len(order):
+                        cid = order[decode_pos]
+                        payload = payloads.pop(cid, None)
+                        if payload is None:
+                            break
+                        decode_pos += 1
+                        kind, base, _, _ = index[cid]
+                        if kind == _KIND_RAW:
+                            data = payload
+                        else:
+                            # plan-local refs first, then an uncounted
+                            # peek: the base is pinned by this very plan,
+                            # and counting it as a cache hit would
+                            # inflate the telemetry on every cold chain
+                            base_data = pinned_data.get(base)
+                            if base_data is None:
+                                base_data = cache.peek(base)
+                            if base_data is None:  # pinned: a logic bug
+                                base_data = self.get(base)
+                            data = delta.decode(payload, base_data)
+                            left = remaining.get(base)
+                            if left is not None:
+                                if left > 1:
+                                    remaining[base] = left - 1
+                                else:
+                                    del remaining[base]
+                                    cache.unpin(base)
+                                    pinned.discard(base)
+                        pin = cid in remaining
+                        cache.put(cid, data, pin=pin)
+                        if pin:
+                            pinned.add(cid)
+                        if cid in wanted:
+                            out[cid] = data
+                    tel.decode_seconds += time.perf_counter() - t0
+
+                self._flush_if_dirty()
+                pool = self._pool
+
+                def read_run(run: tuple) -> tuple[bytes, float]:
+                    t0 = time.perf_counter()
+                    blob = pool.pread(run[0], run[1] - run[0])
+                    return blob, time.perf_counter() - t0
+
+                if self._readahead > 0 and len(runs) > 1:
+                    # double-buffered fetch (§10.3): the pread of runs
+                    # k+1..k+readahead overlaps the decode of run k
+                    ex = self._reader_executor()
+                    pending: deque = deque()
+                    ri = 0
+                    while ri < len(runs) or pending:
+                        while (ri < len(runs)
+                               and len(pending) <= self._readahead):
+                            pending.append((runs[ri],
+                                            ex.submit(read_run, runs[ri])))
+                            ri += 1
+                        run, fut = pending.popleft()
+                        overlapped = fut.done() and run is not runs[0]
+                        blob, secs = fut.result()
+                        tel.read_seconds += secs
+                        if overlapped:      # fully hidden behind decode
+                            tel.prefetch_bytes += len(blob)
+                        ingest_run(run, blob)
+                        decode_ready()
+                else:                       # serial: one run, or disabled
+                    for run in runs:
+                        blob, secs = read_run(run)
+                        tel.read_seconds += secs
+                        ingest_run(run, blob)
+                    decode_ready()
+                if decode_pos != len(order):    # every payload arrived,
+                    decode_ready()              # so this always finishes
+                if decode_pos != len(order):
+                    raise RuntimeError(
+                        f"restore plan incomplete: decoded {decode_pos} "
+                        f"of {len(order)} chunks")
+
+                # a target can become cached (by a concurrent restore)
+                # between the fast-path miss and the planner probe; the
+                # probe pinned it, so serve it from the plan's own refs
+                for tgt in plan.targets:
+                    if tgt not in out:
+                        data = pinned_data.get(tgt)
+                        out[tgt] = data if data is not None else self.get(tgt)
             finally:
                 # a failed plan (corrupt patch, truncated read) must not
                 # leak pins — leaked entries would be unevictable forever
@@ -761,23 +1001,27 @@ class FileBackend:
             self._recipes_f = open(self._recipes_path, "a")
 
         self._log.close()
-        self._log_read.close()
         self.epoch = new_epoch
         self._index = new_index
         self._cache.retain(new_index.__contains__)
         self._log = open(self._log_path, "ab")
-        self._log_read = open(self._log_path, "rb")
+        self._pool.reopen()     # fresh fds on the renamed-into-place log
         self._log_dirty = False
 
     def flush(self) -> None:
-        self._log.flush()
-        self._recipes_f.flush()
-        if self._fsync_on_flush:
-            os.fsync(self._log.fileno())
-            os.fsync(self._recipes_f.fileno())
+        with self._io_lock:
+            self._log.flush()
+            self._log_dirty = False
+            self._recipes_f.flush()
+            if self._fsync_on_flush:
+                os.fsync(self._log.fileno())
+                os.fsync(self._recipes_f.fileno())
 
     def close(self) -> None:
         self.flush()
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+            self._executor = None
         self._log.close()
-        self._log_read.close()
+        self._pool.close()
         self._recipes_f.close()

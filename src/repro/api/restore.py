@@ -31,7 +31,9 @@ dependency-free (and unit-testable on synthetic topologies):
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import threading
 from collections import OrderedDict
 from typing import Callable, Sequence
 
@@ -41,6 +43,12 @@ import numpy as np
 #: version-chain restores stay warm, small enough that restoring a
 #: multi-GB store does not silently become an in-RAM copy of it.
 DEFAULT_CACHE_BYTES = 128 << 20
+
+#: Default shard count for :class:`ShardedDecodeCache` (DESIGN.md §10.2).
+#: Sequential chunk ids stripe round-robin across shards, so adjacent
+#: chunks of one restore — and concurrent restores of different streams —
+#: rarely contend on the same shard lock.
+DEFAULT_CACHE_SHARDS = 8
 
 
 class DecodeCache:
@@ -52,12 +60,18 @@ class DecodeCache:
     re-decodes a chain it already walked). ``peak_bytes`` is sampled at
     stable points (after each eviction pass), which is what the budget
     acceptance test pins.
+
+    Every mutating operation is atomic under an internal lock, so a
+    single instance is safe to share between restore threads — and it is
+    the shard building block of :class:`ShardedDecodeCache`, which
+    spreads that lock N ways (DESIGN.md §10.2).
     """
 
     def __init__(self, budget_bytes: int = DEFAULT_CACHE_BYTES) -> None:
         if budget_bytes <= 0:
             raise ValueError(f"cache budget must be positive, got {budget_bytes}")
         self.budget_bytes = int(budget_bytes)
+        self._lock = threading.Lock()
         self._entries: "OrderedDict[int, bytes]" = OrderedDict()
         self._pins: dict[int, int] = {}
         self.bytes = 0
@@ -73,13 +87,14 @@ class DecodeCache:
 
     def get(self, cid: int) -> bytes | None:
         """Cached bytes (refreshing LRU position) or None; counts hit/miss."""
-        data = self._entries.get(cid)
-        if data is None:
-            self.misses += 1
-            return None
-        self.hits += 1
-        self._entries.move_to_end(cid)
-        return data
+        with self._lock:
+            data = self._entries.get(cid)
+            if data is None:
+                self.misses += 1
+                return None
+            self.hits += 1
+            self._entries.move_to_end(cid)
+            return data
 
     def peek(self, cid: int) -> bytes | None:
         """``get`` without touching the hit/miss counters or LRU order —
@@ -88,44 +103,85 @@ class DecodeCache:
         telemetry every cold restore of a delta chain)."""
         return self._entries.get(cid)
 
+    def get_present(self, cids: Sequence[int]) -> dict[int, bytes]:
+        """Batched ``get``: one lock acquisition for the whole batch —
+        the warm-restore hot path (§10.2) would otherwise pay a lock
+        round-trip per recipe slot. Counter/LRU semantics are identical
+        to per-cid ``get``; absent cids are simply missing from the
+        result (and counted as misses)."""
+        with self._lock:
+            entries = self._entries
+            found: dict[int, bytes] = {}
+            for cid in cids:
+                data = entries.get(cid)
+                if data is None:
+                    self.misses += 1
+                else:
+                    self.hits += 1
+                    entries.move_to_end(cid)
+                    found[cid] = data
+            return found
+
     def put(self, cid: int, data: bytes, pin: bool = False) -> None:
-        old = self._entries.get(cid)
-        if old is not None:
-            self.bytes -= len(old)
-        self._entries[cid] = data
-        self._entries.move_to_end(cid)
-        self.bytes += len(data)
-        if pin:
-            self._pins[cid] = self._pins.get(cid, 0) + 1
-        self._evict()
+        with self._lock:
+            old = self._entries.get(cid)
+            if old is not None:
+                self.bytes -= len(old)
+            self._entries[cid] = data
+            self._entries.move_to_end(cid)
+            self.bytes += len(data)
+            if pin:
+                self._pins[cid] = self._pins.get(cid, 0) + 1
+            self._evict()
 
     def pin(self, cid: int) -> None:
         """Protect an already-cached entry from eviction (refcounted)."""
-        if cid not in self._entries:
-            raise KeyError(f"cannot pin uncached chunk {cid}")
-        self._pins[cid] = self._pins.get(cid, 0) + 1
+        with self._lock:
+            if cid not in self._entries:
+                raise KeyError(f"cannot pin uncached chunk {cid}")
+            self._pins[cid] = self._pins.get(cid, 0) + 1
+
+    def try_pin(self, cid: int) -> bytes | None:
+        """Atomically pin-and-return a cached entry, or None when absent.
+
+        The concurrent planner probe (DESIGN.md §10.2): between "is this
+        cached?" and "pin it" another thread's eviction could drop the
+        entry, so the two must be one operation. Deliberately does NOT
+        count hits/misses — the serial planner's ``is_cached`` probe was
+        uncounted too, and probing every chain node would otherwise
+        inflate the §9.4 telemetry on every cold restore."""
+        with self._lock:
+            data = self._entries.get(cid)
+            if data is None:
+                return None
+            self._entries.move_to_end(cid)
+            self._pins[cid] = self._pins.get(cid, 0) + 1
+            return data
 
     def unpin(self, cid: int) -> None:
-        left = self._pins.get(cid, 0) - 1
-        if left < 0:
-            raise ValueError(f"unpin underflow on chunk {cid}")
-        if left:
-            self._pins[cid] = left
-        else:
-            self._pins.pop(cid, None)
-            self._evict()
+        with self._lock:
+            left = self._pins.get(cid, 0) - 1
+            if left < 0:
+                raise ValueError(f"unpin underflow on chunk {cid}")
+            if left:
+                self._pins[cid] = left
+            else:
+                self._pins.pop(cid, None)
+                self._evict()
 
     def retain(self, keep: Callable[[int], bool]) -> None:
         """Drop every unpinned entry whose cid fails ``keep`` (compaction)."""
-        for cid in [c for c in self._entries
-                    if not keep(c) and not self._pins.get(c)]:
-            data = self._entries.pop(cid)
-            self.bytes -= len(data)
+        with self._lock:
+            for cid in [c for c in self._entries
+                        if not keep(c) and not self._pins.get(c)]:
+                data = self._entries.pop(cid)
+                self.bytes -= len(data)
 
     def _evict(self) -> None:
-        # oldest-first scan that skips pinned entries; pinned bytes may
-        # transiently exceed the budget (the plan working set), and then
-        # nothing can be dropped until an unpin
+        # called with self._lock held. Oldest-first scan that skips
+        # pinned entries; pinned bytes may transiently exceed the budget
+        # (the plan working set), and then nothing can be dropped until
+        # an unpin
         while self.bytes > self.budget_bytes:
             victim = next((c for c in self._entries
                            if not self._pins.get(c)), None)
@@ -134,6 +190,114 @@ class DecodeCache:
             self.bytes -= len(self._entries.pop(victim))
         if self.bytes > self.peak_bytes:
             self.peak_bytes = self.bytes
+
+
+class ShardedDecodeCache:
+    """N independent :class:`DecodeCache` shards behind one facade
+    (DESIGN.md §10.2).
+
+    Chunk ids stripe across shards (``cid % shards``); the global byte
+    budget is apportioned across shards (remainder spread one byte per
+    leading shard), so the sum of shard budgets is exactly the global
+    budget and the aggregate ``peak_bytes`` (sum of shard peaks) can
+    only exceed it when pinned working sets do — same contract a single
+    cache has. Each operation takes exactly one shard lock, so restore
+    threads working different parts of the id space never contend.
+
+    Counters (``hits``/``misses``/``bytes``/``peak_bytes``) aggregate
+    across shards; on a serial workload they equal a single-shard cache's
+    counters as long as no eviction fires (eviction order is per-shard
+    LRU, not global LRU — the one observable policy difference).
+    """
+
+    def __init__(self, budget_bytes: int = DEFAULT_CACHE_BYTES,
+                 shards: int = DEFAULT_CACHE_SHARDS) -> None:
+        if budget_bytes <= 0:
+            raise ValueError(f"cache budget must be positive, got {budget_bytes}")
+        if shards <= 0:
+            raise ValueError(f"shard count must be positive, got {shards}")
+        # never hand a shard a zero budget (DecodeCache rejects it)
+        shards = min(int(shards), int(budget_bytes))
+        base, rem = divmod(int(budget_bytes), shards)
+        self.shards = [DecodeCache(base + (1 if i < rem else 0))
+                       for i in range(shards)]
+        self.budget_bytes = int(budget_bytes)
+
+    def _shard(self, cid: int) -> DecodeCache:
+        return self.shards[cid % len(self.shards)]
+
+    def __contains__(self, cid: int) -> bool:
+        return cid in self._shard(cid)
+
+    def __len__(self) -> int:
+        return sum(len(s) for s in self.shards)
+
+    def get(self, cid: int) -> bytes | None:
+        return self._shard(cid).get(cid)
+
+    def peek(self, cid: int) -> bytes | None:
+        return self._shard(cid).peek(cid)
+
+    def get_present(self, cids: Sequence[int]) -> dict[int, bytes]:
+        """Batched ``get`` across shards: cids group by shard and each
+        shard is locked once, so a warm restore costs O(shards) lock
+        round-trips instead of O(chunks)."""
+        shards = self.shards
+        n = len(shards)
+        if n == 1:
+            return shards[0].get_present(cids)
+        groups: list[list[int] | None] = [None] * n
+        for cid in cids:
+            g = groups[cid % n]
+            if g is None:
+                groups[cid % n] = [cid]
+            else:
+                g.append(cid)
+        found: dict[int, bytes] = {}
+        for idx, group in enumerate(groups):
+            if group is not None:
+                found.update(shards[idx].get_present(group))
+        return found
+
+    def put(self, cid: int, data: bytes, pin: bool = False) -> None:
+        self._shard(cid).put(cid, data, pin=pin)
+
+    def pin(self, cid: int) -> None:
+        self._shard(cid).pin(cid)
+
+    def try_pin(self, cid: int) -> bytes | None:
+        return self._shard(cid).try_pin(cid)
+
+    def unpin(self, cid: int) -> None:
+        self._shard(cid).unpin(cid)
+
+    def retain(self, keep: Callable[[int], bool]) -> None:
+        for s in self.shards:
+            s.retain(keep)
+
+    @property
+    def hits(self) -> int:
+        return sum(s.hits for s in self.shards)
+
+    @property
+    def misses(self) -> int:
+        return sum(s.misses for s in self.shards)
+
+    @property
+    def bytes(self) -> int:
+        return sum(s.bytes for s in self.shards)
+
+    @property
+    def peak_bytes(self) -> int:
+        return sum(s.peak_bytes for s in self.shards)
+
+    @property
+    def _pins(self) -> dict[int, int]:
+        # merged read-only view (shards never share a cid)
+        merged: dict[int, int] = {}
+        for s in self.shards:
+            merged.update(s._pins)
+        return merged
 
 
 @dataclasses.dataclass
@@ -218,10 +382,13 @@ class RecipeLayout:
 
     def __init__(self, lengths: Sequence[int]) -> None:
         self.ends = np.cumsum(np.asarray(lengths, np.int64))
+        # plain-list twin for bisect: scalar np.searchsorted costs ~4µs a
+        # call, which dominates small ranged reads (§10.7 profile)
+        self._ends = self.ends.tolist()
 
     @property
     def total_bytes(self) -> int:
-        return int(self.ends[-1]) if len(self.ends) else 0
+        return self._ends[-1] if self._ends else 0
 
     def chunk_window(self, offset: int, length: int) -> tuple[int, int, int]:
         """``(first, last, skip)``: recipe slots ``first..last`` (inclusive)
@@ -235,7 +402,8 @@ class RecipeLayout:
         end = min(offset + length, total)
         if end <= start:
             return (0, -1, 0)
-        first = int(np.searchsorted(self.ends, start, side="right"))
-        last = int(np.searchsorted(self.ends, end, side="left"))
-        chunk_start = int(self.ends[first - 1]) if first else 0
+        ends = self._ends
+        first = bisect.bisect_right(ends, start)
+        last = bisect.bisect_left(ends, end)
+        chunk_start = ends[first - 1] if first else 0
         return (first, last, start - chunk_start)

@@ -50,12 +50,15 @@ on an existing directory can delete/compact streams it did not ingest.
 from __future__ import annotations
 
 import inspect
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Sequence
 
 import numpy as np
 
 from repro.api import containers, lifecycle
+from repro.api.concurrency import RWLock, accumulate, zero_deltas
 from repro.api.detect import is_staged
 from repro.api.refcount import RefcountTable
 from repro.api.restore import RecipeLayout
@@ -170,6 +173,20 @@ class DedupStore:
         # are invariant under rebasing)
         self._layouts: dict[int, RecipeLayout] = {}
         self.last_restore: RestoreReport | None = None
+        # concurrent serving (DESIGN.md §10.4): restores and commits take
+        # the shared side, lifecycle mutations (delete/collect/compact —
+        # they swap the backend's index and reopen its read fds) the
+        # exclusive side; commits are additionally serialized against
+        # each other, and the aggregate stats/layout caches have their
+        # own leaf mutex. The prefetch pool runs restore_iter's
+        # next-batch fetches (§10.3), created on first use.
+        self._lifecycle_lock = RWLock()
+        self._commit_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self._prefetch: ThreadPoolExecutor | None = None
+        # bound once: per-thread backend telemetry hook (None -> the
+        # global-attr fallback in _backend_counters)
+        self._io_counters = getattr(self.backend, "io_counters", None)
         self._refresh_lifecycle_stats()
 
     def fit(self, training_streams: Sequence[bytes]) -> None:
@@ -188,6 +205,13 @@ class DedupStore:
         return self.stats
 
     def _commit_stream(self, stream: bytes) -> IngestReport:
+        # one commit at a time (id assignment, digest table, one group
+        # commit in flight); commits run concurrently with restores but
+        # are excluded from lifecycle mutations (DESIGN.md §10.4)
+        with self._commit_lock, self._lifecycle_lock.read():
+            return self._commit_stream_locked(stream)
+
+    def _commit_stream_locked(self, stream: bytes) -> IngestReport:
         # pass 0: chunk
         t0 = time.perf_counter()
         chunks, stream_hashes = chunk_with(self.cfg, stream)
@@ -323,9 +347,10 @@ class DedupStore:
             chunk_seconds=chunk_seconds, delta_seconds=delta_seconds,
             extract_seconds=extract_seconds, score_seconds=score_seconds,
             observe_seconds=observe_seconds, store_seconds=store_seconds)
-        self.reports.append(report)
-        self.stats.absorb(report)
-        self._refresh_lifecycle_stats()
+        with self._stats_lock:
+            self.reports.append(report)
+            self.stats.absorb(report)
+            self._refresh_lifecycle_stats()
         return report
 
     # --- serving path (repro.api.restore, DESIGN.md §9) ----------------------
@@ -333,12 +358,14 @@ class DedupStore:
     def restore(self, handle: int) -> bytes:
         """Reconstruct a committed stream byte-for-byte by its handle.
         Raises KeyError once the stream has been deleted (IndexError for
-        a handle the store never issued)."""
+        a handle the store never issued). Safe to call from any number
+        of threads at once (DESIGN.md §10.4)."""
         recipe = self.backend.recipe(handle)
-        t0, snap = time.perf_counter(), self._io_snapshot()
-        data = self._fetch_unique(recipe)
+        t0 = time.perf_counter()
+        data, d = self._fetch_counted(recipe)
         out = b"".join(data[cid] for cid in recipe)
-        self._note_restore(handle, len(out), len(recipe), t0, snap)
+        self._note_restore(handle, len(out), len(recipe),
+                           time.perf_counter() - t0, d)
         return out
 
     def restore_iter(self, handle: int, batch_chunks: int = 256):
@@ -347,22 +374,40 @@ class DedupStore:
         Chunks are materialized ``batch_chunks`` recipe slots at a time
         (one planned ``get_many`` per batch), so serving a stream far
         larger than the decode-cache budget never holds more than a
-        batch of output in memory. Same errors as ``restore``, raised at
-        call time; the ``RestoreReport`` is recorded when the iterator
-        is exhausted."""
+        couple of batches of output in memory. While the caller consumes
+        batch *k*, batch *k+1* is already being fetched on the prefetch
+        pool (DESIGN.md §10.3), so I/O, decode and consumer work
+        overlap. Same errors as ``restore``, raised at call time; the
+        ``RestoreReport`` is recorded when the iterator is exhausted."""
         recipe = self.backend.recipe(handle)    # raise before iterating
 
         def gen():
-            t0, snap = time.perf_counter(), self._io_snapshot()
+            t0 = time.perf_counter()
+            acc = zero_deltas()
             total = 0
-            for i in range(0, len(recipe), batch_chunks):
-                part = recipe[i:i + batch_chunks]
-                data = self._fetch_unique(part)
-                for cid in part:
-                    piece = data[cid]
-                    total += len(piece)
-                    yield piece
-            self._note_restore(handle, total, len(recipe), t0, snap)
+            fut = None
+            try:
+                for i in range(0, len(recipe), batch_chunks):
+                    part = recipe[i:i + batch_chunks]
+                    if fut is not None:
+                        data, d = fut.result()
+                        fut = None
+                    else:
+                        data, d = self._fetch_counted(part)
+                    accumulate(acc, d)
+                    nxt = recipe[i + batch_chunks:i + 2 * batch_chunks]
+                    if nxt:     # overlap the next fetch with consumption
+                        fut = self._prefetch_pool().submit(
+                            self._fetch_counted, nxt)
+                    for cid in part:
+                        piece = data[cid]
+                        total += len(piece)
+                        yield piece
+            finally:
+                if fut is not None:     # abandoned mid-stream
+                    fut.cancel()
+            self._note_restore(handle, total, len(recipe),
+                               time.perf_counter() - t0, acc)
 
         return gen()
 
@@ -374,17 +419,20 @@ class DedupStore:
         clamped to the stream tail; negative offset/length raise
         ValueError; same handle errors as ``restore``."""
         recipe = self.backend.recipe(handle)
-        t0, snap = time.perf_counter(), self._io_snapshot()
-        first, last, skip = self._layout(handle, recipe).chunk_window(
+        t0 = time.perf_counter()
+        acc = zero_deltas()
+        first, last, skip = self._layout(handle, recipe, acc).chunk_window(
             offset, length)
         if last < first:
-            self._note_restore(handle, 0, 0, t0, snap)
+            self._note_restore(handle, 0, 0, time.perf_counter() - t0, acc)
             return b""
         part = recipe[first:last + 1]
-        data = self._fetch_unique(part)
+        data, d = self._fetch_counted(part)
+        accumulate(acc, d)
         blob = b"".join(data[cid] for cid in part)
         out = blob[skip:skip + min(length, len(blob) - skip)]
-        self._note_restore(handle, len(out), len(part), t0, snap)
+        self._note_restore(handle, len(out), len(part),
+                           time.perf_counter() - t0, acc)
         return out
 
     def stream_length(self, handle: int) -> int:
@@ -401,7 +449,34 @@ class DedupStore:
             return dict(zip(uniq, get_many(uniq)))
         return {cid: self.backend.get(cid) for cid in uniq}
 
-    def _layout(self, handle: int, recipe: Sequence[int]) -> RecipeLayout:
+    def _fetch_counted(self, cids: Sequence[int]) -> tuple[dict, list]:
+        """``_fetch_unique`` under the shared lifecycle lock, returning
+        ``(data, io_counter_deltas)``. The snapshot pair runs on the
+        same thread as the fetch (see ``FileBackend.io_counters``), so
+        the deltas are exact per call even with other restores in
+        flight — including when this runs on the prefetch pool."""
+        lock = self._lifecycle_lock
+        snap = self._backend_counters()
+        lock.acquire_read()
+        try:
+            data = self._fetch_unique(cids)
+        finally:
+            lock.release_read()
+        now = self._backend_counters()
+        return data, [now[i] - snap[i] for i in range(len(snap))]
+
+    def _prefetch_pool(self) -> ThreadPoolExecutor:
+        pool = self._prefetch
+        if pool is None:
+            with self._stats_lock:
+                if self._prefetch is None:
+                    self._prefetch = ThreadPoolExecutor(
+                        max_workers=4, thread_name_prefix="repro-prefetch")
+                pool = self._prefetch
+        return pool
+
+    def _layout(self, handle: int, recipe: Sequence[int],
+                acc: list | None = None) -> RecipeLayout:
         layout = self._layouts.get(handle)
         if layout is None:
             lengths = None
@@ -409,46 +484,66 @@ class DedupStore:
             if recipe_lengths is not None:
                 lengths = recipe_lengths(handle)
             if lengths is None:     # pre-§9 recipe: materialize once
-                data = self._fetch_unique(recipe)
+                data, d = self._fetch_counted(recipe)
+                if acc is not None:
+                    accumulate(acc, d)
                 lengths = [len(data[cid]) for cid in recipe]
             layout = RecipeLayout(lengths)
+            # two threads may build the same layout concurrently; both
+            # compute identical sums, so last-writer-wins is benign
             self._layouts[handle] = layout
         return layout
 
-    def _io_snapshot(self) -> tuple[float, float, int, int, int]:
+    def _backend_counters(self) -> tuple:
+        """This thread's backend I/O counters (concurrency.COUNTER_FIELDS
+        order); falls back to the backend-lifetime totals for third-party
+        backends without per-thread telemetry (exact under serial use,
+        which is all such backends support)."""
+        io_counters = self._io_counters
+        if io_counters is not None:
+            return io_counters()
         b = self.backend
         return (getattr(b, "read_seconds", 0.0),
                 getattr(b, "decode_seconds", 0.0),
                 getattr(b, "bytes_read", 0),
                 getattr(b, "cache_hits", 0),
-                getattr(b, "cache_misses", 0))
+                getattr(b, "cache_misses", 0),
+                getattr(b, "prefetch_bytes", 0))
 
     def _note_restore(self, handle: int, bytes_out: int, chunks: int,
-                      t0: float, snap: tuple) -> None:
-        read_s, dec_s, b_read, hits, misses = self._io_snapshot()
+                      seconds: float, d: Sequence) -> None:
         report = RestoreReport(
             handle=handle, bytes_out=bytes_out, chunks=chunks,
-            seconds=time.perf_counter() - t0,
-            read_seconds=read_s - snap[0], decode_seconds=dec_s - snap[1],
-            bytes_read=b_read - snap[2], cache_hits=hits - snap[3],
-            cache_misses=misses - snap[4])
-        self.last_restore = report
-        self.stats.absorb_restore(report)
+            seconds=seconds,
+            read_seconds=d[0], decode_seconds=d[1], bytes_read=int(d[2]),
+            cache_hits=int(d[3]), cache_misses=int(d[4]),
+            prefetch_bytes=int(d[5]))
+        with self._stats_lock:
+            self.last_restore = report
+            self.stats.absorb_restore(report)
 
     # --- space reclamation (repro.api.lifecycle, DESIGN.md §7) ---------------
 
     def delete(self, handle: int) -> int:
         """Retire a committed stream; returns the logical bytes the delete
-        made reclaimable. May trigger compaction per the store policy."""
-        return lifecycle.delete_stream(self, handle)
+        made reclaimable. May trigger compaction per the store policy.
+        Takes the exclusive lifecycle lock: in-flight restores finish
+        first, restores arriving later run against the post-delete state
+        (a restore of the deleted handle then raises KeyError)."""
+        with self._lifecycle_lock.write():
+            return lifecycle.delete_stream(self, handle)
 
     def collect(self) -> lifecycle.CollectReport:
         """Mark-sweep accounting pass (mutates no data)."""
-        return lifecycle.collect(self)
+        with self._lifecycle_lock.write():
+            return lifecycle.collect(self)
 
     def compact(self) -> lifecycle.CompactionRun:
-        """Rewrite the container without dead records, rebasing survivors."""
-        return lifecycle.compact(self)
+        """Rewrite the container without dead records, rebasing survivors.
+        Exclusive: the backend swaps its chunk index and reopens its
+        reader-pool fds, so no restore may be mid-plan while it runs."""
+        with self._lifecycle_lock.write():
+            return lifecycle.compact(self)
 
     def _refresh_lifecycle_stats(self) -> None:
         # dead_bytes = everything compaction can drop: unreferenced records
@@ -457,4 +552,13 @@ class DedupStore:
         self.stats.dead_bytes = self._refs.dead_bytes + self._refs.pinned_bytes
 
     def close(self) -> None:
-        self.backend.close()
+        # drain the prefetch pool BEFORE taking the exclusive lock — its
+        # tasks acquire the shared side, so the reverse order deadlocks.
+        # Then close the backend under exclusion: in-flight restores
+        # finish before the reader-pool fds go away (the contract
+        # FileBackend documents).
+        if self._prefetch is not None:
+            self._prefetch.shutdown(wait=True)
+            self._prefetch = None
+        with self._lifecycle_lock.write():
+            self.backend.close()

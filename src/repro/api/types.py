@@ -128,11 +128,17 @@ class RestoreReport:
     bytes_out: int = 0          # bytes served to the caller
     chunks: int = 0             # recipe slots touched
     seconds: float = 0.0        # end-to-end wall time
-    read_seconds: float = 0.0   # container payload I/O
+    read_seconds: float = 0.0   # container payload I/O (summed across
+    #                             pooled readers, so it can exceed the
+    #                             wall-clock share once readahead overlaps
+    #                             reads with decode — DESIGN.md §10.5)
     decode_seconds: float = 0.0  # delta-chain decoding
     bytes_read: int = 0         # container bytes fetched (vs bytes_out)
     cache_hits: int = 0
     cache_misses: int = 0
+    # container bytes whose read was fully hidden behind decode work by
+    # the double-buffered fetcher (§10.3) — the readahead payoff gauge
+    prefetch_bytes: int = 0
 
     @property
     def read_amplification(self) -> float:
@@ -182,6 +188,7 @@ class StoreStats:
     restore_decode_seconds: float = 0.0
     restore_cache_hits: int = 0
     restore_cache_misses: int = 0
+    restore_prefetch_bytes: int = 0
 
     @property
     def dcr(self) -> float:
@@ -211,3 +218,4 @@ class StoreStats:
         self.restore_decode_seconds += report.decode_seconds
         self.restore_cache_hits += report.cache_hits
         self.restore_cache_misses += report.cache_misses
+        self.restore_prefetch_bytes += report.prefetch_bytes

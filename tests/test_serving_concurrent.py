@@ -1,0 +1,422 @@
+"""Concurrent serving engine (DESIGN.md §10): sharded decode cache,
+pread reader pool, readahead, and thread-safe restore surfaces.
+
+The stress tests drive N threads through overlapping restores (full,
+iterator, ranged) against one store and assert byte-identity with the
+serial path, bounded cache bytes under contention, race-free telemetry,
+and absence of deadlock (joins are time-bounded) — including after
+compaction and a cold reopen."""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api.concurrency import RWLock
+from repro.api.restore import DecodeCache, ShardedDecodeCache
+from repro.core import delta
+
+CHUNK = 2048
+JOIN_S = 120        # deadlock guard: no worker may outlive this
+
+
+def _build_store_dir(tmp, streams=6, slots=48, seed=0):
+    """Version-chained container built straight through the backend (no
+    detector cost): stream s's slot j is usually a delta against stream
+    s-1's slot j, so cross-stream chains reach depth ~`streams` and
+    concurrent restores of different streams share base chains."""
+    rng = np.random.default_rng(seed)
+    backend = api.FileBackend(tmp)
+    expected = {}
+    prev_ids = prev_data = None
+    next_cid = 0
+    for _s in range(streams):
+        ids, lens, datas = [], [], []
+        for j in range(slots):
+            if prev_data is not None and rng.random() < 0.7:
+                mix = bytearray(prev_data[j])
+                pos = int(rng.integers(0, max(1, len(mix) - 64)))
+                mix[pos:pos + 64] = rng.integers(0, 256, 64, np.uint8).tobytes()
+                data = bytes(mix)
+                patch = delta.encode(data, prev_data[j])
+                if len(patch) < len(data):
+                    backend.put_delta(next_cid, prev_ids[j], patch, data=data)
+                else:
+                    backend.put_raw(next_cid, data)
+            else:
+                data = rng.integers(0, 256, CHUNK, np.uint8).tobytes()
+                backend.put_raw(next_cid, data)
+            ids.append(next_cid)
+            lens.append(len(data))
+            datas.append(data)
+            next_cid += 1
+        expected[backend.add_recipe(ids, lens)] = b"".join(datas)
+        prev_ids, prev_data = ids, datas
+    backend.close()
+    return expected
+
+
+def _serving_store(tmp, cache_bytes=1 << 20, shards=4):
+    return api.build_store(api.DedupConfig.from_dict({
+        "detector": "dedup-only", "backend": "file",
+        "backend_args": {"path": str(tmp)},
+        "restore_cache_bytes": cache_bytes,
+        "restore_cache_shards": shards,
+        "restore_reader_fds": 4, "restore_readahead": 2}))
+
+
+def _hammer(store, expected, handles, n_threads=8, rounds=12):
+    """N threads × mixed restore surfaces; returns collected errors."""
+    errors = []
+    done = []
+
+    def worker(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(rounds):
+                h = int(handles[int(rng.integers(0, len(handles)))])
+                want = expected[h]
+                mode = int(rng.integers(0, 3))
+                if mode == 0:
+                    got = store.restore(h)
+                elif mode == 1:
+                    got = b"".join(store.restore_iter(h, batch_chunks=7))
+                else:
+                    off = int(rng.integers(0, len(want)))
+                    ln = int(rng.integers(0, 4 * CHUNK))
+                    assert store.restore_range(h, off, ln) == want[off:off + ln]
+                    continue
+                assert got == want
+            done.append(seed)
+        except Exception as e:           # surfaced by the main thread
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(s,), daemon=True)
+               for s in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(JOIN_S)
+    assert not any(t.is_alive() for t in threads), "deadlocked restore worker"
+    assert not errors, errors
+    assert len(done) == n_threads
+    return errors
+
+
+def test_concurrent_restores_byte_identical_and_bounded(tmp_path):
+    budget = 1 << 20
+    expected = _build_store_dir(tmp_path)
+    store = _serving_store(tmp_path, cache_bytes=budget)
+    handles = sorted(expected)
+    before = store.stats.restores
+    _hammer(store, expected, handles)
+    # race-free aggregate telemetry: every worker op was absorbed exactly
+    # once (8 threads x 12 rounds)
+    assert store.stats.restores == before + 8 * 12
+    # cache-budget ceiling under contention: per-shard eviction holds the
+    # aggregate under the global budget (pinned chain working sets stay
+    # far below the per-shard slice in this topology)
+    assert store.backend.cache_peak_bytes <= budget
+    assert store.backend.cache_bytes <= budget
+    store.close()
+
+
+def test_concurrent_restores_after_compaction_and_reopen(tmp_path):
+    expected = _build_store_dir(tmp_path, streams=5, slots=32)
+    store = _serving_store(tmp_path)
+    handles = sorted(expected)
+    # concurrent readers on the survivors while the main thread deletes
+    # the two oldest streams (exclusive lifecycle lock vs shared fetches)
+    survivors = handles[2:]
+    t = threading.Thread(
+        target=_hammer, args=(store, expected, survivors, 4, 8), daemon=True)
+    t.start()
+    for h in handles[:2]:
+        store.delete(h)
+    t.join(JOIN_S)
+    assert not t.is_alive()
+    run = store.compact()
+    assert run.swept_chunks > 0
+    _hammer(store, expected, survivors, n_threads=6, rounds=8)
+    store.close()
+
+    cold = _serving_store(tmp_path)     # reopen: scan + fresh reader pool
+    _hammer(cold, expected, survivors, n_threads=6, rounds=8)
+    cold.close()
+
+
+def test_restore_while_ingesting(tmp_path):
+    expected = _build_store_dir(tmp_path, streams=4, slots=24)
+    store = _serving_store(tmp_path)
+    handles = sorted(expected)
+    stop = threading.Event()
+    errors = []
+
+    def reader():
+        rng = np.random.default_rng(1)
+        try:
+            while not stop.is_set():
+                h = int(handles[int(rng.integers(0, len(handles)))])
+                assert store.restore(h) == expected[h]
+        except Exception as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader, daemon=True) for _ in range(3)]
+    for t in threads:
+        t.start()
+    new = []
+    rng = np.random.default_rng(2)
+    for _ in range(3):                  # commits interleave with restores
+        data = rng.integers(0, 256, 64 << 10, np.uint8).tobytes()
+        with store.open_stream() as s:
+            s.write(data)
+        new.append((s.report.handle, data))
+    stop.set()
+    for t in threads:
+        t.join(JOIN_S)
+    assert not any(t.is_alive() for t in threads)
+    assert not errors, errors
+    for h, data in new:
+        assert store.restore(h) == data
+    store.close()
+
+
+def test_per_restore_reports_are_thread_exact(tmp_path):
+    """Two cold restores on two threads: each RestoreReport must account
+    only its own thread's I/O (global-counter deltas would bleed the
+    other restore's bytes in)."""
+    expected = _build_store_dir(tmp_path, streams=2, slots=32, seed=3)
+    store = _serving_store(tmp_path)
+    h0, h1 = sorted(expected)
+    reports = {}
+    barrier = threading.Barrier(2)
+
+    def one(h):
+        barrier.wait()
+        data, d = store._fetch_counted(store.backend.recipe(h))
+        reports[h] = d
+
+    threads = [threading.Thread(target=one, args=(h,)) for h in (h0, h1)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(JOIN_S)
+    for h in (h0, h1):
+        read_s, dec_s, bytes_read, hits, misses, prefetch = reports[h]
+        # each stream's container footprint is < 2x its materialized size;
+        # a bleed from the sibling restore would roughly double it
+        assert 0 < bytes_read < 1.5 * len(expected[h])
+        assert misses > 0
+    total = store.backend.bytes_read      # lifetime totals aggregate both
+    assert total == reports[h0][2] + reports[h1][2]
+    store.close()
+
+
+# --- sharded decode cache -----------------------------------------------------
+
+def test_sharded_counters_equal_single_shard_baseline():
+    """Satellite: on a serial workload the shard-aggregated counters are
+    exactly the single-shard cache's counters (no eviction in play —
+    eviction order is the one policy difference sharding introduces)."""
+    budget = 1 << 20
+    single = DecodeCache(budget)
+    sharded = ShardedDecodeCache(budget, shards=4)
+    rng = np.random.default_rng(0)
+    blobs = {cid: bytes(rng.integers(0, 256, int(rng.integers(100, 2000)),
+                                     np.uint8)) for cid in range(64)}
+    for cache in (single, sharded):
+        for cid, blob in blobs.items():
+            cache.put(cid, blob)
+        for _ in range(300):
+            cache.get(int(rng.integers(0, 96)))     # ~1/3 misses
+        rng = np.random.default_rng(0)              # same op stream twice
+        blobs = {cid: bytes(rng.integers(0, 256,
+                                         int(rng.integers(100, 2000)),
+                                         np.uint8)) for cid in range(64)}
+    assert sharded.hits == single.hits and sharded.misses == single.misses
+    assert sharded.bytes == single.bytes == sum(map(len, blobs.values()))
+    assert sharded.peak_bytes == single.peak_bytes
+    assert len(sharded) == len(single) == 64
+
+
+def test_sharded_budget_apportionment_and_eviction():
+    budget = 1000
+    cache = ShardedDecodeCache(budget, shards=3)
+    assert sum(s.budget_bytes for s in cache.shards) == budget
+    assert cache.budget_bytes == budget
+    for cid in range(60):               # way over budget: LRU must rotate
+        cache.put(cid, b"x" * 100)
+    assert cache.bytes <= budget
+    assert cache.peak_bytes <= budget
+    # tiny budgets never produce a zero-budget shard
+    tiny = ShardedDecodeCache(3, shards=8)
+    assert len(tiny.shards) == 3
+    with pytest.raises(ValueError):
+        ShardedDecodeCache(0)
+    with pytest.raises(ValueError):
+        ShardedDecodeCache(100, shards=0)
+
+
+def test_try_pin_is_atomic_pin_and_fetch():
+    cache = ShardedDecodeCache(1 << 10, shards=2)
+    assert cache.try_pin(5) is None     # absent: no pin, no counter churn
+    assert not cache._pins
+    cache.put(5, b"hello")
+    assert cache.try_pin(5) == b"hello"
+    assert cache._pins == {5: 1}
+    # pinned entries survive eviction pressure
+    for cid in range(50):
+        cache.put(100 + cid, b"z" * 200)
+    assert 5 in cache
+    cache.unpin(5)
+    assert not cache._pins
+    # try_pin leaves hit/miss counters alone (planner-probe semantics)
+    assert cache.misses == 0 and cache.hits == 0
+
+
+def test_decode_cache_thread_safety_under_hammering():
+    cache = ShardedDecodeCache(64 << 10, shards=4)
+    errors = []
+
+    def worker(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(400):
+                cid = int(rng.integers(0, 128))
+                op = int(rng.integers(0, 4))
+                if op == 0:
+                    cache.put(cid, bytes(rng.integers(0, 256, 256, np.uint8)))
+                elif op == 1:
+                    cache.get(cid)
+                elif op == 2:
+                    data = cache.try_pin(cid)
+                    if data is not None:
+                        cache.unpin(cid)
+                else:
+                    cid in cache
+        except Exception as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(s,), daemon=True)
+               for s in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(JOIN_S)
+    assert not any(t.is_alive() for t in threads)
+    assert not errors, errors
+    assert not cache._pins              # every try_pin was matched
+    assert cache.bytes <= cache.budget_bytes
+
+
+# --- truncated records (satellite bugfix) -------------------------------------
+
+def test_truncated_record_raises_instead_of_short_payload(tmp_path):
+    # 1-byte budget: nothing stays cached, every get is a disk read
+    backend = api.FileBackend(tmp_path, cache_bytes=1)
+    backend.put_raw(0, b"a" * 4096)
+    backend.put_raw(1, b"b" * 4096)
+    backend.flush()
+    _, _, offset, length = backend._index[1]
+    os.truncate(tmp_path / "chunks.log", offset + length - 100)
+    assert backend.get(0) == b"a" * 4096        # intact record still serves
+    with pytest.raises(IOError):
+        backend.get(1)
+    with pytest.raises(IOError):                 # planned batch path too
+        backend.get_many([1])
+    assert not backend._cache._pins              # no pins leaked by the raise
+    # bytes_read counted what actually arrived, not what was requested
+    assert backend.bytes_read < 2 * 4096 + (length - 100) + 1
+    backend.close()
+
+
+def test_reader_pool_parity_with_serial_reads(tmp_path):
+    """readahead off vs on: byte-identical results over the same dir."""
+    expected = _build_store_dir(tmp_path, streams=3, slots=40, seed=5)
+    serial = api.FileBackend(tmp_path, readahead=0, reader_fds=1)
+    pooled = api.FileBackend(tmp_path, readahead=3, reader_fds=4)
+    for h, want in expected.items():
+        r = serial.recipe(h)
+        assert b"".join(serial.get_many(r)) == want
+        assert b"".join(pooled.get_many(r)) == want
+    serial.close()
+    pooled.close()
+
+
+# --- RWLock -------------------------------------------------------------------
+
+def test_rwlock_readers_share_writers_exclude():
+    lock = RWLock()
+    in_read = threading.Event()
+    release_read = threading.Event()
+    wrote = []
+
+    def reader():
+        with lock.read():
+            in_read.set()
+            release_read.wait(JOIN_S)
+
+    def writer():
+        with lock.write():
+            wrote.append(time.monotonic())
+
+    r = threading.Thread(target=reader, daemon=True)
+    r.start()
+    assert in_read.wait(JOIN_S)
+    with lock.read():                   # readers share
+        pass
+    w = threading.Thread(target=writer, daemon=True)
+    w.start()
+    time.sleep(0.05)
+    assert not wrote                    # writer blocked by active reader
+    release_read.set()
+    w.join(JOIN_S)
+    r.join(JOIN_S)
+    assert wrote                        # and admitted once readers drain
+    with lock.read():                   # lock is reusable afterwards
+        pass
+
+
+def test_serving_config_knobs_roundtrip_and_forwarding(tmp_path):
+    d = {"detector": "dedup-only", "backend": "file",
+         "backend_args": {"path": str(tmp_path)},
+         "restore_cache_bytes": 1 << 20, "restore_cache_shards": 3,
+         "restore_reader_fds": 2, "restore_readahead": 0}
+    cfg = api.DedupConfig.from_dict(d)
+    assert api.DedupConfig.from_dict(cfg.to_dict()) == cfg
+    store = api.build_store(cfg)
+    assert len(store.backend._cache.shards) == 3
+    assert store.backend._cache.budget_bytes == 1 << 20
+    assert store.backend._pool.size == 2
+    assert store.backend._readahead == 0
+    store.close()
+    for bad in ({"restore_cache_shards": 0}, {"restore_reader_fds": 0},
+                {"restore_readahead": -1}, {"restore_cache_bytes": 0}):
+        with pytest.raises(ValueError):
+            api.DedupConfig.from_dict({**d, **bad})
+    # memory backend has no serving knobs: they are skipped, not passed
+    mem = api.build_store(api.DedupConfig.from_dict(
+        {"detector": "dedup-only", "restore_cache_bytes": 1 << 20,
+         "restore_readahead": 4}))
+    assert isinstance(mem.backend, api.InMemoryBackend)
+    mem.close()
+
+
+def test_restore_iter_prefetch_and_abandonment(tmp_path):
+    expected = _build_store_dir(tmp_path, streams=2, slots=64, seed=7)
+    store = _serving_store(tmp_path)
+    h = sorted(expected)[-1]
+    want = expected[h]
+    pieces = list(store.restore_iter(h, batch_chunks=8))    # many batches
+    assert b"".join(pieces) == want
+    report = store.last_restore
+    assert report.handle == h and report.bytes_out == len(want)
+    n = store.stats.restores
+    it = store.restore_iter(h, batch_chunks=8)
+    next(it)
+    it.close()                          # abandoned: no report, no crash
+    assert store.stats.restores == n
+    assert store.restore(h) == want     # store fully usable afterwards
+    store.close()
