@@ -65,6 +65,16 @@ def main() -> None:
         print(f"\n===== {name} =====", flush=True)
         rows = fn()
         common.emit(rows, name)
+        if args.smoke:
+            # rows with an errors column count corrupt/failed restores
+            # (the serve section's SHA1 mismatches); the gate must go red
+            # on them, not just record a nonzero cell — the pre-§10 code
+            # corrupts concurrent restores while exiting 0
+            bad = sum(r.get("errors", 0) for r in rows)
+            if bad:
+                raise SystemExit(
+                    f"{name}: {bad} corrupt/failed restores — the smoke "
+                    f"gate requires error-free serving")
         print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s",
               flush=True)
 

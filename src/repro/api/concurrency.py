@@ -184,11 +184,15 @@ class IoTelemetry:
                         getattr(accumulate_to, field) + value)
 
     def totals(self) -> tuple:
-        with self._lock:
-            rows = [self._dead] + list(self._live)
+        # snapshot under the lock: a thread exiting between a locked row
+        # copy and an unlocked read would _fold its counters into _dead
+        # while the copied live record is still summed too, over-reporting
+        # by that thread's whole lifetime
         acc = zero_deltas()
-        for c in rows:
-            accumulate(acc, c.snapshot())
+        with self._lock:
+            accumulate(acc, self._dead.snapshot())
+            for c in self._live:
+                accumulate(acc, c.snapshot())
         return tuple(acc)
 
     def total(self, field: str) -> float | int:

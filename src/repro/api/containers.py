@@ -429,6 +429,11 @@ class FileBackend:
             else DEFAULT_CACHE_SHARDS)
         self._recipes: list[list[int] | None] = []
         self._recipe_lens: dict[int, list[int]] = {}
+        # largest cid referenced by ANY recipe line ever seen — retired
+        # and recovery-retired included. max_chunk_id() covers it so the
+        # ids of a torn-away chunk (still named by its recipe line in the
+        # journal) are never reissued to new content (§10.6).
+        self._max_recipe_cid = -1
         # restore telemetry (DESIGN.md §9.4): per-thread counters so
         # concurrent restores attribute I/O exactly (§10.5); the
         # read_seconds/bytes_read/... properties expose lifetime totals
@@ -546,13 +551,20 @@ class FileBackend:
                                     self._recipes[h] = None
                                     self._recipe_lens.pop(h, None)
                             elif "recipe" in entry:
-                                self._recipes.append(entry["recipe"])
+                                rec = entry["recipe"]
+                                self._recipes.append(rec)
+                                if rec:
+                                    self._max_recipe_cid = max(
+                                        self._max_recipe_cid, max(rec))
                                 lens = entry.get("lens")
                                 if lens is not None:
                                     self._recipe_lens[
                                         len(self._recipes) - 1] = lens
                         else:   # list = live recipe, null = retired slot
                             self._recipes.append(entry)
+                            if entry:
+                                self._max_recipe_cid = max(
+                                    self._max_recipe_cid, max(entry))
                     first = False
                     good_end += len(line)
             if torn:
@@ -563,14 +575,30 @@ class FileBackend:
         # log). A live recipe referencing a chunk missing from the index
         # belongs to a commit that never produced an IngestReport —
         # retire it at scan time rather than crash the refcount rebuild
-        # or serve KeyErrors later. Idempotent across reopens; committed
-        # streams are untouched (their chunks precede their recipe line,
-        # and truncation is always a prefix of each file).
+        # or serve KeyErrors later. The retirement must be DURABLE: the
+        # recipe line itself survives in the journal, so without a
+        # tombstone a later ingest that reused the torn cids would make
+        # every referenced cid exist again on the next reopen and the
+        # recipe would resurrect as live — serving another stream's
+        # bytes. Committed streams are untouched (their chunks precede
+        # their recipe line, and truncation is always a prefix of each
+        # file).
+        recovered: list[int] = []
         for h, recipe in enumerate(self._recipes):
             if recipe is not None and any(cid not in self._index
                                           for cid in recipe):
                 self._recipes[h] = None
                 self._recipe_lens.pop(h, None)
+                recovered.append(h)
+        if recovered:
+            # fsync'd before __init__ returns, so no ingest can slip in
+            # ahead of the tombstone; a crash right here just re-derives
+            # the same retirement on the next open (no ids reused yet)
+            with open(self._recipes_path, "a") as f:
+                for h in recovered:
+                    f.write(json.dumps({"retire": h}) + "\n")
+                f.flush()
+                os.fsync(f.fileno())
         # a crash between the two compaction renames leaves the epochs one
         # apart; both file states are consistent (see module docstring)
         self.epoch = max(log_epoch, recipes_epoch)
@@ -657,23 +685,26 @@ class FileBackend:
         # patches back up (iterative: delta chains can outgrow recursion).
         # Correctness never depends on cache retention: `data` is a local
         # strong reference, so a budget-pressed cache may evict behind us.
-        self._index[cid]        # unknown cid: KeyError before any I/O
+        # The walk seeds from the miss above — only *bases* are probed
+        # inside the loop, so each chain node costs exactly one counted
+        # cache lookup (re-probing `cid` would double-count the miss in
+        # the §9.4 telemetry).
         chain: list[tuple[int, bytes]] = []
         cur = cid
         while True:
-            data = self._cache.get(cur)
-            if data is not None:
-                tel.cache_hits += 1
-                break
-            tel.cache_misses += 1
-            kind, base, offset, length = self._index[cur]
-            payload = self._read_payload(offset, length)
+            kind, base, offset, length = self._index[cur]  # KeyError
+            payload = self._read_payload(offset, length)   # before I/O
             if kind == _KIND_RAW:
                 data = payload
                 self._cache.put(cur, data)
                 break
             chain.append((cur, payload))
             cur = base
+            data = self._cache.get(cur)
+            if data is not None:
+                tel.cache_hits += 1
+                break
+            tel.cache_misses += 1
         for c, patch in reversed(chain):
             data = delta.decode(patch, data)
             self._cache.put(c, data)
@@ -834,20 +865,36 @@ class FileBackend:
                     ex = self._reader_executor()
                     pending: deque = deque()
                     ri = 0
-                    while ri < len(runs) or pending:
-                        while (ri < len(runs)
-                               and len(pending) <= self._readahead):
-                            pending.append((runs[ri],
-                                            ex.submit(read_run, runs[ri])))
-                            ri += 1
-                        run, fut = pending.popleft()
-                        overlapped = fut.done() and run is not runs[0]
-                        blob, secs = fut.result()
-                        tel.read_seconds += secs
-                        if overlapped:      # fully hidden behind decode
-                            tel.prefetch_bytes += len(blob)
-                        ingest_run(run, blob)
-                        decode_ready()
+                    try:
+                        while ri < len(runs) or pending:
+                            while (ri < len(runs)
+                                   and len(pending) <= self._readahead):
+                                pending.append((runs[ri],
+                                                ex.submit(read_run,
+                                                          runs[ri])))
+                                ri += 1
+                            run, fut = pending.popleft()
+                            overlapped = fut.done() and run is not runs[0]
+                            blob, secs = fut.result()
+                            tel.read_seconds += secs
+                            if overlapped:  # fully hidden behind decode
+                                tel.prefetch_bytes += len(blob)
+                            ingest_run(run, blob)
+                            decode_ready()
+                    finally:
+                        # an aborted plan (truncated record, corrupt
+                        # patch) must not leave preads in flight: a later
+                        # compaction's _pool.reopen() closes every fd
+                        # under the documented no-reads-in-flight
+                        # precondition. Cancel what hasn't started and
+                        # drain what has; no-op on the success path.
+                        while pending:
+                            _, fut = pending.popleft()
+                            if not fut.cancel():
+                                try:
+                                    fut.result()
+                                except Exception:
+                                    pass
                 else:                       # serial: one run, or disabled
                     for run in runs:
                         blob, secs = read_run(run)
@@ -880,7 +927,11 @@ class FileBackend:
         return cid in self._index
 
     def max_chunk_id(self) -> int:
-        return max(self._index, default=-1)
+        # covers cids named by recipe lines too (retired included): a
+        # torn-tail recovery drops chunks from the index but their recipe
+        # line survives in the journal, and reissuing those ids would
+        # alias new content under an old recipe's cids (§10.6)
+        return max(max(self._index, default=-1), self._max_recipe_cid)
 
     def chunk_ids(self) -> list[int]:
         return list(self._index)
@@ -901,6 +952,8 @@ class FileBackend:
                    lengths: Sequence[int] | None = None) -> int:
         recipe = [int(c) for c in chunk_ids]
         self._recipes.append(recipe)
+        if recipe:
+            self._max_recipe_cid = max(self._max_recipe_cid, max(recipe))
         handle = len(self._recipes) - 1
         if lengths is None:
             self._recipes_f.write(json.dumps(recipe) + "\n")

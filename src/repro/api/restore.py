@@ -33,11 +33,10 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import itertools
 import threading
 from collections import OrderedDict
 from typing import Callable, Sequence
-
-import numpy as np
 
 #: Default decode-cache budget for file-backed stores. Large enough that
 #: version-chain restores stay warm, small enough that restoring a
@@ -100,8 +99,12 @@ class DecodeCache:
         """``get`` without touching the hit/miss counters or LRU order —
         for plan-internal base lookups (the plan itself pinned the entry
         moments ago; counting those as hits would inflate the §9.4
-        telemetry every cold restore of a delta chain)."""
-        return self._entries.get(cid)
+        telemetry every cold restore of a delta chain). Still takes the
+        lock — other threads mutate the OrderedDict under it, and the
+        thread-safety contract is every-operation-atomic, not
+        GIL-happens-to-save-us."""
+        with self._lock:
+            return self._entries.get(cid)
 
     def get_present(self, cids: Sequence[int]) -> dict[int, bytes]:
         """Batched ``get``: one lock acquisition for the whole batch —
@@ -381,10 +384,9 @@ class RecipeLayout:
     """
 
     def __init__(self, lengths: Sequence[int]) -> None:
-        self.ends = np.cumsum(np.asarray(lengths, np.int64))
-        # plain-list twin for bisect: scalar np.searchsorted costs ~4µs a
-        # call, which dominates small ranged reads (§10.7 profile)
-        self._ends = self.ends.tolist()
+        # plain list + bisect: scalar np.searchsorted costs ~4µs a call,
+        # which dominates small ranged reads (§10.7 profile)
+        self._ends = list(itertools.accumulate(int(n) for n in lengths))
 
     @property
     def total_bytes(self) -> int:

@@ -184,6 +184,14 @@ class DedupStore:
         self._commit_lock = threading.Lock()
         self._stats_lock = threading.Lock()
         self._prefetch: ThreadPoolExecutor | None = None
+        # two close flags (§10.4): _closed flips first (under the stats
+        # lock) and stops prefetch-pool (re)creation; _backend_closed
+        # flips under the exclusive lifecycle lock right before the
+        # backend closes, so fetches that were in flight when close()
+        # started — including the drained prefetch tasks — still finish,
+        # while any fetch arriving after gets a clean RuntimeError
+        self._closed = False
+        self._backend_closed = False
         # bound once: per-thread backend telemetry hook (None -> the
         # global-attr fallback in _backend_counters)
         self._io_counters = getattr(self.backend, "io_counters", None)
@@ -209,6 +217,10 @@ class DedupStore:
         # commit in flight); commits run concurrently with restores but
         # are excluded from lifecycle mutations (DESIGN.md §10.4)
         with self._commit_lock, self._lifecycle_lock.read():
+            # post-close contract: fail here, before the chunk/detect
+            # passes run, instead of dying on the closed append handle
+            # after the work is done
+            self._check_open()
             return self._commit_stream_locked(stream)
 
     def _commit_stream_locked(self, stream: bytes) -> IngestReport:
@@ -459,6 +471,12 @@ class DedupStore:
         snap = self._backend_counters()
         lock.acquire_read()
         try:
+            # a resumed restore_iter generator can arrive here after
+            # close(): the backend's reader fds are gone, so fail with a
+            # clean error instead of whatever the closed backend raises.
+            # The flag flips under the write lock, so a reader seeing it
+            # False is ordered before the close and fetches safely.
+            self._check_open()
             data = self._fetch_unique(cids)
         finally:
             lock.release_read()
@@ -469,6 +487,10 @@ class DedupStore:
         pool = self._prefetch
         if pool is None:
             with self._stats_lock:
+                # never recreate the pool after close() drained it —
+                # the executor would leak (nothing shuts it down again)
+                if self._closed:
+                    raise RuntimeError("store is closed")
                 if self._prefetch is None:
                     self._prefetch = ThreadPoolExecutor(
                         max_workers=4, thread_name_prefix="repro-prefetch")
@@ -489,9 +511,24 @@ class DedupStore:
                     accumulate(acc, d)
                 lengths = [len(data[cid]) for cid in recipe]
             layout = RecipeLayout(lengths)
-            # two threads may build the same layout concurrently; both
-            # compute identical sums, so last-writer-wins is benign
-            self._layouts[handle] = layout
+            # cache only while the handle is still live, checked under
+            # the shared lifecycle lock: a write-locked delete retires
+            # the recipe and pops the layout as one atomic step, so an
+            # unguarded insert could land *after* the pop and pin the
+            # layout forever (handles are never reused). Two threads may
+            # still build the same layout concurrently; both compute
+            # identical sums, so last-writer-wins is benign.
+            lock = self._lifecycle_lock
+            lock.acquire_read()
+            try:
+                try:
+                    self.backend.recipe(handle)
+                except (KeyError, IndexError):
+                    pass        # deleted meanwhile: serve, don't cache
+                else:
+                    self._layouts[handle] = layout
+            finally:
+                lock.release_read()
         return layout
 
     def _backend_counters(self) -> tuple:
@@ -524,6 +561,14 @@ class DedupStore:
 
     # --- space reclamation (repro.api.lifecycle, DESIGN.md §7) ---------------
 
+    def _check_open(self) -> None:
+        # uniform post-close contract: every surface fails with the same
+        # clean error before mutating anything (a delete reaching the
+        # closed backend would retire the recipe in memory, then die on
+        # the closed journal handle mid-mutation)
+        if self._backend_closed:
+            raise RuntimeError("store is closed")
+
     def delete(self, handle: int) -> int:
         """Retire a committed stream; returns the logical bytes the delete
         made reclaimable. May trigger compaction per the store policy.
@@ -531,11 +576,13 @@ class DedupStore:
         first, restores arriving later run against the post-delete state
         (a restore of the deleted handle then raises KeyError)."""
         with self._lifecycle_lock.write():
+            self._check_open()
             return lifecycle.delete_stream(self, handle)
 
     def collect(self) -> lifecycle.CollectReport:
         """Mark-sweep accounting pass (mutates no data)."""
         with self._lifecycle_lock.write():
+            self._check_open()
             return lifecycle.collect(self)
 
     def compact(self) -> lifecycle.CompactionRun:
@@ -543,6 +590,7 @@ class DedupStore:
         Exclusive: the backend swaps its chunk index and reopens its
         reader-pool fds, so no restore may be mid-plan while it runs."""
         with self._lifecycle_lock.write():
+            self._check_open()
             return lifecycle.compact(self)
 
     def _refresh_lifecycle_stats(self) -> None:
@@ -552,13 +600,23 @@ class DedupStore:
         self.stats.dead_bytes = self._refs.dead_bytes + self._refs.pinned_bytes
 
     def close(self) -> None:
-        # drain the prefetch pool BEFORE taking the exclusive lock — its
-        # tasks acquire the shared side, so the reverse order deadlocks.
-        # Then close the backend under exclusion: in-flight restores
+        """Idempotent. Restores arriving after close — including a
+        partially-consumed ``restore_iter`` generator being resumed —
+        raise RuntimeError instead of touching the closed backend."""
+        # the flag flips under the same lock that guards prefetch-pool
+        # creation, so no pool can be created after it is set; then
+        # drain the pool BEFORE taking the exclusive lock — its tasks
+        # acquire the shared side, so the reverse order deadlocks.
+        # Finally close the backend under exclusion: in-flight restores
         # finish before the reader-pool fds go away (the contract
         # FileBackend documents).
+        with self._stats_lock:
+            if self._closed:
+                return
+            self._closed = True
         if self._prefetch is not None:
             self._prefetch.shutdown(wait=True)
             self._prefetch = None
         with self._lifecycle_lock.write():
+            self._backend_closed = True
             self.backend.close()

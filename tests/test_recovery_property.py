@@ -78,6 +78,9 @@ def _check_joint_cut(reference, tmp, cut_log: int, cut_rec: int) -> None:
 
     backend = api.FileBackend(tmp)      # must never raise
     live = backend.live_handles()
+    # slots that exist but are not live were retired — by the original
+    # tombstone or by torn-tail recovery; they must STAY retired below
+    retired = [h for h in range(backend.num_streams()) if h not in live]
     for h in live:
         recipe = backend.recipe(h)
         # hardening invariant: a live recipe's chunks (and their whole
@@ -106,9 +109,18 @@ def _check_joint_cut(reference, tmp, cut_log: int, cut_rec: int) -> None:
     store.close()
     again = api.FileBackend(tmp)
     assert b"".join(again.get_many(again.recipe(nh))) == fresh
+    # live handles stay live (the post-recovery ingest must not have
+    # reused their cids or otherwise disturbed them) and serve the
+    # original bytes
     for h in live:
-        if h in again.live_handles():
-            assert b"".join(again.get_many(again.recipe(h))) == expected[h]
+        assert b"".join(again.get_many(again.recipe(h))) == expected[h]
+    # retired handles stay retired: without a persisted retire tombstone
+    # (and torn cids kept out of reissue), a recovery-retired recipe
+    # whose cids were reused by the fresh ingest would resurrect here —
+    # live again, serving the fresh stream's bytes under an old handle
+    for h in retired:
+        with pytest.raises(KeyError):
+            again.recipe(h)
     again.close()
 
 

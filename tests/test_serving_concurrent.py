@@ -420,3 +420,30 @@ def test_restore_iter_prefetch_and_abandonment(tmp_path):
     assert store.stats.restores == n
     assert store.restore(h) == want     # store fully usable afterwards
     store.close()
+
+
+def test_restore_after_close_raises_cleanly(tmp_path):
+    """close() contract: resuming a partially consumed restore_iter (or
+    any new restore) after close raises RuntimeError — it must neither
+    recreate the drained prefetch pool (a leaked executor) nor reach the
+    closed backend's empty reader-fd pool (ZeroDivisionError)."""
+    expected = _build_store_dir(tmp_path, streams=2, slots=32, seed=11)
+    store = _serving_store(tmp_path)
+    h = sorted(expected)[-1]
+    it = store.restore_iter(h, batch_chunks=4)
+    next(it)
+    store.close()
+    with pytest.raises(RuntimeError):
+        list(it)
+    assert store._prefetch is None      # no pool resurrected by the resume
+    with pytest.raises(RuntimeError):
+        store.restore(h)
+    # the contract is uniform across surfaces: mutations fail the same
+    # way, before touching (and partially mutating) the closed backend
+    with pytest.raises(RuntimeError):
+        store.ingest(b"post-close data")
+    with pytest.raises(RuntimeError):
+        store.delete(h)
+    with pytest.raises(RuntimeError):
+        store.compact()
+    store.close()                       # idempotent
