@@ -5,7 +5,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: dev-deps test test-fast test-lifecycle ci bench bench-smoke \
-        gc-bench ingest-bench restore-bench serve-bench quickstart
+        gc-bench ingest-bench restore-bench serve-bench objstore-bench \
+        quickstart
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -47,6 +48,11 @@ restore-bench:
 # restore threads (DESIGN.md §10.7); appends rows to BENCH_RESTORE.json
 serve-bench:
 	$(PYTHON) -m benchmarks.bench_restore --threads 1,2,4
+
+# object-store serving: coalesced ranged GETs vs per-chunk baseline under
+# injected latency (DESIGN.md §11.3); writes BENCH_OBJSTORE.json
+objstore-bench:
+	$(PYTHON) -m benchmarks.bench_objstore
 
 quickstart:
 	$(PYTHON) examples/quickstart.py

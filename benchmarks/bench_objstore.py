@@ -1,0 +1,197 @@
+"""Object-store serving benchmark: request counts vs injected latency
+(DESIGN.md §11.3).
+
+One row per (workload, injected per-request latency, variant) on the
+version chains, ingested once through an ``ObjectStoreBackend`` over the
+``LocalObjectStore`` fake, then served two ways from a fresh reopen:
+
+    coalesced   the real read path: §9 planned chains with the MB-scale
+                coalesce gap, concurrent ranged GETs, double-buffered
+                readahead — cold pass (empty decode cache) and a warm
+                pass on the same store
+    per-chunk   the naive object-store client every backup tool starts
+                with: one ``get`` per recipe slot, chain walks and all —
+                what the planner exists to beat
+
+The headline column is ``requests`` (client-counted GETs for the cold
+pass): at 10 ms injected latency the coalesced path must cut it by >=5x
+(the PR gate checked from BENCH_OBJSTORE.json), which is exactly why
+``cold_mbps`` diverges between the variants as latency grows — at 0 ms
+they are within noise of each other, at S3-like latency the per-chunk
+path drowns in round-trips. ``errors`` counts SHA1 mismatches between
+restored and original bytes (the smoke gate goes red on any).
+
+Throughputs are best-of-``repeats`` (min-time; shared-CPU box — see
+bench_restore.py). Rows land in BENCH_OBJSTORE.json.
+
+    PYTHONPATH=src python -m benchmarks.bench_objstore [--quick] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import tempfile
+import time
+from pathlib import Path
+
+from benchmarks import common
+from repro import api
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_OBJSTORE.json"
+
+WORKLOADS = ("sql_dump", "vmdk")
+LATENCIES = (0.0, 0.01)         # seconds per object-store request
+DETECTOR = "card"
+
+
+def _reopen(tmp: str, latency: float) -> api.DedupStore:
+    cfg = api.DedupConfig.from_dict(
+        {"detector": "dedup-only", "backend": "objectstore",
+         "backend_args": {"path": tmp, "latency": latency}})
+    return api.build_store(cfg)
+
+
+def _gets(store: api.DedupStore) -> int:
+    return store.backend.client.op_counts.get("get", 0)
+
+
+def _sha_errors(store, jobs, restore_fn) -> tuple[float, int, int]:
+    """Run one pass of whole-stream restores; returns (seconds, bytes,
+    sha1-mismatch count)."""
+    errors = 0
+    total = 0
+    t0 = time.perf_counter()
+    for handle, digest, _ in jobs:
+        data = restore_fn(store, handle)
+        total += len(data)
+        if hashlib.sha1(data).digest() != digest:
+            errors += 1
+    return time.perf_counter() - t0, total, errors
+
+
+def _planned(store, handle):
+    return store.restore(handle)
+
+
+def _per_chunk(store, handle):
+    """The baseline client: one GET-resolving ``get`` per recipe slot."""
+    backend = store.backend
+    return b"".join(backend.get(c) for c in backend.recipe(handle))
+
+
+def run(base_size: int = 3 << 20, versions: int = 3,
+        workloads=WORKLOADS, latencies=LATENCIES,
+        avg_size: int = 8192, detector: str = DETECTOR,
+        repeats: int = 2) -> list[dict]:
+    rows = []
+    for wl in workloads:
+        vs = common.make_versions(wl, base_size, versions)
+        cfg = common.detector_config(detector, avg_size=avg_size)
+        with tempfile.TemporaryDirectory() as tmp:
+            # ingest once with no injected latency (this bench measures
+            # the serving path; ingest cost is bench_ingest's story)
+            cfg.backend = "objectstore"
+            cfg.backend_args = {"path": tmp}
+            store = api.build_store(cfg)
+            store.fit(list(vs[:1]))
+            jobs = []
+            for v in vs:
+                with store.open_stream() as s:
+                    s.write(v)
+                jobs.append((s.report.handle, hashlib.sha1(v).digest(),
+                             len(v)))
+            dcr = store.stats.dcr
+            store.close()
+            logical_mb = sum(j[2] for j in jobs) / 2**20
+
+            for latency in latencies:
+                for variant, restore_fn in (("coalesced", _planned),
+                                            ("per-chunk", _per_chunk)):
+                    # the naive path at high latency is exactly the slow
+                    # case being demonstrated — one timed pass suffices
+                    reps = 1 if (variant == "per-chunk"
+                                 and latency > 0) else repeats
+                    cold_s = warm_s = float("inf")
+                    cold_req = warm_req = errors = 0
+                    retries = 0
+                    for _rep in range(reps):
+                        served = _reopen(tmp, latency)
+                        g0 = _gets(served)
+                        pass_s, _, e1 = _sha_errors(served, jobs,
+                                                    restore_fn)
+                        if pass_s < cold_s:
+                            cold_s = pass_s
+                            cold_req = _gets(served) - g0
+                        g1 = _gets(served)
+                        wpass_s, _, e2 = _sha_errors(served, jobs,
+                                                     restore_fn)
+                        if wpass_s < warm_s:
+                            warm_s = wpass_s
+                            warm_req = _gets(served) - g1
+                        errors += e1 + e2
+                        retries = served.backend.retries
+                        served.close()
+                    rows.append({
+                        "bench": "objstore", "workload": wl,
+                        "detector": detector, "variant": variant,
+                        "latency_ms": round(latency * 1e3, 3),
+                        "versions": versions, "avg_size": avg_size,
+                        "bytes_mb": round(logical_mb, 2),
+                        "cold_mbps": round(logical_mb / max(1e-9, cold_s),
+                                           2),
+                        "warm_mbps": round(logical_mb / max(1e-9, warm_s),
+                                           2),
+                        "requests": cold_req,
+                        "warm_requests": warm_req,
+                        "req_per_mb": round(cold_req / max(1e-9,
+                                                           logical_mb), 2),
+                        "retries": retries,
+                        "errors": errors,
+                        "dcr": round(dcr, 4),
+                    })
+    return rows
+
+
+def request_cut(rows: list[dict]) -> list[str]:
+    """Human summary: the coalesced-vs-per-chunk request reduction per
+    (workload, latency) — the §11.3 headline."""
+    out = []
+    pairs: dict[tuple, dict[str, int]] = {}
+    for r in rows:
+        pairs.setdefault((r["workload"], r["latency_ms"]),
+                         {})[r["variant"]] = r["requests"]
+    for (wl, lat), req in sorted(pairs.items()):
+        if "coalesced" in req and "per-chunk" in req:
+            cut = req["per-chunk"] / max(1, req["coalesced"])
+            out.append(f"# {wl} @ {lat} ms: {req['per-chunk']} -> "
+                       f"{req['coalesced']} GETs ({cut:.1f}x fewer)")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workloads (CI smoke)")
+    ap.add_argument("--json", default=str(JSON_PATH),
+                    help="where to write the JSON row dump")
+    args = ap.parse_args()
+    if args.quick:
+        rows = run(base_size=1 << 20, versions=3,
+                   workloads=("sql_dump",), latencies=(0.0, 0.002),
+                   repeats=1)
+    else:
+        rows = run()
+    common.emit(rows, "objstore")
+    for line in request_cut(rows):
+        print(line)
+    path = Path(args.json)
+    path.write_text(json.dumps(rows, indent=2) + "\n")
+    print(f"# wrote {len(rows)} rows to {path}")
+    bad = sum(r["errors"] for r in rows)
+    if bad:
+        raise SystemExit(f"{bad} restores were not byte-identical")
+
+
+if __name__ == "__main__":
+    main()

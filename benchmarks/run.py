@@ -18,15 +18,15 @@ def main() -> None:
                          "raise (perf-plumbing CI gate; implies --quick)")
     ap.add_argument("--only", default=None,
                     help="comma list: dcr,time,dims,kernels,ckpt,ablation,"
-                         "roofline,gc,ingest,restore,serve")
+                         "roofline,gc,ingest,restore,serve,objstore")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     quick = args.quick or args.smoke
 
     from benchmarks import (bench_ablation, bench_ckpt_store, bench_dcr,
                             bench_dims, bench_gc, bench_ingest,
-                            bench_kernels, bench_restore, bench_roofline,
-                            bench_time, common)
+                            bench_kernels, bench_objstore, bench_restore,
+                            bench_roofline, bench_time, common)
 
     base = (1 << 20) if args.smoke else (2 << 20) if quick else (6 << 20)
     sizes = common.CHUNK_SIZES[:3] if quick else common.CHUNK_SIZES[:4]
@@ -56,6 +56,16 @@ def main() -> None:
             base_size=base, versions=3 if quick else 4,
             threads_list=(2,) if args.smoke else (1, 2, 4),
             warm_reps=2 if quick else 6, repeats=1 if quick else 3),
+        # object-store serving (DESIGN.md §11.3): coalesced ranged GETs
+        # vs the per-chunk baseline under injected latency; the errors
+        # column (SHA1 mismatches after retried faults) feeds the smoke
+        # gate below, so restores over the object API must stay
+        # byte-identical
+        "objstore": lambda: bench_objstore.run(
+            base_size=min(base, 2 << 20), versions=3,
+            workloads=("sql_dump",) if quick else bench_objstore.WORKLOADS,
+            latencies=(0.0, 0.002) if args.smoke else (0.0, 0.01),
+            repeats=1 if quick else 2),
     }
 
     for name, fn in sections.items():

@@ -6,7 +6,11 @@ Layers (DESIGN.md §2 and §7), each depending only on the ones above it:
   detect       staged detector protocol (extract -> score -> observe),
                legacy-``detect`` compatibility shim
   concurrency  RWLock + per-thread I/O telemetry for concurrent serving
-  containers   ContainerBackend protocol; memory + file backends
+  containers   ContainerBackend protocol; memory + file backends and the
+               shared PlannedChainReader read engine
+  objectstore  ranged-GET ObjectStoreBackend over an object API, the
+               fault-injecting LocalObjectStore fake, the boto3 seam,
+               and the cp/ls/stat/verify CLI (DESIGN.md §11)
   refcount     chunk recipe/base refcounting for space reclamation
   restore      serving-path policy: restore planner (chain-grouped,
                topologically ordered, offset-sorted reads), byte-budgeted
@@ -49,6 +53,7 @@ from repro.api.restore import (  # noqa: F401
     RecipeLayout,
     RestorePlan,
     ShardedDecodeCache,
+    coalesce_reads,
     plan_chains,
 )
 from repro.api.concurrency import IoTelemetry, RWLock  # noqa: F401
@@ -62,7 +67,13 @@ from repro.api.containers import (  # noqa: F401
     ContainerBackend,
     FileBackend,
     InMemoryBackend,
+    PlannedChainReader,
 )
+# objectstore exports resolve lazily (PEP 562, __getattr__ below): an
+# eager import here would land repro.api.objectstore in sys.modules
+# while ``python -m repro.api.objectstore`` is still locating it, and
+# runpy warns about exactly that. The registry reaches the module by
+# name anyway, so nothing else needs it at package-import time.
 from repro.api.refcount import RefcountTable  # noqa: F401
 from repro.api.store import DedupStore, StreamSession, chunk_with  # noqa: F401
 from repro.api.lifecycle import (  # noqa: F401
@@ -98,3 +109,15 @@ from repro.api.config import (  # noqa: F401
     build_policy,
     build_store,
 )
+
+_OBJECTSTORE_EXPORTS = frozenset({
+    "FaultSchedule", "LocalObjectStore", "ObjectStoreBackend",
+    "S3ObjectClient", "TransientError",
+})
+
+
+def __getattr__(name: str):
+    if name in _OBJECTSTORE_EXPORTS:
+        from repro.api import objectstore
+        return getattr(objectstore, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

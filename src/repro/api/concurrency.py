@@ -91,8 +91,12 @@ class RWLock:
 
 #: Field order of an I/O counter snapshot — shared by the backends that
 #: produce them and the store that turns deltas into RestoreReports.
+#: ``requests`` counts physical payload reads (preads for the file
+#: backend, ranged GETs for object stores) — the metric a latency-bound
+#: remote backend is optimized on (DESIGN.md §11.3).
 COUNTER_FIELDS = ("read_seconds", "decode_seconds", "bytes_read",
-                  "cache_hits", "cache_misses", "prefetch_bytes")
+                  "cache_hits", "cache_misses", "prefetch_bytes",
+                  "requests")
 
 
 class _Counters:
@@ -107,10 +111,12 @@ class _Counters:
         self.cache_hits = 0
         self.cache_misses = 0
         self.prefetch_bytes = 0
+        self.requests = 0
 
     def snapshot(self) -> tuple:
         return (self.read_seconds, self.decode_seconds, self.bytes_read,
-                self.cache_hits, self.cache_misses, self.prefetch_bytes)
+                self.cache_hits, self.cache_misses, self.prefetch_bytes,
+                self.requests)
 
 
 def zero_deltas() -> list:

@@ -35,14 +35,17 @@ from repro.api.store import DedupStore
 _KNOWN_KEYS = {"detector", "detector_args", "chunker", "chunker_args",
                "backend", "backend_args", "policy", "policy_args",
                "restore_cache_bytes", "restore_cache_shards",
-               "restore_reader_fds", "restore_readahead"}
+               "restore_reader_fds", "restore_readahead",
+               "restore_coalesce_gap"}
 
-# serving-engine knobs (DESIGN.md §10) -> backend factory kwargs; each is
-# forwarded only when set and only to factories that declare the kwarg
+# serving-engine knobs (DESIGN.md §10, §11.3) -> backend factory kwargs;
+# each is forwarded only when set and only to factories that declare the
+# kwarg
 _BACKEND_KNOBS = {"restore_cache_bytes": "cache_bytes",
                   "restore_cache_shards": "cache_shards",
                   "restore_reader_fds": "reader_fds",
-                  "restore_readahead": "readahead"}
+                  "restore_readahead": "readahead",
+                  "restore_coalesce_gap": "coalesce_gap"}
 
 
 @dataclasses.dataclass
@@ -64,6 +67,11 @@ class DedupConfig:
     restore_cache_shards: int | None = None     # cache lock stripes
     restore_reader_fds: int | None = None       # pread pool size
     restore_readahead: int | None = None        # read runs in flight (0 off)
+    # largest gap (bytes) two payload reads may straddle and still be
+    # fetched as one pread / ranged GET (§11.3). Backends default it to
+    # their medium — 4 KiB for the file log, 1 MiB for object stores —
+    # so set it only to override; 0 coalesces exactly-adjacent reads only.
+    restore_coalesce_gap: int | None = None
 
     @classmethod
     def from_dict(cls, d: dict[str, Any]) -> "DedupConfig":
@@ -80,7 +88,10 @@ class DedupConfig:
             value = getattr(cfg, name)
             if value is None:
                 continue
-            floor = 0 if name == "restore_readahead" else 1   # 0 = disabled
+            # 0 is meaningful for readahead (serial reads) and for the
+            # coalesce gap (merge exactly-adjacent reads only)
+            floor = (0 if name in ("restore_readahead",
+                                   "restore_coalesce_gap") else 1)
             if not isinstance(value, int) or value < floor:
                 raise ValueError(f"{name} must be an int >= {floor}, "
                                  f"got {value!r}")

@@ -44,7 +44,8 @@ from typing import Iterable, Protocol, Sequence, runtime_checkable
 from repro.api.concurrency import IoTelemetry
 from repro.api.registry import register_backend
 from repro.api.restore import (DEFAULT_CACHE_BYTES, DEFAULT_CACHE_SHARDS,
-                               ShardedDecodeCache, plan_chains)
+                               ShardedDecodeCache, coalesce_reads,
+                               plan_chains)
 from repro.core import delta
 
 _REC_HEADER = struct.Struct("<BqqQ")  # kind, cid, base, payload length
@@ -239,6 +240,387 @@ class ContainerBackend(Protocol):
     def close(self) -> None: ...
 
 
+class PlannedChainReader:
+    """Shared read-side engine for record-log backends (DESIGN.md §9–§10).
+
+    Durable backends — ``FileBackend`` here and ``ObjectStoreBackend``
+    in ``repro.api.objectstore`` — keep an in-memory index
+    ``cid -> (kind, base, offset, length)`` over an append-only payload
+    address space and serve reads through identical machinery: the §9
+    chain planner, a byte-budgeted sharded decode cache, span reads
+    coalesced with a backend-tunable gap, and §10.3 double-buffered
+    readahead. This base class holds all of it; subclasses provide the
+    storage primitives
+
+        _read_span(offset, length)   raw payload-space read (``pread``
+                                     on the file log; a ranged GET for
+                                     object stores, whose offsets are
+                                     virtual — see objectstore.py). A
+                                     short result means truncation.
+        _flush_if_dirty()            make buffered appends readable
+        _fetch_width()               span reads usefully in flight
+        _read_desc()                 human name for error messages
+
+    plus the attributes ``_index``, ``_cache``, ``_telemetry``,
+    ``_recipes``, ``_recipe_lens``, ``_max_recipe_cid``, ``_readahead``,
+    ``_merge_gap``, ``_max_run``, ``_executor`` and ``_ex_lock``. The
+    write surface (puts, recipes, compaction, durability) stays with
+    each backend — only byte *reading* is shared.
+    """
+
+    # --- lifetime I/O totals (telemetry properties, DESIGN.md §9.4) ----------
+
+    @property
+    def read_seconds(self) -> float:
+        return self._telemetry.total("read_seconds")
+
+    @property
+    def decode_seconds(self) -> float:
+        return self._telemetry.total("decode_seconds")
+
+    @property
+    def bytes_read(self) -> int:
+        return self._telemetry.total("bytes_read")
+
+    @property
+    def prefetch_bytes(self) -> int:
+        return self._telemetry.total("prefetch_bytes")
+
+    @property
+    def read_requests(self) -> int:
+        """Physical payload reads issued over the backend's lifetime
+        (preads / ranged GETs, one per coalesced span; §11.3)."""
+        return self._telemetry.total("requests")
+
+    def io_counters(self) -> tuple:
+        """This thread's I/O counter snapshot, in
+        ``repro.api.concurrency.COUNTER_FIELDS`` order. The store diffs
+        two snapshots around a restore for an exact per-call
+        RestoreReport even while other threads restore concurrently."""
+        return self._telemetry.local().snapshot()
+
+    @property
+    def cache_hits(self) -> int:
+        return self._cache.hits
+
+    @property
+    def cache_misses(self) -> int:
+        return self._cache.misses
+
+    @property
+    def cache_bytes(self) -> int:
+        return self._cache.bytes
+
+    @property
+    def cache_peak_bytes(self) -> int:
+        return self._cache.peak_bytes
+
+    # --- reading ------------------------------------------------------------
+
+    def _read_payload(self, offset: int, length: int) -> bytes:
+        self._flush_if_dirty()
+        tel = self._telemetry.local()
+        tel.requests += 1
+        data = self._read_span(offset, length)
+        # count what actually came back, not what was asked for — and a
+        # short read here is a truncated record (external truncation or
+        # torn tail past the scan), which must fail loudly instead of
+        # handing a short payload to delta.decode
+        tel.bytes_read += len(data)
+        if len(data) != length:
+            raise IOError(
+                f"truncated record: wanted {length} bytes at offset "
+                f"{offset} of {self._read_desc()}, got {len(data)}")
+        return data
+
+    def get(self, cid: int) -> bytes:
+        tel = self._telemetry.local()
+        data = self._cache.get(cid)
+        if data is not None:
+            tel.cache_hits += 1
+            return data
+        tel.cache_misses += 1
+        # walk the base chain down to a raw/cached ancestor, then apply
+        # patches back up (iterative: delta chains can outgrow recursion).
+        # Correctness never depends on cache retention: `data` is a local
+        # strong reference, so a budget-pressed cache may evict behind us.
+        # The walk seeds from the miss above — only *bases* are probed
+        # inside the loop, so each chain node costs exactly one counted
+        # cache lookup (re-probing `cid` would double-count the miss in
+        # the §9.4 telemetry).
+        chain: list[tuple[int, bytes]] = []
+        cur = cid
+        while True:
+            kind, base, offset, length = self._index[cur]  # KeyError
+            payload = self._read_payload(offset, length)   # before I/O
+            if kind == _KIND_RAW:
+                data = payload
+                self._cache.put(cur, data)
+                break
+            chain.append((cur, payload))
+            cur = base
+            data = self._cache.get(cur)
+            if data is not None:
+                tel.cache_hits += 1
+                break
+            tel.cache_misses += 1
+        for c, patch in reversed(chain):
+            data = delta.decode(patch, data)
+            self._cache.put(c, data)
+        return data
+
+    def _reader_executor(self) -> ThreadPoolExecutor:
+        ex = self._executor
+        if ex is None:
+            with self._ex_lock:
+                if self._executor is None:
+                    self._executor = ThreadPoolExecutor(
+                        max_workers=self._fetch_width(),
+                        thread_name_prefix="repro-readahead")
+                ex = self._executor
+        return ex
+
+    def get_many(self, cids: Sequence[int]) -> list[bytes]:
+        """Planned batch materialization (DESIGN.md §9, concurrent +
+        double-buffered per §10): every requested chunk's base chain is
+        decoded exactly once, payload reads are issued in ascending
+        address order with adjacent records coalesced into sequential
+        runs, and — when more than one run is scheduled — a background
+        fetcher keeps up to ``readahead`` runs in flight while the
+        decode loop chews the runs already fetched. Bases stay pinned in
+        the decode cache only while a dependent patch of this plan still
+        needs them. Safe to call from any number of threads: plans pin
+        atomically (``try_pin``), so a concurrent plan's eviction
+        pressure cannot invalidate this plan between planning and
+        decoding."""
+        if not cids:
+            return []
+        cache = self._cache
+        tel = self._telemetry.local()
+        targets = list(dict.fromkeys(int(c) for c in cids))
+        # batched cache probe: one lock round-trip per shard, not per
+        # chunk — this IS the warm restore (every target a hit)
+        out = cache.get_present(targets)
+        missing = [cid for cid in targets if cid not in out]
+        tel.cache_hits += len(out)
+        tel.cache_misses += len(missing)
+        if missing:
+            index = self._index
+            for cid in missing:     # unknown cids: KeyError before any I/O
+                index[cid]
+
+            def entry(cid: int) -> tuple[int, int, int]:
+                kind, base, offset, length = index[cid]
+                return (base if kind == _KIND_DELTA else -1, offset, length)
+
+            pinned: set[int] = set()
+            pinned_data: dict[int, bytes] = {}
+
+            def probe(cid: int) -> bool:
+                # the planner's is_cached callback, made concurrency-safe:
+                # pin-if-present is one atomic step, so another thread's
+                # eviction cannot undo the answer between planning and
+                # decoding (§10.2). At most one pin per cid per plan.
+                if cid in pinned_data:
+                    return True
+                data = cache.try_pin(cid)
+                if data is None:
+                    return False
+                pinned.add(cid)
+                pinned_data[cid] = data
+                return True
+
+            try:
+                plan = plan_chains(missing, entry, probe)
+                wanted = set(plan.targets)
+
+                # coalesce the offset-sorted reads into sequential runs
+                # (gap/cap are backend knobs — MB-scale for object
+                # stores, KB-scale for the local log; §9.1, §11.3)
+                runs = coalesce_reads(plan.reads, self._merge_gap,
+                                      self._max_run)
+
+                payloads: dict[int, bytes] = {}
+                remaining = dict(plan.dependents)
+                order = plan.decode_order
+                decode_pos = 0
+
+                def ingest_run(run: tuple, blob: bytes) -> None:
+                    start, end, extents = run
+                    tel.bytes_read += len(blob)
+                    if len(blob) != end - start:    # truncated record(s)
+                        raise IOError(
+                            f"truncated record run: wanted {end - start} "
+                            f"bytes at offset {start} of "
+                            f"{self._read_desc()}, got {len(blob)}")
+                    view = memoryview(blob)
+                    for off, ln, cid in extents:
+                        payloads[cid] = bytes(
+                            view[off - start:off - start + ln])
+
+                def decode_ready() -> None:
+                    # decode the available prefix of the topological
+                    # order; stops at the first chunk whose payload is
+                    # still in flight (a later run)
+                    nonlocal decode_pos
+                    t0 = time.perf_counter()
+                    while decode_pos < len(order):
+                        cid = order[decode_pos]
+                        payload = payloads.pop(cid, None)
+                        if payload is None:
+                            break
+                        decode_pos += 1
+                        kind, base, _, _ = index[cid]
+                        if kind == _KIND_RAW:
+                            data = payload
+                        else:
+                            # plan-local refs first, then an uncounted
+                            # peek: the base is pinned by this very plan,
+                            # and counting it as a cache hit would
+                            # inflate the telemetry on every cold chain
+                            base_data = pinned_data.get(base)
+                            if base_data is None:
+                                base_data = cache.peek(base)
+                            if base_data is None:  # pinned: a logic bug
+                                base_data = self.get(base)
+                            data = delta.decode(payload, base_data)
+                            left = remaining.get(base)
+                            if left is not None:
+                                if left > 1:
+                                    remaining[base] = left - 1
+                                else:
+                                    del remaining[base]
+                                    cache.unpin(base)
+                                    pinned.discard(base)
+                        pin = cid in remaining
+                        cache.put(cid, data, pin=pin)
+                        if pin:
+                            pinned.add(cid)
+                        if cid in wanted:
+                            out[cid] = data
+                    tel.decode_seconds += time.perf_counter() - t0
+
+                self._flush_if_dirty()
+                read_span = self._read_span
+
+                def read_run(run: tuple) -> tuple[bytes, float]:
+                    t0 = time.perf_counter()
+                    blob = read_span(run[0], run[1] - run[0])
+                    return blob, time.perf_counter() - t0
+
+                if self._readahead > 0 and len(runs) > 1:
+                    # double-buffered fetch (§10.3): the read of runs
+                    # k+1..k+readahead overlaps the decode of run k
+                    ex = self._reader_executor()
+                    pending: deque = deque()
+                    ri = 0
+                    try:
+                        while ri < len(runs) or pending:
+                            while (ri < len(runs)
+                                   and len(pending) <= self._readahead):
+                                pending.append((runs[ri],
+                                                ex.submit(read_run,
+                                                          runs[ri])))
+                                ri += 1
+                            run, fut = pending.popleft()
+                            overlapped = fut.done() and run is not runs[0]
+                            blob, secs = fut.result()
+                            tel.read_seconds += secs
+                            tel.requests += 1
+                            if overlapped:  # fully hidden behind decode
+                                tel.prefetch_bytes += len(blob)
+                            ingest_run(run, blob)
+                            decode_ready()
+                    finally:
+                        # an aborted plan (truncated record, corrupt
+                        # patch) must not leave span reads in flight: a
+                        # later compaction swaps the read substrate
+                        # (_pool.reopen() / index flip) under the
+                        # documented no-reads-in-flight precondition.
+                        # Cancel what hasn't started and drain what has;
+                        # no-op on the success path.
+                        while pending:
+                            _, fut = pending.popleft()
+                            if not fut.cancel():
+                                try:
+                                    fut.result()
+                                except Exception:
+                                    pass
+                else:                       # serial: one run, or disabled
+                    for run in runs:
+                        blob, secs = read_run(run)
+                        tel.read_seconds += secs
+                        tel.requests += 1
+                        ingest_run(run, blob)
+                    decode_ready()
+                if decode_pos != len(order):    # every payload arrived,
+                    decode_ready()              # so this always finishes
+                if decode_pos != len(order):
+                    raise RuntimeError(
+                        f"restore plan incomplete: decoded {decode_pos} "
+                        f"of {len(order)} chunks")
+
+                # a target can become cached (by a concurrent restore)
+                # between the fast-path miss and the planner probe; the
+                # probe pinned it, so serve it from the plan's own refs
+                for tgt in plan.targets:
+                    if tgt not in out:
+                        data = pinned_data.get(tgt)
+                        out[tgt] = data if data is not None else self.get(tgt)
+            finally:
+                # a failed plan (corrupt patch, truncated read) must not
+                # leak pins — leaked entries would be unevictable forever
+                for cid in pinned:
+                    cache.unpin(cid)
+                pinned.clear()
+        return [out[int(c)] for c in cids]
+
+    # --- index / recipe read surface ----------------------------------------
+
+    def contains(self, cid: int) -> bool:
+        return cid in self._index
+
+    def max_chunk_id(self) -> int:
+        # covers cids named by recipe lines too (retired included): a
+        # torn-tail recovery drops chunks from the index but their recipe
+        # line survives in the journal, and reissuing those ids would
+        # alias new content under an old recipe's cids (§10.6)
+        return max(max(self._index, default=-1), self._max_recipe_cid)
+
+    def chunk_ids(self) -> list[int]:
+        return list(self._index)
+
+    def base_of(self, cid: int) -> int:
+        kind, base, _, _ = self._index[cid]
+        return base if kind == _KIND_DELTA else -1
+
+    def payload_size(self, cid: int) -> int:
+        return self._index[cid][3]
+
+    def record(self, cid: int) -> tuple[int, int, bytes]:
+        kind, base, offset, length = self._index[cid]
+        return (kind, base if kind == _KIND_DELTA else -1,
+                self._read_payload(offset, length))
+
+    def recipe(self, handle: int) -> list[int]:
+        if not 0 <= handle < len(self._recipes):    # no negative aliasing
+            raise IndexError(f"unknown stream handle {handle}")
+        recipe = self._recipes[handle]
+        if recipe is None:
+            raise KeyError(f"stream {handle} retired")
+        return recipe
+
+    def recipe_lengths(self, handle: int) -> list[int] | None:
+        self.recipe(handle)                 # raises on unknown/retired
+        return self._recipe_lens.get(handle)
+
+    def num_streams(self) -> int:
+        return len(self._recipes)
+
+    def live_handles(self) -> list[int]:
+        return [h for h, r in enumerate(self._recipes) if r is not None]
+
+
 @register_backend("memory")
 class InMemoryBackend:
     """Everything in dicts; materialized bytes kept for every chunk."""
@@ -361,7 +743,7 @@ class InMemoryBackend:
 
 
 @register_backend("file")
-class FileBackend:
+class FileBackend(PlannedChainReader):
     """Append-only on-disk containers.
 
     Layout under `path`:
@@ -402,7 +784,8 @@ class FileBackend:
                  cache_bytes: int | None = None,
                  cache_shards: int | None = None,
                  reader_fds: int | None = None,
-                 readahead: int | None = None) -> None:
+                 readahead: int | None = None,
+                 coalesce_gap: int | None = None) -> None:
         """``fsync_on_flush=True`` makes every ``flush()`` (one per
         committed stream — group commit, DESIGN.md §8) durable with a
         single fsync per file; the default keeps the historical
@@ -412,7 +795,11 @@ class FileBackend:
         ``cache_shards`` how many ways it stripes (§10.2).
         ``reader_fds`` sizes the pread pool (= payload reads in flight),
         ``readahead`` how many coalesced read runs the fetcher keeps in
-        flight ahead of the decode loop (0 = strictly serial reads)."""
+        flight ahead of the decode loop (0 = strictly serial reads).
+        ``coalesce_gap`` is the largest hole (bytes of unwanted data)
+        two records may straddle and still be fetched in one pread
+        (default 4 KiB — one page of waste; object stores use MB-scale
+        gaps, §11.3)."""
         self.path = Path(path)
         self._fsync_on_flush = fsync_on_flush
         self.path.mkdir(parents=True, exist_ok=True)
@@ -440,6 +827,9 @@ class FileBackend:
         self._telemetry = IoTelemetry()
         self._readahead = (DEFAULT_READAHEAD if readahead is None
                            else max(0, int(readahead)))
+        self._merge_gap = (_READ_MERGE_GAP if coalesce_gap is None
+                           else max(0, int(coalesce_gap)))
+        self._max_run = _READ_MAX_RUN
         self.epoch = 0
         self._scan()
         self._log = open(self._log_path, "ab")
@@ -453,48 +843,19 @@ class FileBackend:
                                  else DEFAULT_READER_FDS)
         self._executor: ThreadPoolExecutor | None = None
         self._io_lock = threading.Lock()    # append handle + dirty flag
+        self._ex_lock = self._io_lock       # guards lazy executor creation
         self._log_dirty = False
 
-    # --- lifetime I/O totals (telemetry properties, DESIGN.md §9.4) ----------
+    # --- PlannedChainReader storage primitives (DESIGN.md §9/§10) ------------
 
-    @property
-    def read_seconds(self) -> float:
-        return self._telemetry.total("read_seconds")
+    def _fetch_width(self) -> int:
+        return self._pool.size
 
-    @property
-    def decode_seconds(self) -> float:
-        return self._telemetry.total("decode_seconds")
+    def _read_span(self, offset: int, length: int) -> bytes:
+        return self._pool.pread(offset, length)
 
-    @property
-    def bytes_read(self) -> int:
-        return self._telemetry.total("bytes_read")
-
-    @property
-    def prefetch_bytes(self) -> int:
-        return self._telemetry.total("prefetch_bytes")
-
-    def io_counters(self) -> tuple:
-        """This thread's I/O counter snapshot, in
-        ``repro.api.concurrency.COUNTER_FIELDS`` order. The store diffs
-        two snapshots around a restore for an exact per-call
-        RestoreReport even while other threads restore concurrently."""
-        return self._telemetry.local().snapshot()
-
-    @property
-    def cache_hits(self) -> int:
-        return self._cache.hits
-
-    @property
-    def cache_misses(self) -> int:
-        return self._cache.misses
-
-    @property
-    def cache_bytes(self) -> int:
-        return self._cache.bytes
-
-    @property
-    def cache_peak_bytes(self) -> int:
-        return self._cache.peak_bytes
+    def _read_desc(self) -> str:
+        return str(self._log_path)
 
     def _scan(self) -> None:
         # A kill -9 mid-ingest can tear the tail of either file; the torn
@@ -660,294 +1021,6 @@ class FileBackend:
                     self._log.flush()
                     self._log_dirty = False
 
-    def _read_payload(self, offset: int, length: int) -> bytes:
-        self._flush_if_dirty()
-        data = self._pool.pread(offset, length)
-        # count what actually came back, not what was asked for — and a
-        # short read here is a truncated record (external truncation or
-        # torn tail past the scan), which must fail loudly instead of
-        # handing a short payload to delta.decode
-        self._telemetry.local().bytes_read += len(data)
-        if len(data) != length:
-            raise IOError(
-                f"truncated record: wanted {length} bytes at offset "
-                f"{offset} of {self._log_path}, got {len(data)}")
-        return data
-
-    def get(self, cid: int) -> bytes:
-        tel = self._telemetry.local()
-        data = self._cache.get(cid)
-        if data is not None:
-            tel.cache_hits += 1
-            return data
-        tel.cache_misses += 1
-        # walk the base chain down to a raw/cached ancestor, then apply
-        # patches back up (iterative: delta chains can outgrow recursion).
-        # Correctness never depends on cache retention: `data` is a local
-        # strong reference, so a budget-pressed cache may evict behind us.
-        # The walk seeds from the miss above — only *bases* are probed
-        # inside the loop, so each chain node costs exactly one counted
-        # cache lookup (re-probing `cid` would double-count the miss in
-        # the §9.4 telemetry).
-        chain: list[tuple[int, bytes]] = []
-        cur = cid
-        while True:
-            kind, base, offset, length = self._index[cur]  # KeyError
-            payload = self._read_payload(offset, length)   # before I/O
-            if kind == _KIND_RAW:
-                data = payload
-                self._cache.put(cur, data)
-                break
-            chain.append((cur, payload))
-            cur = base
-            data = self._cache.get(cur)
-            if data is not None:
-                tel.cache_hits += 1
-                break
-            tel.cache_misses += 1
-        for c, patch in reversed(chain):
-            data = delta.decode(patch, data)
-            self._cache.put(c, data)
-        return data
-
-    def _reader_executor(self) -> ThreadPoolExecutor:
-        ex = self._executor
-        if ex is None:
-            with self._io_lock:
-                if self._executor is None:
-                    self._executor = ThreadPoolExecutor(
-                        max_workers=self._pool.size,
-                        thread_name_prefix="repro-readahead")
-                ex = self._executor
-        return ex
-
-    def get_many(self, cids: Sequence[int]) -> list[bytes]:
-        """Planned batch materialization (DESIGN.md §9, concurrent +
-        double-buffered per §10): every requested chunk's base chain is
-        decoded exactly once, payload reads are issued in ascending log
-        order with adjacent records coalesced into sequential runs, and
-        — when more than one run is scheduled — a background fetcher on
-        the pread reader pool keeps up to ``readahead`` runs in flight
-        while the decode loop chews the runs already fetched. Bases stay
-        pinned in the decode cache only while a dependent patch of this
-        plan still needs them. Safe to call from any number of threads:
-        plans pin atomically (``try_pin``), so a concurrent plan's
-        eviction pressure cannot invalidate this plan between planning
-        and decoding."""
-        if not cids:
-            return []
-        cache = self._cache
-        tel = self._telemetry.local()
-        targets = list(dict.fromkeys(int(c) for c in cids))
-        # batched cache probe: one lock round-trip per shard, not per
-        # chunk — this IS the warm restore (every target a hit)
-        out = cache.get_present(targets)
-        missing = [cid for cid in targets if cid not in out]
-        tel.cache_hits += len(out)
-        tel.cache_misses += len(missing)
-        if missing:
-            index = self._index
-            for cid in missing:     # unknown cids: KeyError before any I/O
-                index[cid]
-
-            def entry(cid: int) -> tuple[int, int, int]:
-                kind, base, offset, length = index[cid]
-                return (base if kind == _KIND_DELTA else -1, offset, length)
-
-            pinned: set[int] = set()
-            pinned_data: dict[int, bytes] = {}
-
-            def probe(cid: int) -> bool:
-                # the planner's is_cached callback, made concurrency-safe:
-                # pin-if-present is one atomic step, so another thread's
-                # eviction cannot undo the answer between planning and
-                # decoding (§10.2). At most one pin per cid per plan.
-                if cid in pinned_data:
-                    return True
-                data = cache.try_pin(cid)
-                if data is None:
-                    return False
-                pinned.add(cid)
-                pinned_data[cid] = data
-                return True
-
-            try:
-                plan = plan_chains(missing, entry, probe)
-                wanted = set(plan.targets)
-
-                # coalesce the offset-sorted reads into sequential runs
-                reads = plan.reads
-                runs: list[tuple[int, int, list]] = []
-                i, n_reads = 0, len(reads)
-                while i < n_reads:
-                    start = reads[i][0]
-                    end = start + reads[i][1]
-                    j = i + 1
-                    while (j < n_reads
-                           and reads[j][0] - end <= _READ_MERGE_GAP
-                           and end - start < _READ_MAX_RUN):
-                        end = max(end, reads[j][0] + reads[j][1])
-                        j += 1
-                    runs.append((start, end, reads[i:j]))
-                    i = j
-
-                payloads: dict[int, bytes] = {}
-                remaining = dict(plan.dependents)
-                order = plan.decode_order
-                decode_pos = 0
-
-                def ingest_run(run: tuple, blob: bytes) -> None:
-                    start, end, extents = run
-                    tel.bytes_read += len(blob)
-                    if len(blob) != end - start:    # truncated record(s)
-                        raise IOError(
-                            f"truncated record run: wanted {end - start} "
-                            f"bytes at offset {start} of "
-                            f"{self._log_path}, got {len(blob)}")
-                    view = memoryview(blob)
-                    for off, ln, cid in extents:
-                        payloads[cid] = bytes(
-                            view[off - start:off - start + ln])
-
-                def decode_ready() -> None:
-                    # decode the available prefix of the topological
-                    # order; stops at the first chunk whose payload is
-                    # still in flight (a later run)
-                    nonlocal decode_pos
-                    t0 = time.perf_counter()
-                    while decode_pos < len(order):
-                        cid = order[decode_pos]
-                        payload = payloads.pop(cid, None)
-                        if payload is None:
-                            break
-                        decode_pos += 1
-                        kind, base, _, _ = index[cid]
-                        if kind == _KIND_RAW:
-                            data = payload
-                        else:
-                            # plan-local refs first, then an uncounted
-                            # peek: the base is pinned by this very plan,
-                            # and counting it as a cache hit would
-                            # inflate the telemetry on every cold chain
-                            base_data = pinned_data.get(base)
-                            if base_data is None:
-                                base_data = cache.peek(base)
-                            if base_data is None:  # pinned: a logic bug
-                                base_data = self.get(base)
-                            data = delta.decode(payload, base_data)
-                            left = remaining.get(base)
-                            if left is not None:
-                                if left > 1:
-                                    remaining[base] = left - 1
-                                else:
-                                    del remaining[base]
-                                    cache.unpin(base)
-                                    pinned.discard(base)
-                        pin = cid in remaining
-                        cache.put(cid, data, pin=pin)
-                        if pin:
-                            pinned.add(cid)
-                        if cid in wanted:
-                            out[cid] = data
-                    tel.decode_seconds += time.perf_counter() - t0
-
-                self._flush_if_dirty()
-                pool = self._pool
-
-                def read_run(run: tuple) -> tuple[bytes, float]:
-                    t0 = time.perf_counter()
-                    blob = pool.pread(run[0], run[1] - run[0])
-                    return blob, time.perf_counter() - t0
-
-                if self._readahead > 0 and len(runs) > 1:
-                    # double-buffered fetch (§10.3): the pread of runs
-                    # k+1..k+readahead overlaps the decode of run k
-                    ex = self._reader_executor()
-                    pending: deque = deque()
-                    ri = 0
-                    try:
-                        while ri < len(runs) or pending:
-                            while (ri < len(runs)
-                                   and len(pending) <= self._readahead):
-                                pending.append((runs[ri],
-                                                ex.submit(read_run,
-                                                          runs[ri])))
-                                ri += 1
-                            run, fut = pending.popleft()
-                            overlapped = fut.done() and run is not runs[0]
-                            blob, secs = fut.result()
-                            tel.read_seconds += secs
-                            if overlapped:  # fully hidden behind decode
-                                tel.prefetch_bytes += len(blob)
-                            ingest_run(run, blob)
-                            decode_ready()
-                    finally:
-                        # an aborted plan (truncated record, corrupt
-                        # patch) must not leave preads in flight: a later
-                        # compaction's _pool.reopen() closes every fd
-                        # under the documented no-reads-in-flight
-                        # precondition. Cancel what hasn't started and
-                        # drain what has; no-op on the success path.
-                        while pending:
-                            _, fut = pending.popleft()
-                            if not fut.cancel():
-                                try:
-                                    fut.result()
-                                except Exception:
-                                    pass
-                else:                       # serial: one run, or disabled
-                    for run in runs:
-                        blob, secs = read_run(run)
-                        tel.read_seconds += secs
-                        ingest_run(run, blob)
-                    decode_ready()
-                if decode_pos != len(order):    # every payload arrived,
-                    decode_ready()              # so this always finishes
-                if decode_pos != len(order):
-                    raise RuntimeError(
-                        f"restore plan incomplete: decoded {decode_pos} "
-                        f"of {len(order)} chunks")
-
-                # a target can become cached (by a concurrent restore)
-                # between the fast-path miss and the planner probe; the
-                # probe pinned it, so serve it from the plan's own refs
-                for tgt in plan.targets:
-                    if tgt not in out:
-                        data = pinned_data.get(tgt)
-                        out[tgt] = data if data is not None else self.get(tgt)
-            finally:
-                # a failed plan (corrupt patch, truncated read) must not
-                # leak pins — leaked entries would be unevictable forever
-                for cid in pinned:
-                    cache.unpin(cid)
-                pinned.clear()
-        return [out[int(c)] for c in cids]
-
-    def contains(self, cid: int) -> bool:
-        return cid in self._index
-
-    def max_chunk_id(self) -> int:
-        # covers cids named by recipe lines too (retired included): a
-        # torn-tail recovery drops chunks from the index but their recipe
-        # line survives in the journal, and reissuing those ids would
-        # alias new content under an old recipe's cids (§10.6)
-        return max(max(self._index, default=-1), self._max_recipe_cid)
-
-    def chunk_ids(self) -> list[int]:
-        return list(self._index)
-
-    def base_of(self, cid: int) -> int:
-        kind, base, _, _ = self._index[cid]
-        return base if kind == _KIND_DELTA else -1
-
-    def payload_size(self, cid: int) -> int:
-        return self._index[cid][3]
-
-    def record(self, cid: int) -> tuple[int, int, bytes]:
-        kind, base, offset, length = self._index[cid]
-        return (kind, base if kind == _KIND_DELTA else -1,
-                self._read_payload(offset, length))
-
     def add_recipe(self, chunk_ids: Sequence[int],
                    lengths: Sequence[int] | None = None) -> int:
         recipe = [int(c) for c in chunk_ids]
@@ -964,18 +1037,6 @@ class FileBackend:
                 json.dumps({"recipe": recipe, "lens": lens}) + "\n")
         return handle
 
-    def recipe(self, handle: int) -> list[int]:
-        if not 0 <= handle < len(self._recipes):    # no negative aliasing
-            raise IndexError(f"unknown stream handle {handle}")
-        recipe = self._recipes[handle]
-        if recipe is None:
-            raise KeyError(f"stream {handle} retired")
-        return recipe
-
-    def recipe_lengths(self, handle: int) -> list[int] | None:
-        self.recipe(handle)                 # raises on unknown/retired
-        return self._recipe_lens.get(handle)
-
     def retire_recipe(self, handle: int) -> None:
         self.recipe(handle)                 # raises on unknown/retired
         self._recipes[handle] = None
@@ -986,12 +1047,6 @@ class FileBackend:
         # flush-only; resurrecting a never-reported commit is harmless)
         self._recipes_f.flush()
         os.fsync(self._recipes_f.fileno())
-
-    def num_streams(self) -> int:
-        return len(self._recipes)
-
-    def live_handles(self) -> list[int]:
-        return [h for h, r in enumerate(self._recipes) if r is not None]
 
     def storage_bytes(self) -> int:
         self.flush()

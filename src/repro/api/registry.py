@@ -10,7 +10,7 @@ evolve independently):
                 factories must return an object with
                 ``chunk(stream) -> (chunks, stream_hashes)`` — the store
                 dispatches through ``repro.api.store.chunk_with``
-    backends    "memory", "file" container backends
+    backends    "memory", "file", "objectstore", "s3" container backends
     policies    "eager", "threshold", "never" reclamation policies
                 (DESIGN.md §7.4) — when a delete should trigger compaction
 
@@ -45,7 +45,7 @@ def _ensure_builtins() -> None:
     global _builtins_loaded
     if _builtins_loaded:
         return
-    from repro.api import containers, lifecycle  # noqa: F401  (backends, policies)
+    from repro.api import containers, lifecycle, objectstore  # noqa: F401
     from repro.core import chunking, pipeline, similarity  # noqa: F401
     _CHUNKERS.setdefault("fastcdc", chunking.ChunkerConfig)
     # only after every import succeeded — a failure above must surface

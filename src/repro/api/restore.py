@@ -374,6 +374,35 @@ def plan_chains(targets: Sequence[int],
                        dependents=dependents, cached_bases=cached_bases)
 
 
+def coalesce_reads(reads: Sequence[tuple[int, int, int]], gap: int,
+                   max_run: int) -> list[tuple[int, int, list]]:
+    """Merge a plan's offset-sorted ``(offset, length, cid)`` reads into
+    sequential runs ``(start, end, extents)`` (DESIGN.md §9.1).
+
+    Adjacent extents whose gap is at most ``gap`` bytes are fetched as
+    one read; runs are capped near ``max_run`` so a single slab never
+    dwarfs the decode-cache budget. The gap is a *backend* knob
+    (``coalesce_gap`` / ``DedupConfig.restore_coalesce_gap``): a local
+    file wants KB-scale gaps (skipping dead records is nearly free), an
+    object store wants MB-scale gaps so one ranged GET amortizes its
+    request latency over many extents (§11.3). ``reads`` must already be
+    sorted by offset — ``plan_chains`` emits them that way."""
+    runs: list[tuple[int, int, list]] = []
+    i, n_reads = 0, len(reads)
+    while i < n_reads:
+        start = reads[i][0]
+        end = start + reads[i][1]
+        j = i + 1
+        while (j < n_reads
+               and reads[j][0] - end <= gap
+               and end - start < max_run):
+            end = max(end, reads[j][0] + reads[j][1])
+            j += 1
+        runs.append((start, end, list(reads[i:j])))
+        i = j
+    return runs
+
+
 class RecipeLayout:
     """Prefix sums over a recipe's materialized chunk lengths.
 

@@ -452,6 +452,34 @@ class DedupStore:
         when the backend persisted recipe lengths)."""
         return self._layout(handle, self.backend.recipe(handle)).total_bytes
 
+    # --- digest-table persistence seam (DESIGN.md §11.5) ---------------------
+
+    def digest_seeds(self) -> dict[bytes, int]:
+        """Snapshot of the exact-dedup digest table (content digest ->
+        stored chunk id). The table is in-memory only: a store reopened
+        on an existing backend starts with it empty, so re-ingesting
+        bytes it already holds stores them again physically. Callers
+        that reopen stores across processes (the object-store CLI)
+        persist this snapshot and hand it back via ``seed_digests``."""
+        with self._stats_lock:
+            return dict(self._by_digest)
+
+    def seed_digests(self, mapping: dict[bytes, int]) -> int:
+        """Preload the exact-dedup digest table from a ``digest_seeds``
+        snapshot taken before the store was closed. Entries whose chunk
+        id is no longer stored (deleted + compacted away meanwhile) are
+        skipped, so a stale snapshot can never alias fresh content onto
+        missing records. Returns how many entries were admitted."""
+        admitted = 0
+        with self._commit_lock, self._lifecycle_lock.read():
+            self._check_open()
+            for dig, cid in mapping.items():
+                cid = int(cid)
+                if self.backend.contains(cid):
+                    self._by_digest[bytes(dig)] = cid
+                    admitted += 1
+        return admitted
+
     def _fetch_unique(self, cids: Sequence[int]) -> dict[int, bytes]:
         """Materialize each distinct chunk id once: planned ``get_many``
         when the backend implements it, per-chunk ``get`` otherwise."""
@@ -545,7 +573,8 @@ class DedupStore:
                 getattr(b, "bytes_read", 0),
                 getattr(b, "cache_hits", 0),
                 getattr(b, "cache_misses", 0),
-                getattr(b, "prefetch_bytes", 0))
+                getattr(b, "prefetch_bytes", 0),
+                getattr(b, "read_requests", 0))
 
     def _note_restore(self, handle: int, bytes_out: int, chunks: int,
                       seconds: float, d: Sequence) -> None:
@@ -554,7 +583,7 @@ class DedupStore:
             seconds=seconds,
             read_seconds=d[0], decode_seconds=d[1], bytes_read=int(d[2]),
             cache_hits=int(d[3]), cache_misses=int(d[4]),
-            prefetch_bytes=int(d[5]))
+            prefetch_bytes=int(d[5]), requests=int(d[6]))
         with self._stats_lock:
             self.last_restore = report
             self.stats.absorb_restore(report)

@@ -139,6 +139,9 @@ class RestoreReport:
     # container bytes whose read was fully hidden behind decode work by
     # the double-buffered fetcher (§10.3) — the readahead payoff gauge
     prefetch_bytes: int = 0
+    # physical payload reads issued (preads / ranged GETs): the cost
+    # metric for latency-bound remote backends (DESIGN.md §11.3)
+    requests: int = 0
 
     @property
     def read_amplification(self) -> float:
@@ -189,6 +192,7 @@ class StoreStats:
     restore_cache_hits: int = 0
     restore_cache_misses: int = 0
     restore_prefetch_bytes: int = 0
+    restore_requests: int = 0
 
     @property
     def dcr(self) -> float:
@@ -219,3 +223,4 @@ class StoreStats:
         self.restore_cache_hits += report.cache_hits
         self.restore_cache_misses += report.cache_misses
         self.restore_prefetch_bytes += report.prefetch_bytes
+        self.restore_requests += report.requests

@@ -1,0 +1,477 @@
+"""Object-store backend subsystem (DESIGN.md §11): the LocalObjectStore
+fake, ObjectStoreBackend parity with FileBackend, range-coalescing
+request counts, retry-under-fault byte identity, journal/container
+recovery, compaction, the coalesce-gap knob, and the cp/ls/stat/verify
+CLI round-trip."""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import objectstore as osmod
+from repro.api.config import DedupConfig, build_store
+from repro.api.containers import FileBackend
+from repro.api.objectstore import (FaultSchedule, LocalObjectStore,
+                                   ObjectStoreBackend, TransientError)
+from repro.core import delta
+
+
+# --- fixtures ----------------------------------------------------------------
+
+def _blobs(n, size=3000, seed=0):
+    rng = np.random.default_rng(seed)
+    return {i: bytes(rng.integers(0, 256, size, np.uint8)) for i in range(n)}
+
+
+def _populate(backend, blobs, raw_n):
+    """First ``raw_n`` chunks raw, the rest delta-chained onto them;
+    two recipes (one per half) with lengths. Returns (h0, h1)."""
+    n = len(blobs)
+    backend.put_many([(i, -1, blobs[i], None) for i in range(raw_n)])
+    backend.put_many([(i, i - raw_n,
+                       delta.encode(blobs[i], blobs[i - raw_n]), blobs[i])
+                      for i in range(raw_n, n)])
+    h0 = backend.add_recipe(list(range(raw_n)),
+                            [len(blobs[i]) for i in range(raw_n)])
+    h1 = backend.add_recipe(list(range(raw_n, n)),
+                            [len(blobs[i]) for i in range(raw_n, n)])
+    backend.flush()
+    return h0, h1
+
+
+def _cold(backend):
+    """Drop every cached materialization so reads hit the object tree."""
+    backend._cache.retain(lambda cid: False)
+
+
+# --- LocalObjectStore (the fake itself) --------------------------------------
+
+def test_local_object_store_api(tmp_path):
+    cl = LocalObjectStore(tmp_path / "o")
+    cl.put("a/b", b"hello world")
+    assert cl.get("a/b") == b"hello world"
+    assert cl.get_range("a/b", 6, 5) == b"world"
+    assert cl.get_range("a/b", 6, 100) == b"world"     # short at end
+    assert cl.head("a/b") == 11
+    assert cl.head("missing") is None
+    cl.put("a/c", b"x")
+    assert cl.list("a/") == [("a/b", 11), ("a/c", 1)]
+    cl.delete_object("a/b")
+    cl.delete_object("a/b")                             # idempotent
+    with pytest.raises(KeyError):
+        cl.get("a/b")
+    assert cl.requests == 11 and cl.op_counts["get"] == 4
+    assert cl.bytes_put == 12 and cl.bytes_got == 11 + 5 + 5
+
+
+def test_local_object_store_faults_and_counters(tmp_path):
+    sched = FaultSchedule({"get": [2]}, status=429)
+    cl = LocalObjectStore(tmp_path / "o", fault_hook=sched)
+    cl.put("k", b"data")
+    assert cl.get("k") == b"data"
+    with pytest.raises(TransientError) as ei:
+        cl.get("k")
+    assert ei.value.status == 429
+    assert cl.get("k") == b"data"       # schedule exhausted, healthy again
+    assert cl.op_counts["get"] == 3     # the failed attempt still counted
+
+
+# --- backend parity with FileBackend -----------------------------------------
+
+@pytest.mark.parametrize("latency", [0.0, 0.002])
+def test_parity_with_file_backend(tmp_path, latency):
+    """Same records in, byte-identical materializations out — cold via
+    get_many, cold via per-chunk get, and again after reopen."""
+    blobs = _blobs(30)
+    fb = FileBackend(tmp_path / "file")
+    ob = ObjectStoreBackend(tmp_path / "obj", latency=latency,
+                            max_object_bytes=1 << 14)
+    for b in (fb, ob):
+        _populate(b, blobs, 15)
+    order = list(range(len(blobs)))
+    _cold(fb), _cold(ob)
+    assert ob.get_many(order) == fb.get_many(order)
+    _cold(ob)
+    assert [ob.get(i) for i in order] == [blobs[i] for i in order]
+    assert ob.recipe(0) == fb.recipe(0)
+    assert ob.recipe_lengths(1) == fb.recipe_lengths(1)
+    assert ob.max_chunk_id() == fb.max_chunk_id()
+    fb.close(), ob.close()
+
+    re = ObjectStoreBackend(tmp_path / "obj", latency=latency,
+                            max_object_bytes=1 << 14)
+    assert re.get_many(order) == [blobs[i] for i in order]
+    assert re.max_chunk_id() == 29 and re.live_handles() == [0, 1]
+    re.close()
+
+
+def test_get_many_equals_get(tmp_path):
+    blobs = _blobs(24, seed=3)
+    b = ObjectStoreBackend(tmp_path / "obj", max_object_bytes=1 << 13)
+    _populate(b, blobs, 12)
+    _cold(b)
+    batched = b.get_many(list(range(24)))
+    _cold(b)
+    singles = [b.get(i) for i in range(24)]
+    assert batched == singles == [blobs[i] for i in range(24)]
+    b.close()
+
+
+def test_record_and_payload_size(tmp_path):
+    blobs = _blobs(4)
+    b = ObjectStoreBackend(tmp_path / "obj")
+    _populate(b, blobs, 2)
+    kind, base, payload = b.record(3)
+    assert (kind, base) == (1, 1) and payload != blobs[3]   # the patch
+    assert b.payload_size(0) == len(blobs[0]) and b.base_of(3) == 1
+    assert b.record_overhead == 0
+    b.close()
+
+
+# --- range coalescing: the request-count story (§11.3) -----------------------
+
+def test_coalescing_cuts_request_count(tmp_path):
+    """A cold sequential restore must cost a handful of ranged GETs, not
+    one per chunk — the 1 MiB default gap folds a whole container object
+    into O(size/max_run) requests (≥5x under the bench's gate; here the
+    layout is exactly sequential so it collapses to the object count)."""
+    blobs = _blobs(64, size=2000, seed=5)
+    b = ObjectStoreBackend(tmp_path / "obj", max_object_bytes=1 << 15)
+    _populate(b, blobs, 32)
+    _cold(b)
+    before = b.client.op_counts.get("get", 0)
+    assert b.get_many(list(range(64))) == [blobs[i] for i in range(64)]
+    coalesced = b.client.op_counts["get"] - before
+    assert coalesced * 5 <= 64, f"{coalesced} GETs for 64 chunks"
+    assert b.read_requests == coalesced
+    b.close()
+
+    # gap 0 merges only exactly-adjacent records; interleaving the two
+    # recipes' payloads in the log leaves holes, so requests multiply
+    b0 = ObjectStoreBackend(tmp_path / "obj", coalesce_gap=0,
+                            max_object_bytes=1 << 15)
+    _cold(b0)
+    before = b0.client.op_counts.get("get", 0)
+    every_other = list(range(0, 64, 2))
+    assert b0.get_many(every_other) == [blobs[i] for i in every_other]
+    assert b0.client.op_counts["get"] - before > coalesced
+    b0.close()
+
+
+def test_coalesce_gap_knob_forwarding(tmp_path):
+    cfg = DedupConfig.from_dict({
+        "detector": "dedup-only", "backend": "objectstore",
+        "backend_args": {"path": str(tmp_path / "o")},
+        "restore_coalesce_gap": 123})
+    store = build_store(cfg)
+    assert store.backend._merge_gap == 123
+    store.close()
+    cfg = DedupConfig.from_dict({
+        "detector": "dedup-only", "backend": "file",
+        "backend_args": {"path": str(tmp_path / "f")},
+        "restore_coalesce_gap": 0})
+    store = build_store(cfg)
+    assert store.backend._merge_gap == 0
+    store.close()
+    with pytest.raises(ValueError):
+        DedupConfig.from_dict({"restore_coalesce_gap": -1})
+    with pytest.raises(ValueError):
+        DedupConfig.from_dict({"restore_coalesce_gap": "big"})
+
+
+# --- faults, retries, and byte identity --------------------------------------
+
+def test_retries_make_restores_byte_identical(tmp_path):
+    """A transient-error schedule under the retry budget is invisible:
+    restores stay byte-identical and the backend reports the absorbed
+    faults. Exercised with latency too, so sleeps and retries overlap."""
+    blobs = _blobs(30, seed=7)
+    plain = ObjectStoreBackend(tmp_path / "a", max_object_bytes=1 << 14)
+    _populate(plain, blobs, 15)
+    plain.close()
+
+    faulty = ObjectStoreBackend(
+        tmp_path / "a", latency=0.001, retry_backoff=0.001,
+        max_object_bytes=1 << 14,
+        fault_hook=FaultSchedule({"get": [2, 3, 6]}))
+    _cold(faulty)
+    assert faulty.get_many(list(range(30))) == [blobs[i] for i in range(30)]
+    assert faulty.retries > 0
+    faulty.close()
+
+
+def test_retry_budget_exhaustion_raises(tmp_path):
+    blobs = _blobs(4)
+    b = ObjectStoreBackend(tmp_path / "o")
+    _populate(b, blobs, 2)
+    b.close()
+    re = ObjectStoreBackend(tmp_path / "o", max_retries=0,
+                            retry_backoff=0.001)
+    _cold(re)
+    # scan is done; now fail every further GET with no retry budget
+    re.client.fault_hook = FaultSchedule({"get": list(range(1, 50))})
+    with pytest.raises(TransientError):
+        re.get_many(list(range(4)))
+    re.close()
+
+
+def test_concurrent_readers_under_latency(tmp_path):
+    """Several threads restoring at once over a slow client: all byte
+    identical, no cross-thread cache/pin corruption."""
+    blobs = _blobs(24, seed=11)
+    b = ObjectStoreBackend(tmp_path / "o", latency=0.001,
+                           max_object_bytes=1 << 13)
+    _populate(b, blobs, 12)
+    _cold(b)
+    errors = []
+
+    def reader(lo, hi):
+        want = list(range(lo, hi))
+        try:
+            for _ in range(3):
+                if b.get_many(want) != [blobs[i] for i in want]:
+                    errors.append((lo, hi))
+        except Exception as e:          # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader, args=(0, 12)),
+               threading.Thread(target=reader, args=(12, 24)),
+               threading.Thread(target=reader, args=(6, 18))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30)
+    assert not errors
+    b.close()
+
+
+# --- recovery (§11.4) --------------------------------------------------------
+
+def test_lost_journal_drops_commit_whole(tmp_path):
+    """Killing the journal PUT of the second commit loses exactly that
+    commit — its chunks leave the index and its handle slot never
+    existed (chunk rows and recipe ride the same journal object, so
+    they vanish together and no surviving recipe can alias the ids).
+    The first stream still restores; the orphan container is swept."""
+    blobs = _blobs(20, seed=13)
+    b = ObjectStoreBackend(tmp_path / "o", max_object_bytes=1 << 20)
+    b.put_many([(i, -1, blobs[i], None) for i in range(10)])
+    h0 = b.add_recipe(list(range(10)), [len(blobs[i]) for i in range(10)])
+    b.flush()
+    b.put_many([(i, -1, blobs[i], None) for i in range(10, 20)])
+    h1 = b.add_recipe(list(range(10, 20)),
+                      [len(blobs[i]) for i in range(10, 20)])
+    b.flush()
+    b.close()
+    cl = LocalObjectStore(tmp_path / "o")
+    (key1,) = [k for k, _ in cl.list("e00000000/journal/")
+               if k.endswith("00000001.json")]
+    cl.delete_object(key1)
+
+    re = ObjectStoreBackend(tmp_path / "o")
+    assert re.get_many(list(range(10))) == [blobs[i] for i in range(10)]
+    assert re.recipe(h0) == list(range(10))
+    with pytest.raises(IndexError):     # the slot is gone, not retired
+        re.recipe(h1)
+    assert re.num_streams() == 1 and not re.contains(15)
+    # the orphaned second container object was swept
+    assert not any("/chunks/" in k and k.endswith("00000001")
+                   for k, _ in re.client.list(""))
+    re.close()
+    re2 = ObjectStoreBackend(tmp_path / "o")   # recovery state is stable
+    with pytest.raises(IndexError):
+        re2.recipe(h1)
+    assert re2.max_chunk_id() == 9
+    re2.close()
+
+
+def test_lost_container_retires_dependent_recipes(tmp_path):
+    """A vanished container object loses its chunks AND every delta
+    dependent; recipes touching any of them retire, others survive."""
+    blobs = _blobs(20, seed=17)
+    b = ObjectStoreBackend(tmp_path / "o", max_object_bytes=1 << 20)
+    h0, h1 = _populate(b, blobs, 10)    # h1 deltas against h0's chunks
+    b.put_many([(20, -1, blobs[0], None)])
+    h2 = b.add_recipe([20], [len(blobs[0])])
+    b.flush()                           # second container object
+    b.close()
+    cl = LocalObjectStore(tmp_path / "o")
+    cl.delete_object("e00000000/chunks/00000000")   # h0+h1's payloads
+
+    re = ObjectStoreBackend(tmp_path / "o")
+    for h in (h0, h1):
+        with pytest.raises(KeyError):
+            re.recipe(h)
+    assert re.recipe(h2) == [20] and re.get(20) == blobs[0]
+    assert re.chunk_ids() == [20]
+    re.close()
+
+
+def test_orphan_container_and_stale_epoch_are_swept(tmp_path):
+    blobs = _blobs(6, seed=19)
+    b = ObjectStoreBackend(tmp_path / "o")
+    _populate(b, blobs, 3)
+    b.close()
+    cl = LocalObjectStore(tmp_path / "o")
+    # a crash after the container PUT but before its journal PUT...
+    cl.put("e00000000/chunks/00000042", b"orphaned bytes")
+    # ...and an interrupted compaction's half-written next epoch
+    cl.put("e00000001/chunks/00000000", b"stale epoch bytes")
+    re = ObjectStoreBackend(tmp_path / "o")
+    keys = [k for k, _ in re.client.list("")]
+    assert "e00000000/chunks/00000042" not in keys
+    assert not any(k.startswith("e00000001/") for k in keys)
+    assert re.get_many(list(range(6))) == [blobs[i] for i in range(6)]
+    re.close()
+
+
+def test_fresh_root_without_manifest_starts_clean(tmp_path):
+    cl = LocalObjectStore(tmp_path / "o")
+    cl.put("e00000000/chunks/00000000", b"debris from a pre-manifest crash")
+    b = ObjectStoreBackend(tmp_path / "o")
+    assert b.chunk_ids() == [] and b.num_streams() == 0
+    assert json.loads(cl.get("manifest.json")) == {"epoch": 0}
+    assert not any("debris" in k for k, _ in cl.list(""))
+    b.close()
+
+
+# --- compaction over the object tree -----------------------------------------
+
+def test_store_compaction_on_objectstore(tmp_path):
+    """Full store lifecycle on the object backend: ingest, delete,
+    collect, compact — the epoch flips, the old epoch's objects are
+    gone, survivors restore byte-identically after reopen."""
+    cfg = DedupConfig.from_dict({
+        "detector": "dedup-only", "backend": "objectstore",
+        "backend_args": {"path": str(tmp_path / "o"),
+                         "max_object_bytes": 1 << 15},
+        "chunker_args": {"avg_size": 2048}})
+    store = build_store(cfg)
+    rng = np.random.default_rng(23)
+    base = rng.integers(0, 256, 80 << 10, np.uint8).tobytes()
+    edited = base[: 40 << 10] + rng.integers(0, 256, 40 << 10,
+                                             np.uint8).tobytes()
+    handles = []
+    for data in (base, edited):
+        with store.open_stream() as s:
+            s.write(data)
+        handles.append(s.report.handle)
+    assert store.restore(handles[0]) == base
+    store.delete(handles[0])
+    store.collect()
+    store.compact()
+    assert store.backend.epoch == 1
+    assert not any(k.startswith("e00000000/")
+                   for k, _ in store.backend.client.list(""))
+    assert store.restore(handles[1]) == edited
+    store.close()
+
+    store2 = build_store(cfg)
+    assert store2.restore(handles[1]) == edited
+    with pytest.raises(KeyError):
+        store2.restore(handles[0])
+    store2.close()
+
+
+# --- store-level telemetry ---------------------------------------------------
+
+def test_restore_report_counts_requests(tmp_path):
+    cfg = DedupConfig.from_dict({
+        "detector": "dedup-only", "backend": "objectstore",
+        "backend_args": {"path": str(tmp_path / "o")},
+        "chunker_args": {"avg_size": 2048}})
+    store = build_store(cfg)
+    rng = np.random.default_rng(29)
+    data = rng.integers(0, 256, 64 << 10, np.uint8).tobytes()
+    with store.open_stream() as s:
+        s.write(data)
+    h = s.report.handle
+    _cold(store.backend)
+    assert store.restore(h) == data
+    cold = store.last_restore
+    assert cold.requests > 0
+    assert store.restore(h) == data     # cache-warm: no new physical reads
+    assert store.last_restore.requests == 0
+    assert store.stats.restore_requests == cold.requests
+    store.close()
+
+
+# --- the CLI -----------------------------------------------------------------
+
+def _write(p, data):
+    p.write_bytes(data)
+    return str(p)
+
+
+def test_cli_cp_ls_stat_verify_roundtrip(tmp_path, capsys):
+    rng = np.random.default_rng(31)
+    a = rng.integers(0, 256, 200 << 10, np.uint8).tobytes()
+    b = a[: 150 << 10] + rng.integers(0, 256, 50 << 10, np.uint8).tobytes()
+    src_a = _write(tmp_path / "a.bin", a)
+    src_b = _write(tmp_path / "b.bin", b)
+    root = tmp_path / "bk"
+
+    assert osmod.main(["cp", src_a, src_b, f"obj://{root}"]) == 0
+    assert osmod.main(["ls", f"obj://{root}"]) == 0
+    out = capsys.readouterr().out
+    assert "a.bin" in out and "b.bin" in out
+    assert osmod.main(["stat", f"obj://{root}"]) == 0
+    assert "physical bytes" in capsys.readouterr().out
+    assert osmod.main(["verify", f"obj://{root}"]) == 0
+    assert "2/2 objects verified" in capsys.readouterr().out
+
+    # near-duplicate b deduped against a across one invocation
+    cat = json.loads((root / "catalog.json").read_text())
+    assert cat["files"]["b.bin"]["stored"] < len(b) // 2
+
+    out_path = tmp_path / "restored.bin"
+    assert osmod.main(["cp", f"obj://{root}/a.bin", str(out_path)]) == 0
+    assert out_path.read_bytes() == a
+
+
+def test_cli_cross_invocation_dedup_and_verify_failure(tmp_path, capsys):
+    rng = np.random.default_rng(37)
+    data = rng.integers(0, 256, 120 << 10, np.uint8).tobytes()
+    src = _write(tmp_path / "orig.bin", data)
+    src2 = _write(tmp_path / "copy.bin", data)
+    root = tmp_path / "bk"
+    assert osmod.main(["cp", src, f"obj://{root}"]) == 0
+    # a second PROCESS-level invocation: the digest table reloads from
+    # the catalog, so a byte-identical file stores almost nothing
+    assert osmod.main(["cp", src2, f"obj://{root}"]) == 0
+    cat = json.loads((root / "catalog.json").read_text())
+    assert cat["files"]["copy.bin"]["stored"] < len(data) // 20
+    capsys.readouterr()
+
+    # tamper with the recorded SHA: verify must fail that object only
+    cat["files"]["copy.bin"]["sha256"] = "0" * 64
+    (root / "catalog.json").write_text(json.dumps(cat))
+    assert osmod.main(["verify", f"obj://{root}"]) == 1
+    out = capsys.readouterr().out
+    assert "FAIL  copy.bin" in out and "ok    orig.bin" in out
+
+
+def test_cli_cp_overwrite_replaces_object(tmp_path, capsys):
+    rng = np.random.default_rng(41)
+    v1 = rng.integers(0, 256, 50 << 10, np.uint8).tobytes()
+    v2 = rng.integers(0, 256, 60 << 10, np.uint8).tobytes()
+    root = tmp_path / "bk"
+    src = tmp_path / "f.bin"
+    for v in (v1, v2):
+        src.write_bytes(v)
+        assert osmod.main(["cp", str(src), f"obj://{root}"]) == 0
+    out_path = tmp_path / "out.bin"
+    assert osmod.main(["cp", f"obj://{root}/f.bin", str(out_path)]) == 0
+    assert out_path.read_bytes() == v2
+    assert osmod.main(["verify", f"obj://{root}", "f.bin"]) == 0
+
+
+def test_cli_rejects_ambiguous_transfers(tmp_path):
+    with pytest.raises(SystemExit):
+        osmod.main(["cp", "local1", "local2"])
+    with pytest.raises(SystemExit):
+        osmod.main(["cp", f"obj://{tmp_path}/x", f"obj://{tmp_path}/y"])
+    with pytest.raises(SystemExit):
+        osmod.main(["ls", f"obj://{tmp_path}/nostore"])

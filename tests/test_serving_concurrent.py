@@ -204,11 +204,12 @@ def test_per_restore_reports_are_thread_exact(tmp_path):
     for t in threads:
         t.join(JOIN_S)
     for h in (h0, h1):
-        read_s, dec_s, bytes_read, hits, misses, prefetch = reports[h]
+        read_s, dec_s, bytes_read, hits, misses, prefetch, reqs = reports[h]
         # each stream's container footprint is < 2x its materialized size;
         # a bleed from the sibling restore would roughly double it
         assert 0 < bytes_read < 1.5 * len(expected[h])
         assert misses > 0
+        assert reqs > 0                   # physical reads were issued
     total = store.backend.bytes_read      # lifetime totals aggregate both
     assert total == reports[h0][2] + reports[h1][2]
     store.close()
