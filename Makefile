@@ -5,8 +5,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: dev-deps test test-fast test-lifecycle ci bench bench-smoke \
-        gc-bench ingest-bench restore-bench serve-bench objstore-bench \
-        quickstart
+        observe-smoke gc-bench ingest-bench restore-bench serve-bench \
+        objstore-bench quickstart
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -31,6 +31,12 @@ bench:
 # so the perf plumbing cannot silently rot
 bench-smoke:
 	$(PYTHON) -m benchmarks.run --smoke
+
+# tiny ingest+restore with tracing on: validates the Prometheus
+# exposition (label escaping, TYPE lines, cumulative buckets), the JSON
+# snapshot, the JSONL trace sink and the dump CLI (DESIGN.md §12)
+observe-smoke:
+	$(PYTHON) -m benchmarks.observe_smoke
 
 # delete+compact throughput smoke; writes BENCH_GC.json for perf tracking
 gc-bench:

@@ -86,7 +86,12 @@ def _restore_all(store: api.DedupStore, handles) -> tuple[float, int]:
 def run(base_size: int = 6 << 20, versions: int = 4,
         detectors=DETECTORS, workloads=WORKLOADS,
         avg_size: int = 8192, label: str = "planned",
-        range_reads: int = RANGE_READS, repeats: int = 3) -> list[dict]:
+        range_reads: int = RANGE_READS, repeats: int = 3,
+        metrics_dir: str | None = None) -> list[dict]:
+    """One row per (workload, detector); with ``metrics_dir`` set, each
+    row's serving store also dumps its metrics snapshot (DESIGN.md §12)
+    there as ``restore_<workload>_<detector>.json`` — the row's own
+    explanation when a perf regression shows up."""
     rows = []
     for wl in workloads:
         vs = common.make_versions(wl, base_size, versions)
@@ -120,9 +125,9 @@ def run(base_size: int = 6 << 20, versions: int = 4,
                             "decode_s": round(s.restore_decode_seconds, 4),
                             "cache_hits": s.restore_cache_hits,
                             "cache_misses": s.restore_cache_misses,
-                            "read_amp": round(s.restore_bytes_read
-                                              / max(1, s.restore_bytes_out),
-                                              4),
+                            "read_amp": round(
+                                common.ratio(s.restore_bytes_read,
+                                             s.restore_bytes_out), 4),
                         }
                     warm_s = min(warm_s, _restore_all(cold, handles)[0])
 
@@ -137,6 +142,11 @@ def run(base_size: int = 6 << 20, versions: int = 4,
                     range_bytes += len(cold.restore_range(
                         h, int(off), RANGE_BYTES))
                 range_s = time.perf_counter() - t0
+                if metrics_dir:
+                    mdir = Path(metrics_dir)
+                    mdir.mkdir(parents=True, exist_ok=True)
+                    (mdir / f"restore_{wl}_{kind}.json").write_text(
+                        cold.metrics().to_json(indent=2))
                 cold.close()
 
                 # restore-after-compaction: drop the history, keep latest
@@ -158,12 +168,12 @@ def run(base_size: int = 6 << 20, versions: int = 4,
                     "bench": "restore", "workload": wl, "detector": kind,
                     "variant": label, "versions": versions,
                     "avg_size": avg_size, "bytes_mb": round(mb, 2),
-                    "cold_mbps": round(mb / max(1e-9, cold_s), 2),
-                    "warm_mbps": round(mb / max(1e-9, warm_s), 2),
+                    "cold_mbps": round(common.mbps(total, cold_s), 2),
+                    "warm_mbps": round(common.mbps(total, warm_s), 2),
                     "range_mbps": round(
-                        range_bytes / 2**20 / max(1e-9, range_s), 2),
+                        common.mbps(range_bytes, range_s), 2),
                     "compacted_mbps": round(
-                        comp_total / 2**20 / max(1e-9, comp_s), 2),
+                        common.mbps(comp_total, comp_s), 2),
                     **cold_row,
                     "dcr": round(dcr, 4),
                 })
@@ -264,9 +274,9 @@ def run_threaded(base_size: int = 6 << 20, versions: int = 4,
                         "versions": versions, "avg_size": avg_size,
                         "bytes_mb": round(cold_bytes / 2**20, 2),
                         "cold_agg_mbps": round(
-                            cold_bytes / 2**20 / max(1e-9, cold_s), 2),
+                            common.mbps(cold_bytes, cold_s), 2),
                         "warm_agg_mbps": round(
-                            warm_bytes / 2**20 / max(1e-9, warm_s), 2),
+                            common.mbps(warm_bytes, warm_s), 2),
                         "cold_p50_ms": round(
                             1e3 * cold_lat[len(cold_lat) // 2], 3),
                         "cold_p99_ms": round(
@@ -295,6 +305,9 @@ def main():
     ap.add_argument("--threads", default=None,
                     help="comma list of thread counts: run the concurrent "
                          "serving bench instead of the serial sections")
+    ap.add_argument("--metrics-dir", default=None,
+                    help="also dump a per-row metrics snapshot (DESIGN.md "
+                         "§12) into this directory (serial bench only)")
     args = ap.parse_args()
     if args.threads:
         label = args.label or "threaded"
@@ -310,9 +323,9 @@ def main():
         label = args.label or "planned"
         if args.quick:
             rows = run(base_size=2 << 20, versions=3, range_reads=200,
-                       label=label)
+                       label=label, metrics_dir=args.metrics_dir)
         else:
-            rows = run(label=label)
+            rows = run(label=label, metrics_dir=args.metrics_dir)
         section = "restore"
     common.emit(rows, section)
     path = Path(args.json)

@@ -55,6 +55,27 @@ def run_cell(kind: str, versions, avg_size: int, dim: int = 50):
     return store.stats, wall
 
 
+def mbps(nbytes: float, seconds: float) -> float:
+    """Throughput in MB/s; 0.0 for zero-byte or zero-duration work. A
+    smoke-sized op can finish under the clock's resolution (and an empty
+    stream moves no bytes) — a throughput cell must then print ``0.0``,
+    never raise ZeroDivisionError."""
+    if seconds <= 0 or nbytes <= 0:
+        return 0.0
+    return nbytes / (1 << 20) / seconds
+
+
+def ratio(num: float, den: float) -> float:
+    """``num / den`` with a zero/negative denominator reading as 0.0
+    (read amplification of a zero-byte restore, DCR of an empty store)."""
+    return num / den if den > 0 else 0.0
+
+
+def fmt_ratio(num: float, den: float, places: int = 2) -> str:
+    """``ratio`` rendered for a report cell; ``n/a`` when undefined."""
+    return f"{num / den:.{places}f}" if den > 0 else "n/a"
+
+
 def emit(rows: list[dict], name: str) -> None:
     """name,us_per_call,derived CSV convention + full column dump."""
     if not rows:

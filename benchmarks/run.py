@@ -44,11 +44,17 @@ def main() -> None:
                                    retain=2 if quick else 3),
         "ingest": lambda: bench_ingest.run(base_size=base,
                                            versions=3 if quick else 4),
+        # each restore row also dumps its store's metrics snapshot
+        # (DESIGN.md §12) under bench_metrics/ during the smoke gate, so
+        # a BENCH regression ships with its own explanation (CI uploads
+        # the directory as a workflow artifact)
         "restore": lambda: bench_restore.run(base_size=base,
                                              versions=3 if quick else 4,
                                              range_reads=100 if quick
                                              else 1000,
-                                             repeats=1 if quick else 3),
+                                             repeats=1 if quick else 3,
+                                             metrics_dir="bench_metrics"
+                                             if args.smoke else None),
         # concurrent serving engine (DESIGN.md §10.7): threaded restore
         # throughput + latency; part of the smoke gate so the reader
         # pool / sharded cache / readahead plumbing cannot silently rot

@@ -206,6 +206,46 @@ def main():
                   f"{ostore.backend.client.bytes_got >> 10} KiB fetched")
             ostore.close()
 
+    # observability quickstart (DESIGN.md §12): every store carries a
+    # metrics registry — Prometheus text via store.metrics()
+    # .to_prometheus(), JSON via .to_json() — and setting
+    # DedupConfig.trace_path / trace_ring_events turns on per-operation
+    # trace spans (ring buffer + JSONL sink; pretty-print or follow the
+    # sink with `python -m repro.api.observe dump|tail TRACE`).
+    import tempfile
+    versions = make_workload("sql_dump", WorkloadConfig(
+        base_size=1 << 20, versions=2))
+    with tempfile.TemporaryDirectory() as tdir:
+        trace = f"{tdir}/trace.jsonl"
+        tstore = api.build_store(api.DedupConfig.from_dict({
+            "detector": "dedup-only",
+            "chunker_args": {"avg_size": args.avg_chunk},
+            "trace_path": trace, "trace_ring_events": 256}))
+        for v in versions:
+            with tstore.open_stream() as s:
+                s.write(v)
+        assert tstore.restore(s.report.handle) == versions[-1]
+        text = tstore.metrics().to_prometheus()
+        families = [ln.split()[2] for ln in text.splitlines()
+                    if ln.startswith("# TYPE")]
+        print(f"\n=== observability (DESIGN.md §12) ===")
+        print(f"metrics: {len(families)} families, e.g.")
+        picks = ("repro_ingest_stage_seconds_count",
+                 "repro_restore_stage_seconds_count",
+                 "repro_store_dcr", "repro_reader_requests_total")
+        for ln in text.splitlines():
+            if ln.startswith(picks):
+                print(f"  {ln}")
+        spans = tstore.observe.tracer.ops()
+        print(f"trace: {sum(spans.values())} spans in the ring — " +
+              ", ".join(f"{op} x{n}" for op, n in sorted(spans.items())
+                        if "." not in op))
+        tstore.close()
+        with open(trace) as f:
+            print(f"trace sink: {sum(1 for ln in f if ln.strip())} JSONL "
+                  f"spans (follow live with "
+                  f"`python -m repro.api.observe tail -f {{trace_path}}`)")
+
 
 if __name__ == "__main__":
     main()

@@ -11,6 +11,10 @@ Layers (DESIGN.md §2 and §7), each depending only on the ones above it:
   objectstore  ranged-GET ObjectStoreBackend over an object API, the
                fault-injecting LocalObjectStore fake, the boto3 seam,
                and the cp/ls/stat/verify CLI (DESIGN.md §11)
+  observe      metrics registry (counters/gauges/log2 histograms with
+               per-thread shards), structured trace spans (ring buffer +
+               JSONL sink), Prometheus/JSON exporters and the dump/tail
+               CLI (DESIGN.md §12)
   refcount     chunk recipe/base refcounting for space reclamation
   restore      serving-path policy: restore planner (chain-grouped,
                topologically ordered, offset-sorted reads), byte-budgeted
@@ -115,9 +119,20 @@ _OBJECTSTORE_EXPORTS = frozenset({
     "S3ObjectClient", "TransientError",
 })
 
+# same lazy treatment for the observability layer: repro.api.observe has
+# a ``python -m`` CLI of its own (dump/tail), so it must not be imported
+# at package-import time (DedupStore imports it on construction, which
+# is after runpy has located the module)
+_OBSERVE_EXPORTS = frozenset({
+    "MetricsRegistry", "Observability", "Tracer", "parse_prometheus_text",
+})
+
 
 def __getattr__(name: str):
     if name in _OBJECTSTORE_EXPORTS:
         from repro.api import objectstore
         return getattr(objectstore, name)
+    if name in _OBSERVE_EXPORTS:
+        from repro.api import observe
+        return getattr(observe, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -22,6 +22,7 @@ while holding one, so lock ordering is trivial and deadlock-free.
 from __future__ import annotations
 
 import threading
+import time
 from contextlib import contextmanager
 
 
@@ -32,13 +33,22 @@ class RWLock:
     nest acquisitions (a reader re-entering while a writer waits would
     deadlock under writer preference); callers keep critical sections
     leaf-shaped instead.
+
+    ``observer`` (optional) is called as ``observer(side, seconds)``
+    after every successful acquire with ``side`` in ``("read",
+    "write")`` and the time the acquire took — the lock-contention
+    signal (DESIGN.md §12.2 feeds it into the
+    ``repro_lock_wait_seconds`` histogram). It runs outside the
+    internal condition and must not acquire this lock. Without an
+    observer the acquire paths don't even read the clock.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, observer=None) -> None:
         self._cond = threading.Condition()
         self._readers = 0
         self._writer_active = False
         self._writers_waiting = 0
+        self._observer = observer
 
     # explicit acquire/release pairs for hot paths (a generator-based
     # contextmanager costs ~4µs per cycle, which ranged reads notice);
@@ -46,10 +56,14 @@ class RWLock:
     # off the hot path
 
     def acquire_read(self) -> None:
+        obs = self._observer
+        t0 = time.perf_counter() if obs is not None else 0.0
         with self._cond:
             while self._writer_active or self._writers_waiting:
                 self._cond.wait()
             self._readers += 1
+        if obs is not None:
+            obs("read", time.perf_counter() - t0)
 
     def release_read(self) -> None:
         with self._cond:
@@ -58,6 +72,8 @@ class RWLock:
                 self._cond.notify_all()
 
     def acquire_write(self) -> None:
+        obs = self._observer
+        t0 = time.perf_counter() if obs is not None else 0.0
         with self._cond:
             self._writers_waiting += 1
             try:
@@ -66,6 +82,8 @@ class RWLock:
             finally:
                 self._writers_waiting -= 1
             self._writer_active = True
+        if obs is not None:
+            obs("write", time.perf_counter() - t0)
 
     def release_write(self) -> None:
         with self._cond:
@@ -159,6 +177,12 @@ class IoTelemetry:
     only by in-flight increments, which is the same guarantee global
     ``+=`` counters had. Exited threads' records are folded into the
     aggregate (see ``_Fold``), so lifetime cost is O(live threads).
+
+    Pooled executors whose threads never exit must not rely on the
+    ``_Fold``/GC path: call ``fold_current()`` (or wrap the task in
+    ``scoped()``) when a task finishes, so lifetime totals are exact
+    under thread reuse instead of trailing by whatever the pool's
+    threads still hold.
     """
 
     def __init__(self) -> None:
@@ -188,6 +212,29 @@ class IoTelemetry:
             for field, value in zip(COUNTER_FIELDS, snap):
                 setattr(accumulate_to, field,
                         getattr(accumulate_to, field) + value)
+
+    def fold_current(self) -> None:
+        """Fold the calling thread's counter record into the dead
+        aggregate now and detach it, without waiting for thread exit.
+        Idempotent with the ``_Fold`` destructor (``_fold`` ignores an
+        already-folded record); the next ``local()`` call on this
+        thread starts a fresh record."""
+        c = getattr(self._tl, "c", None)
+        if c is None:
+            return
+        self._tl.c = None
+        self._tl.fold = None        # disarm the GC-timed fold first
+        self._fold(c)
+
+    @contextmanager
+    def scoped(self):
+        """Context manager form of the explicit-fold contract: yields
+        this thread's counter record, folds it on exit. For executor
+        tasks: ``with telemetry.scoped() as c: ...``."""
+        try:
+            yield self.local()
+        finally:
+            self.fold_current()
 
     def totals(self) -> tuple:
         # snapshot under the lock: a thread exiting between a locked row

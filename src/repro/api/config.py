@@ -36,7 +36,7 @@ _KNOWN_KEYS = {"detector", "detector_args", "chunker", "chunker_args",
                "backend", "backend_args", "policy", "policy_args",
                "restore_cache_bytes", "restore_cache_shards",
                "restore_reader_fds", "restore_readahead",
-               "restore_coalesce_gap"}
+               "restore_coalesce_gap", "trace_path", "trace_ring_events"}
 
 # serving-engine knobs (DESIGN.md §10, §11.3) -> backend factory kwargs;
 # each is forwarded only when set and only to factories that declare the
@@ -72,6 +72,14 @@ class DedupConfig:
     # their medium — 4 KiB for the file log, 1 MiB for object stores —
     # so set it only to override; 0 coalesces exactly-adjacent reads only.
     restore_coalesce_gap: int | None = None
+    # observability (DESIGN.md §12): every store gets a metrics registry
+    # unconditionally; structured op tracing turns on only when one of
+    # these is set. trace_path appends spans as JSONL (followable with
+    # ``python -m repro.api.observe tail``); trace_ring_events keeps the
+    # last N spans in memory (``store.observe.tracer.events()``).
+    # Setting trace_path alone also enables a default-sized ring.
+    trace_path: str | None = None
+    trace_ring_events: int | None = None
 
     @classmethod
     def from_dict(cls, d: dict[str, Any]) -> "DedupConfig":
@@ -95,6 +103,13 @@ class DedupConfig:
             if not isinstance(value, int) or value < floor:
                 raise ValueError(f"{name} must be an int >= {floor}, "
                                  f"got {value!r}")
+        if cfg.trace_path is not None and not isinstance(cfg.trace_path,
+                                                         str):
+            raise TypeError("trace_path must be a str (JSONL sink path)")
+        ring = cfg.trace_ring_events
+        if ring is not None and (not isinstance(ring, int) or ring < 0):
+            raise ValueError(f"trace_ring_events must be an int >= 0, "
+                             f"got {ring!r}")
         return cfg
 
     def to_dict(self) -> dict[str, Any]:
@@ -139,4 +154,6 @@ def build_policy(cfg: DedupConfig) -> Any:
 def build_store(cfg: DedupConfig) -> DedupStore:
     """Resolve every component through the registry and assemble the store."""
     return DedupStore(build_detector(cfg), build_chunker(cfg),
-                      backend=build_backend(cfg), policy=build_policy(cfg))
+                      backend=build_backend(cfg), policy=build_policy(cfg),
+                      trace_path=cfg.trace_path,
+                      trace_ring_events=cfg.trace_ring_events)

@@ -268,6 +268,68 @@ class PlannedChainReader:
     each backend — only byte *reading* is shared.
     """
 
+    # observability binding (DESIGN.md §12.3), class-level defaults so a
+    # backend is fully usable before (or without) a store binding it
+    _obs = None
+    _h_run_bytes = None
+    _h_run_extents = None
+
+    def bind_observability(self, obs) -> None:
+        """Attach a store's ``Observability`` (DESIGN.md §12): coalesced
+        read-run shapes are recorded natively, and the reader's existing
+        lifetime counters — ``IoTelemetry`` totals and the decode-cache
+        tallies — are re-exported as snapshot-time derived views, never
+        double-counted."""
+        from repro.api import observe as om
+        self._obs = obs
+        m = obs.metrics
+        self._h_run_bytes = m.histogram(
+            "repro_reader_run_bytes",
+            "Coalesced payload read-run width (one pread / ranged GET; "
+            "§9.1, §11.3)", bounds=om.BYTES_BUCKETS)
+        self._h_run_extents = m.histogram(
+            "repro_reader_run_extents",
+            "Records served by one coalesced read run",
+            bounds=om.COUNT_BUCKETS)
+        tel, cache = self._telemetry, self._cache
+        c_seconds = {p: m.counter("repro_reader_io_seconds_total",
+                                  "Lifetime read vs. decode time",
+                                  labels={"phase": p})
+                     for p in ("read", "decode")}
+        c_bytes = {d: m.counter("repro_reader_bytes_total",
+                                "Payload bytes read / readahead-prefetched",
+                                labels={"dir": d})
+                   for d in ("read", "prefetch")}
+        c_requests = m.counter("repro_reader_requests_total",
+                               "Physical payload reads issued")
+        c_cache = {k: m.counter("repro_reader_cache_lookups_total",
+                                "Decode-cache probe outcomes (§9.2)",
+                                labels={"outcome": k})
+                   for k in ("hit", "miss")}
+        g_cache = {k: m.gauge("repro_reader_cache_bytes",
+                              "Decode-cache residency", labels={"kind": k})
+                   for k in ("current", "peak")}
+
+        def _export_reader_views() -> None:
+            t = tel.totals()    # COUNTER_FIELDS order
+            c_seconds["read"].set_total(t[0])
+            c_seconds["decode"].set_total(t[1])
+            c_bytes["read"].set_total(t[2])
+            c_cache["hit"].set_total(t[3])
+            c_cache["miss"].set_total(t[4])
+            c_bytes["prefetch"].set_total(t[5])
+            c_requests.set_total(t[6])
+            g_cache["current"].set(cache.bytes)
+            g_cache["peak"].set(cache.peak_bytes)
+
+        m.register_callback(_export_reader_views)
+
+    def fold_io_counters(self) -> None:
+        """Fold the calling thread's telemetry record into the lifetime
+        aggregate (the pooled-executor contract —
+        ``IoTelemetry.fold_current``)."""
+        self._telemetry.fold_current()
+
     # --- lifetime I/O totals (telemetry properties, DESIGN.md §9.4) ----------
 
     @property
@@ -439,6 +501,12 @@ class PlannedChainReader:
                 # stores, KB-scale for the local log; §9.1, §11.3)
                 runs = coalesce_reads(plan.reads, self._merge_gap,
                                       self._max_run)
+                h_run = self._h_run_bytes
+                if h_run is not None:       # §12.3: run shapes, natively
+                    h_ext = self._h_run_extents
+                    for start, end, extents in runs:
+                        h_run.observe(end - start)
+                        h_ext.observe(len(extents))
 
                 payloads: dict[int, bytes] = {}
                 remaining = dict(plan.dependents)

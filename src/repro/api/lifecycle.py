@@ -130,6 +130,30 @@ class NeverPolicy:
         return False
 
 
+def _observe_gc(store: Any, phase: str, seconds: float,
+                counters: dict[str, int] | None = None,
+                **labels) -> None:
+    """Record one reclamation phase into the store's registry/tracer
+    (DESIGN.md §12.3). ``counters`` increments
+    ``repro_gc_<name>_total`` series; tolerates stores without an
+    Observability (lifecycle functions also run against test doubles)."""
+    obs = getattr(store, "observe", None)
+    if obs is None:
+        return
+    from repro.api import observe as om
+    m = obs.metrics
+    m.histogram("repro_gc_phase_seconds",
+                "Reclamation phase timings (§7)", labels={"phase": phase},
+                bounds=om.SECONDS_BUCKETS).observe(seconds)
+    if counters:
+        for name, value in counters.items():
+            m.counter(f"repro_gc_{name}_total",
+                      "Reclamation outcome totals (§7)").inc(value)
+    tr = obs.tracer
+    if tr is not None:
+        tr.record("gc." + phase, seconds, **labels)
+
+
 def delete_stream(store: Any, handle: int) -> int:
     """Retire stream `handle` and release its chunk references. Returns
     the logical bytes the delete made reclaimable (dead + newly pinned).
@@ -137,6 +161,7 @@ def delete_stream(store: Any, handle: int) -> int:
     may dedup against them, which revives them (refcount goes back up).
     Raises KeyError for an already-retired handle (IndexError for one the
     store never issued)."""
+    t0 = time.perf_counter()
     refs: RefcountTable = store._refs
     recipe = store.backend.recipe(handle)
     store.backend.retire_recipe(handle)     # durable backends fsync the
@@ -155,11 +180,15 @@ def delete_stream(store: Any, handle: int) -> int:
         skip_at = getattr(store, "_compact_skipped_at", None)
         if skip_at is None or refs.dead_bytes + refs.pinned_bytes > skip_at:
             compact(store)
+    _observe_gc(store, "delete", time.perf_counter() - t0,
+                counters={"freed_bytes": freed},
+                handle=handle, freed_bytes=freed)
     return freed
 
 
 def collect(store: Any) -> CollectReport:
     """Mark-sweep accounting: classify chunks, refresh lifecycle stats."""
+    t0 = time.perf_counter()
     refs: RefcountTable = store._refs
     live = refs.live_cids()
     pinned = refs.pinned_cids()
@@ -172,6 +201,10 @@ def collect(store: Any) -> CollectReport:
         chain_depth_hist=hist)
     store._refresh_lifecycle_stats()
     store.stats.chain_depth_hist = dict(hist)
+    _observe_gc(store, "collect", time.perf_counter() - t0,
+                live_chunks=report.live_chunks,
+                dead_chunks=report.dead_chunks,
+                reclaimable_bytes=report.reclaimable_bytes)
     return report
 
 
@@ -215,17 +248,22 @@ def compact(store: Any) -> CompactionRun:
             rebased["raw"] += 1
             growth += len(raw) - backend.payload_size(cid)
 
+    sizing_seconds = time.perf_counter() - t0
+
     if growth > 0 and growth >= swept_bytes:
         # rewriting would enlarge the container: leave it append-only
         # until enough dead bytes accumulate to pay for the rebases
         # (delete_stream consults the marker before re-running sizing)
         store._compact_skipped_at = refs.dead_bytes + refs.pinned_bytes
         size = backend.storage_bytes()
+        seconds = time.perf_counter() - t0
+        _observe_gc(store, "compact", seconds, skipped=True, growth=growth)
+        _observe_gc(store, "compact.sizing", sizing_seconds)
         return CompactionRun(
             epoch=backend.epoch, live_chunks=len(keep), swept_chunks=0,
             swept_bytes=0, rebased_delta=0, rebased_raw=0,
             bytes_before=size, bytes_after=size, reclaimed_bytes=0,
-            seconds=time.perf_counter() - t0, skipped=True)
+            seconds=seconds, skipped=True)
 
     def live_records():
         # streamed, not a list: the backend consumes one record at a time,
@@ -258,6 +296,16 @@ def compact(store: Any) -> CompactionRun:
     store._refresh_lifecycle_stats()
     store.stats.reclaimed_bytes += bytes_before - bytes_after
     store._compact_skipped_at = None        # state changed; sizing is fresh
+
+    seconds = time.perf_counter() - t0
+    reclaimed = bytes_before - bytes_after
+    _observe_gc(store, "compact", seconds,
+                counters={"reclaimed_bytes": reclaimed,
+                          "swept_chunks": len(swept)},
+                reclaimed_bytes=reclaimed, swept_chunks=len(swept),
+                rebased_delta=rebased_delta, rebased_raw=rebased_raw)
+    _observe_gc(store, "compact.sizing", sizing_seconds)
+    _observe_gc(store, "compact.rewrite", seconds - sizing_seconds)
 
     return CompactionRun(
         epoch=backend.epoch, live_chunks=len(keep), swept_chunks=len(swept),

@@ -458,6 +458,59 @@ class ObjectStoreBackend(PlannedChainReader):
             self._call(self.client.put, _MANIFEST_KEY,
                        json.dumps({"epoch": self.epoch}).encode())
 
+    # --- observability binding (DESIGN.md §12.3) -----------------------------
+
+    # class-level None defaults: _scan() issues client requests from
+    # __init__, before any store can bind an Observability
+    _h_req_seconds = None
+    _h_get_bytes = None
+    _c_backoff = None
+
+    def bind_observability(self, obs) -> None:
+        """Base binding (run shapes + reader views) plus the remote-store
+        instruments: per-request latency histograms by op, ranged-GET
+        response sizes, retry/backoff accounting. The client's own
+        request/byte counters — every attempt, fault-injected ones
+        included — are re-exported as derived views."""
+        super().bind_observability(obs)
+        from repro.api import observe as om
+        m = obs.metrics
+        self._h_req_seconds = {
+            op: m.histogram("repro_objstore_request_seconds",
+                            "Client request latency per attempt (§11.2)",
+                            labels={"op": op}, bounds=om.SECONDS_BUCKETS)
+            for op in ("put", "get", "head", "list", "delete")}
+        self._h_get_bytes = m.histogram(
+            "repro_objstore_get_bytes", "Ranged-GET response sizes (§11.3)",
+            bounds=om.BYTES_BUCKETS)
+        self._c_backoff = m.counter(
+            "repro_objstore_backoff_seconds_total",
+            "Time slept in the retry policy's exponential backoff")
+        c_retries = m.counter("repro_objstore_retries_total",
+                              "Transient failures absorbed by the retry "
+                              "policy")
+        client = self.client
+
+        def _export_objstore_views() -> None:
+            c_retries.set_total(self.retries)
+            op_counts = getattr(client, "op_counts", None)
+            if op_counts is not None:
+                for op, n in list(op_counts.items()):
+                    m.counter("repro_objstore_client_requests_total",
+                              "Client requests by op, every attempt "
+                              "counted", labels={"op": op}).set_total(n)
+            for attr, d in (("bytes_put", "put"), ("bytes_got", "got")):
+                v = getattr(client, attr, None)
+                if v is not None:
+                    m.counter("repro_objstore_client_bytes_total",
+                              "Object bytes shipped to / from the store",
+                              labels={"dir": d}).set_total(v)
+
+        m.register_callback(_export_objstore_views)
+
+    # client method name -> exported op label (§12.2 naming)
+    _OP_LABELS = {"get_range": "get", "delete_object": "delete"}
+
     # --- request plumbing ----------------------------------------------------
 
     def _call(self, fn, *args):
@@ -465,17 +518,40 @@ class ObjectStoreBackend(PlannedChainReader):
         ``TransientError`` sleep ``backoff * 2^attempt`` and reissue, up
         to ``max_retries`` reissues; then the error propagates. Every
         attempt — including failed ones — shows up in the client's own
-        request counters; ``self.retries`` totals the absorbed faults."""
+        request counters; ``self.retries`` totals the absorbed faults.
+        When an Observability is bound, every attempt also lands in the
+        per-op latency histogram and each absorbed fault books its
+        backoff into the counter (plus an ``objstore.retry`` span when
+        tracing is on)."""
+        hists = self._h_req_seconds
+        h = (hists[self._OP_LABELS.get(fn.__name__, fn.__name__)]
+             if hists is not None else None)
         attempt = 0
         while True:
+            t0 = time.perf_counter() if h is not None else 0.0
             try:
-                return fn(*args)
+                result = fn(*args)
             except TransientError:
+                if h is not None:
+                    h.observe(time.perf_counter() - t0)
                 if attempt >= self._max_retries:
                     raise
-                time.sleep(self._backoff * (1 << attempt))
+                delay = self._backoff * (1 << attempt)
+                if self._c_backoff is not None:
+                    self._c_backoff.inc(delay)
+                    tr = self._obs.tracer
+                    if tr is not None:
+                        tr.record("objstore.retry", delay,
+                                  client_op=self._OP_LABELS.get(
+                                      fn.__name__, fn.__name__),
+                                  attempt=attempt + 1)
+                time.sleep(delay)
                 attempt += 1
                 self.retries += 1
+                continue
+            if h is not None:
+                h.observe(time.perf_counter() - t0)
+            return result
 
     @staticmethod
     def _chunk_key(epoch: int, seq: int) -> str:
@@ -494,11 +570,14 @@ class ObjectStoreBackend(PlannedChainReader):
         seq, off = offset >> _OBJ_SHIFT, offset & _OBJ_MASK
         key = self._chunk_key(self.epoch, seq)
         try:
-            return self._call(self.client.get_range, key, off, length)
+            data = self._call(self.client.get_range, key, off, length)
         except KeyError:
             # surface as the truncation error class the engine documents
             raise IOError(f"container object {key} missing "
                           f"({self._desc})") from None
+        if self._h_get_bytes is not None:
+            self._h_get_bytes.observe(len(data))
+        return data
 
     def _read_desc(self) -> str:
         return self._desc

@@ -150,7 +150,9 @@ class DedupStore:
     def __init__(self, detector: Any,
                  chunker_cfg: chunking.ChunkerConfig | None = None,
                  backend: containers.ContainerBackend | None = None,
-                 policy: Any | None = None):
+                 policy: Any | None = None,
+                 trace_path: str | None = None,
+                 trace_ring_events: int | None = None):
         self.detector = detector
         self.cfg = chunker_cfg or chunking.ChunkerConfig()
         self.backend = backend if backend is not None else containers.InMemoryBackend()
@@ -180,7 +182,12 @@ class DedupStore:
         # each other, and the aggregate stats/layout caches have their
         # own leaf mutex. The prefetch pool runs restore_iter's
         # next-batch fetches (§10.3), created on first use.
-        self._lifecycle_lock = RWLock()
+        # observability (DESIGN.md §12): every store owns a metrics
+        # registry; the tracer exists only when tracing was configured.
+        # Must be built before the lifecycle lock (its wait-time
+        # observer) and before the backend binding below.
+        self._init_observability(trace_path, trace_ring_events)
+        self._lifecycle_lock = RWLock(observer=self._observe_lock_wait)
         self._commit_lock = threading.Lock()
         self._stats_lock = threading.Lock()
         self._prefetch: ThreadPoolExecutor | None = None
@@ -195,7 +202,99 @@ class DedupStore:
         # bound once: per-thread backend telemetry hook (None -> the
         # global-attr fallback in _backend_counters)
         self._io_counters = getattr(self.backend, "io_counters", None)
+        self._fold_io = getattr(self.backend, "fold_io_counters", None)
+        # route the backend's own counters through the registry as
+        # derived views (+ native run-width/request histograms there)
+        bind = getattr(self.backend, "bind_observability", None)
+        if bind is not None:
+            bind(self.observe)
         self._refresh_lifecycle_stats()
+
+    def _init_observability(self, trace_path: str | None,
+                            trace_ring_events: int | None) -> None:
+        from repro.api import observe as om   # local: keeps module import
+        self.observe = om.Observability(      # light for the observe CLI
+            trace_path=trace_path, trace_ring_events=trace_ring_events)
+        m = self.observe.metrics
+        # native ingest/restore instruments (recorded at the event);
+        # handles are pre-created so every family appears in the
+        # exposition from the first snapshot, zeros included
+        self._c_ingest_commits = m.counter(
+            "repro_ingest_commits_total", "Committed stream sessions")
+        self._c_ingest_bytes = {
+            d: m.counter("repro_ingest_bytes_total",
+                         "Stream bytes in vs. container bytes stored",
+                         labels={"dir": d}) for d in ("in", "stored")}
+        self._c_ingest_chunks = {
+            k: m.counter("repro_ingest_chunks_total",
+                         "Chunk dispositions at commit (DESIGN.md §2.2)",
+                         labels={"kind": k})
+            for k in ("dup", "delta", "raw")}
+        self._h_ingest_stage = {
+            s: m.histogram("repro_ingest_stage_seconds",
+                           "Per-commit ingest phase timings (§8)",
+                           labels={"stage": s}, bounds=om.SECONDS_BUCKETS)
+            for s in ("chunk", "extract", "score", "observe", "delta",
+                      "store")}
+        self._c_restore_ops = {
+            s: m.counter("repro_restore_ops_total",
+                         "Restore calls by serving surface (§9)",
+                         labels={"surface": s})
+            for s in ("full", "iter", "range")}
+        self._c_restore_bytes = {
+            d: m.counter("repro_restore_bytes_total",
+                         "Bytes served vs. physical payload bytes read",
+                         labels={"dir": d}) for d in ("out", "read")}
+        self._h_restore_stage = {
+            s: m.histogram("repro_restore_stage_seconds",
+                           "Per-restore wall/read/decode timings (§9)",
+                           labels={"stage": s}, bounds=om.SECONDS_BUCKETS)
+            for s in ("total", "read", "decode")}
+        self._h_restore_requests = m.histogram(
+            "repro_restore_requests",
+            "Physical payload reads (preads / ranged GETs) per restore",
+            bounds=om.COUNT_BUCKETS)
+        self._h_lock_wait = {
+            s: m.histogram("repro_lock_wait_seconds",
+                           "RWLock acquire wait time — the §10 "
+                           "lock-contention signal",
+                           labels={"lock": "lifecycle", "side": s},
+                           bounds=om.SECONDS_BUCKETS)
+            for s in ("read", "write")}
+        # lifecycle gauges are derived views over StoreStats — the
+        # authoritative aggregate — copied in at snapshot time
+        g_bytes = {k: m.gauge("repro_store_bytes",
+                              "Store accounting (live/dead per §7.2)",
+                              labels={"kind": k})
+                   for k in ("in", "stored", "live", "dead", "reclaimed")}
+        g_dcr = m.gauge("repro_store_dcr",
+                        "Lifetime data compression ratio (bytes_in / "
+                        "bytes_stored)")
+        g_streams = m.gauge("repro_store_streams", "Committed streams")
+
+        def _export_store_views() -> None:
+            with self._stats_lock:
+                s = self.stats
+                vals = {"in": s.bytes_in, "stored": s.bytes_stored,
+                        "live": s.live_bytes, "dead": s.dead_bytes,
+                        "reclaimed": s.reclaimed_bytes}
+                dcr = s.dcr
+                streams = len(self.reports)
+            for k, v in vals.items():
+                g_bytes[k].set(v)
+            g_dcr.set(dcr)
+            g_streams.set(streams)
+
+        m.register_callback(_export_store_views)
+
+    def _observe_lock_wait(self, side: str, seconds: float) -> None:
+        self._h_lock_wait[side].observe(seconds)
+
+    def metrics(self):
+        """The store's ``MetricsRegistry`` (DESIGN.md §12) — call
+        ``.to_prometheus()`` / ``.to_json()`` / ``.snapshot()`` on it.
+        Also reachable as ``store.observe.metrics``."""
+        return self.observe.metrics
 
     def fit(self, training_streams: Sequence[bytes]) -> None:
         t0 = time.perf_counter()
@@ -363,7 +462,36 @@ class DedupStore:
             self.reports.append(report)
             self.stats.absorb(report)
             self._refresh_lifecycle_stats()
+        self._observe_ingest(report)
         return report
+
+    def _observe_ingest(self, r: IngestReport) -> None:
+        """Record one commit into the registry (and ring, when tracing):
+        the stage timings the report already measured — no new timers on
+        the ingest path (DESIGN.md §12.3)."""
+        self._c_ingest_commits.inc()
+        self._c_ingest_bytes["in"].inc(r.bytes_in)
+        self._c_ingest_bytes["stored"].inc(r.bytes_stored)
+        self._c_ingest_chunks["dup"].inc(r.dup_chunks)
+        self._c_ingest_chunks["delta"].inc(r.delta_chunks)
+        self._c_ingest_chunks["raw"].inc(r.raw_chunks)
+        stages = (("chunk", r.chunk_seconds), ("extract", r.extract_seconds),
+                  ("score", r.score_seconds), ("observe", r.observe_seconds),
+                  ("delta", r.delta_seconds), ("store", r.store_seconds))
+        for stage, seconds in stages:
+            self._h_ingest_stage[stage].observe(seconds)
+        tr = self.observe.tracer
+        if tr is not None:
+            total = sum(s for _, s in stages)
+            pid = tr.record("ingest", total, handle=r.handle,
+                            bytes_in=r.bytes_in, bytes_stored=r.bytes_stored,
+                            chunks=r.chunks, dup_chunks=r.dup_chunks,
+                            delta_chunks=r.delta_chunks,
+                            dcr=round(r.dcr, 4))
+            t0 = time.time() - total
+            for stage, seconds in stages:
+                tr.record("ingest." + stage, seconds, t0=t0, parent=pid)
+                t0 += seconds
 
     # --- serving path (repro.api.restore, DESIGN.md §9) ----------------------
 
@@ -377,7 +505,7 @@ class DedupStore:
         data, d = self._fetch_counted(recipe)
         out = b"".join(data[cid] for cid in recipe)
         self._note_restore(handle, len(out), len(recipe),
-                           time.perf_counter() - t0, d)
+                           time.perf_counter() - t0, d, surface="full")
         return out
 
     def restore_iter(self, handle: int, batch_chunks: int = 256):
@@ -410,7 +538,7 @@ class DedupStore:
                     nxt = recipe[i + batch_chunks:i + 2 * batch_chunks]
                     if nxt:     # overlap the next fetch with consumption
                         fut = self._prefetch_pool().submit(
-                            self._fetch_counted, nxt)
+                            self._prefetch_fetch, nxt)
                     for cid in part:
                         piece = data[cid]
                         total += len(piece)
@@ -419,7 +547,8 @@ class DedupStore:
                 if fut is not None:     # abandoned mid-stream
                     fut.cancel()
             self._note_restore(handle, total, len(recipe),
-                               time.perf_counter() - t0, acc)
+                               time.perf_counter() - t0, acc,
+                               surface="iter")
 
         return gen()
 
@@ -436,7 +565,8 @@ class DedupStore:
         first, last, skip = self._layout(handle, recipe, acc).chunk_window(
             offset, length)
         if last < first:
-            self._note_restore(handle, 0, 0, time.perf_counter() - t0, acc)
+            self._note_restore(handle, 0, 0, time.perf_counter() - t0, acc,
+                               surface="range")
             return b""
         part = recipe[first:last + 1]
         data, d = self._fetch_counted(part)
@@ -444,7 +574,7 @@ class DedupStore:
         blob = b"".join(data[cid] for cid in part)
         out = blob[skip:skip + min(length, len(blob) - skip)]
         self._note_restore(handle, len(out), len(part),
-                           time.perf_counter() - t0, acc)
+                           time.perf_counter() - t0, acc, surface="range")
         return out
 
     def stream_length(self, handle: int) -> int:
@@ -510,6 +640,23 @@ class DedupStore:
             lock.release_read()
         now = self._backend_counters()
         return data, [now[i] - snap[i] for i in range(len(snap))]
+
+    def _prefetch_fetch(self, cids: Sequence[int]) -> tuple[dict, list]:
+        """``_fetch_counted`` as a prefetch-pool task: folds this pool
+        thread's telemetry record and metric shard when the task is
+        done. Pool threads live as long as the store, so without the
+        explicit fold (concurrency.IoTelemetry.fold_current) their
+        counters would sit outside the dead aggregate until close —
+        lifetime totals must be exact under thread reuse, not GC-timed.
+        Folding happens after the counter snapshot pair, so the per-call
+        deltas the caller consumes are unaffected."""
+        try:
+            return self._fetch_counted(cids)
+        finally:
+            fold = self._fold_io
+            if fold is not None:
+                fold()
+            self.observe.metrics.fold_current()
 
     def _prefetch_pool(self) -> ThreadPoolExecutor:
         pool = self._prefetch
@@ -577,7 +724,8 @@ class DedupStore:
                 getattr(b, "read_requests", 0))
 
     def _note_restore(self, handle: int, bytes_out: int, chunks: int,
-                      seconds: float, d: Sequence) -> None:
+                      seconds: float, d: Sequence,
+                      surface: str = "full") -> None:
         report = RestoreReport(
             handle=handle, bytes_out=bytes_out, chunks=chunks,
             seconds=seconds,
@@ -587,6 +735,33 @@ class DedupStore:
         with self._stats_lock:
             self.last_restore = report
             self.stats.absorb_restore(report)
+        self._c_restore_ops[surface].inc()
+        self._c_restore_bytes["out"].inc(report.bytes_out)
+        self._c_restore_bytes["read"].inc(report.bytes_read)
+        self._h_restore_stage["total"].observe(seconds)
+        self._h_restore_stage["read"].observe(report.read_seconds)
+        self._h_restore_stage["decode"].observe(report.decode_seconds)
+        self._h_restore_requests.observe(report.requests)
+        tr = self.observe.tracer
+        if tr is not None:
+            hits, misses = report.cache_hits, report.cache_misses
+            pid = tr.record(
+                "restore", seconds, surface=surface, handle=handle,
+                bytes_out=report.bytes_out, bytes_read=report.bytes_read,
+                requests=report.requests, cache_hits=hits,
+                cache_misses=misses,
+                hit_ratio=round(hits / max(1, hits + misses), 4))
+            t0 = time.time() - seconds
+            tr.record("restore.plan", max(
+                0.0, seconds - report.read_seconds - report.decode_seconds),
+                t0=t0, parent=pid, chunks=chunks)
+            tr.record("restore.read", report.read_seconds, t0=t0,
+                      parent=pid, bytes_read=report.bytes_read,
+                      requests=report.requests)
+            tr.record("restore.decode", report.decode_seconds, t0=t0,
+                      parent=pid)
+            tr.record("restore.prefetch", 0.0, t0=t0, parent=pid,
+                      prefetch_bytes=report.prefetch_bytes)
 
     # --- space reclamation (repro.api.lifecycle, DESIGN.md §7) ---------------
 
@@ -649,3 +824,4 @@ class DedupStore:
         with self._lifecycle_lock.write():
             self._backend_closed = True
             self.backend.close()
+        self.observe.close()    # flush + close the JSONL trace sink
