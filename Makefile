@@ -5,8 +5,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: dev-deps test test-fast test-lifecycle ci bench bench-smoke \
-        observe-smoke gc-bench ingest-bench restore-bench serve-bench \
-        objstore-bench quickstart
+        observe-smoke chaos-smoke gc-bench ingest-bench restore-bench \
+        serve-bench verify-bench objstore-bench quickstart
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -38,6 +38,13 @@ bench-smoke:
 observe-smoke:
 	$(PYTHON) -m benchmarks.observe_smoke
 
+# integrity gate (DESIGN.md §13): injected bit rot must be 100%
+# detected + repaired, every registered crashpoint must reopen to a
+# scrub-clean store, journal damage must be typed; nonzero exit on any
+# undetected corruption
+chaos-smoke:
+	$(PYTHON) -m benchmarks.chaos_smoke
+
 # delete+compact throughput smoke; writes BENCH_GC.json for perf tracking
 gc-bench:
 	$(PYTHON) -m benchmarks.bench_gc --quick
@@ -54,6 +61,12 @@ restore-bench:
 # restore threads (DESIGN.md §10.7); appends rows to BENCH_RESTORE.json
 serve-bench:
 	$(PYTHON) -m benchmarks.bench_restore --threads 1,2,4
+
+# verified-read overhead (DESIGN.md §13.2): cold+warm restore with
+# per-chunk crc32c off vs on; warm overhead guarded at ±15%; appends
+# rows to BENCH_RESTORE.json
+verify-bench:
+	$(PYTHON) -m benchmarks.bench_restore --verify-reads
 
 # object-store serving: coalesced ranged GETs vs per-chunk baseline under
 # injected latency (DESIGN.md §11.3); writes BENCH_OBJSTORE.json

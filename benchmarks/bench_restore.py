@@ -24,6 +24,12 @@ read handle and unsynchronized cache corrupt concurrent restores).
 ``nproc`` is recorded per row: thread scaling is bounded by cores and,
 for pure-Python decode work, by the GIL — read syscalls release it.
 
+``--verify-reads`` instead runs the §13.2 integrity-overhead bench:
+the same cold+warm protocol with per-chunk crc32c verification off vs
+on against one container dir, emitting paired throughputs and the warm
+overhead percentage (guarded at ±15% — decode-cache hits skip
+re-verification, so warm reads only pay the checksum on misses).
+
 plus where the cold pass spent its time (read/decode seconds), the
 decode-cache hit/miss split, and cold read amplification (container
 bytes fetched per byte served).
@@ -66,12 +72,12 @@ RANGE_READS = 1000
 RANGE_BYTES = 64 << 10
 
 
-def _reopen(tmp: str) -> api.DedupStore:
+def _reopen(tmp: str, verify_reads: bool = False) -> api.DedupStore:
     """Serving-side store on an existing container dir (detector unused
     by the read path; dedup-only keeps reopen cheap)."""
     cfg = api.DedupConfig.from_dict(
         {"detector": "dedup-only", "backend": "file",
-         "backend_args": {"path": tmp}})
+         "backend_args": {"path": tmp}, "verify_reads": verify_reads})
     return api.build_store(cfg)
 
 
@@ -176,6 +182,66 @@ def run(base_size: int = 6 << 20, versions: int = 4,
                         common.mbps(comp_total, comp_s), 2),
                     **cold_row,
                     "dcr": round(dcr, 4),
+                })
+    return rows
+
+
+def run_verify(base_size: int = 6 << 20, versions: int = 4,
+               detectors=("card",), workloads=WORKLOADS,
+               avg_size: int = 8192, repeats: int = 3) -> list[dict]:
+    """Cost of per-chunk crc32c on the read path (DESIGN.md §13.2): the
+    identical cold+warm restore protocol with ``verify_reads`` off and
+    on against the same container dir, one paired row per (workload,
+    detector). ``warm_overhead_pct`` is the number the §13 guard cares
+    about — decode-cache hits skip re-verification, so a warm pass pays
+    the checksum only on its misses and the overhead must stay within
+    ±15% (``warm_within_guard``)."""
+    rows = []
+    for wl in workloads:
+        vs = common.make_versions(wl, base_size, versions)
+        for kind in detectors:
+            cfg = common.detector_config(kind, avg_size=avg_size)
+            with tempfile.TemporaryDirectory() as tmp:
+                cfg.backend, cfg.backend_args = "file", {"path": tmp}
+                store = api.build_store(cfg)
+                store.fit(list(vs[:1]))
+                handles = []
+                for v in vs:
+                    with store.open_stream() as s:
+                        s.write(v)
+                    handles.append(s.report.handle)
+                store.close()
+
+                timing = {}
+                for verify in (False, True):
+                    cold_s = warm_s = float("inf")
+                    for _rep in range(repeats):
+                        served = _reopen(tmp, verify_reads=verify)
+                        pass_s, total = _restore_all(served, handles)
+                        cold_s = min(cold_s, pass_s)
+                        warm_s = min(warm_s,
+                                     _restore_all(served, handles)[0])
+                        served.close()
+                    timing[verify] = (cold_s, warm_s, total)
+
+                (cold0, warm0, total) = timing[False]
+                (cold1, warm1, _) = timing[True]
+                warm_overhead = 100.0 * (warm1 - warm0) / warm0
+                rows.append({
+                    "bench": "restore_verify", "workload": wl,
+                    "detector": kind, "variant": "verify-reads",
+                    "versions": versions, "avg_size": avg_size,
+                    "bytes_mb": round(total / 2**20, 2),
+                    "cold_mbps": round(common.mbps(total, cold0), 2),
+                    "cold_verified_mbps": round(
+                        common.mbps(total, cold1), 2),
+                    "warm_mbps": round(common.mbps(total, warm0), 2),
+                    "warm_verified_mbps": round(
+                        common.mbps(total, warm1), 2),
+                    "cold_overhead_pct": round(
+                        100.0 * (cold1 - cold0) / cold0, 2),
+                    "warm_overhead_pct": round(warm_overhead, 2),
+                    "warm_within_guard": abs(warm_overhead) <= 15.0,
                 })
     return rows
 
@@ -305,6 +371,10 @@ def main():
     ap.add_argument("--threads", default=None,
                     help="comma list of thread counts: run the concurrent "
                          "serving bench instead of the serial sections")
+    ap.add_argument("--verify-reads", action="store_true",
+                    help="run the §13.2 verified-read overhead bench "
+                         "(cold+warm restore with per-chunk crc32c off "
+                         "vs on) instead of the serial sections")
     ap.add_argument("--metrics-dir", default=None,
                     help="also dump a per-row metrics snapshot (DESIGN.md "
                          "§12) into this directory (serial bench only)")
@@ -319,6 +389,17 @@ def main():
         else:
             rows = run_threaded(threads_list=counts, label=label)
         section = "restore_threads"
+    elif args.verify_reads:
+        label = args.label or "verify-reads"
+        if args.quick:
+            rows = run_verify(base_size=2 << 20, versions=3, repeats=1)
+        else:
+            rows = run_verify()
+        section = "restore_verify"
+        bad = [r for r in rows if not r["warm_within_guard"]]
+        if bad:
+            print(f"# WARNING: warm verify_reads overhead outside ±15% "
+                  f"guard in {len(bad)} row(s)")
     else:
         label = args.label or "planned"
         if args.quick:

@@ -1,0 +1,204 @@
+"""Chaos smoke gate (``make chaos-smoke``, DESIGN.md §13).
+
+Fails loudly — nonzero exit — unless the integrity machinery catches
+every fault this script injects:
+
+  * **bit-rot detection, 100% or bust**: flip one payload bit in each
+    of several known chunks per backend (file + objectstore); every
+    injected cid must show up in ``scrub().corrupt``, a verified read
+    of an affected stream must raise ``CorruptChunkError``, and after
+    ``scrub(repair=True)`` a fresh scrub — and a reopened store's
+    scrub — must be clean while untouched streams restore
+    byte-identically;
+  * **crash matrix, every registered point**: for each crashpoint in
+    ``registered_crashpoints()`` run the scripted
+    ingest/delete/collect/compact workload to the simulated kill,
+    snapshot the directory, reopen, and require
+    ``check_crash_invariants`` to hold (scrub clean, committed streams
+    byte-identical, deleted streams deleted, in-flight op atomic);
+  * **journal damage typing**: mid-file recipe-journal corruption must
+    raise ``CorruptJournalError`` on open, while a torn tail must
+    still open clean.
+
+    PYTHONPATH=src python -m benchmarks.chaos_smoke
+"""
+from __future__ import annotations
+
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from repro import api
+from repro.api import faults as F
+import repro.api.objectstore as osmod  # noqa: F401 - registers crashpoints
+from repro.api.objectstore import _OBJ_MASK, _OBJ_SHIFT
+
+FLIPS_PER_BACKEND = 3
+
+
+def check(cond: bool, what: str) -> None:
+    if not cond:
+        raise SystemExit(f"chaos-smoke FAILED: {what}")
+
+
+def _data(size: int, seed: int) -> bytes:
+    rng = np.random.default_rng(seed)
+    return bytes(rng.integers(0, 256, size, np.uint8))
+
+
+def _build(backend: str, root, injector=None) -> api.DedupStore:
+    args = {"path": str(root)}
+    if injector is not None:
+        args["faults"] = injector
+    return api.build_store(api.DedupConfig.from_dict(
+        {"detector": "card", "backend": backend, "backend_args": args,
+         "verify_reads": True}))
+
+
+def _payload_location(store, cid: int, root: Path, backend: str):
+    """(file path, absolute payload offset, length) of one stored chunk."""
+    _, _, voff, length = store.backend._index[cid]
+    if backend == "file":
+        return root / "chunks.log", voff, length
+    seq, off = voff >> _OBJ_SHIFT, voff & _OBJ_MASK
+    epoch = store.backend.epoch
+    return root / f"e{epoch:08d}" / "chunks" / f"{seq:08d}", off, length
+
+
+def bitrot_drill(backend: str) -> None:
+    with tempfile.TemporaryDirectory() as tmp:
+        root = Path(tmp) / "store"
+        store = _build(backend, root)
+        keep = _data(200_000, 1)
+        doomed = _data(200_000, 2)
+        store.fit([keep])
+        with store.open_stream() as s:
+            s.write(keep)
+        h_keep = s.report.handle
+        with store.open_stream() as s:
+            s.write(doomed)
+        h_doomed = s.report.handle
+        store.backend.flush()
+
+        victims = [c for c in store.backend.recipe(h_doomed)
+                   if c not in set(store.backend.recipe(h_keep))]
+        victims = victims[:FLIPS_PER_BACKEND]
+        check(len(victims) > 0, f"{backend}: no distinct chunks to corrupt")
+        for cid in victims:
+            path, off, length = _payload_location(store, cid, root, backend)
+            F.flip_bit(path, off + length // 2, bit=2)
+        store.backend._cache.retain(lambda cid: False)
+
+        raised = False
+        try:
+            store.restore(h_doomed)
+        except api.CorruptChunkError:
+            raised = True
+        check(raised, f"{backend}: verified read served corrupt bytes")
+
+        rep = store.scrub()
+        detected = set(rep.corrupt)
+        missed = [c for c in victims if c not in detected]
+        check(not missed,
+              f"{backend}: scrub missed injected corruption in {missed} "
+              f"(detected {sorted(detected)})")
+        check(h_doomed in rep.streams_lost,
+              f"{backend}: corrupt stream not reported lost")
+
+        fix = store.scrub(repair=True)
+        check(fix.repaired, f"{backend}: repair did nothing")
+        check(store.scrub().clean, f"{backend}: store dirty after repair")
+        check(store.restore(h_keep) == keep,
+              f"{backend}: repair damaged an untouched stream")
+        store.close()
+
+        reopened = _build(backend, root)
+        check(reopened.scrub().clean,
+              f"{backend}: quarantine did not survive reopen")
+        reopened.close()
+        print(f"  bit-rot [{backend}]: {len(victims)} flips injected, "
+              f"{len(victims)} detected, repair clean")
+
+
+def crash_matrix(backend: str, points: list[str]) -> None:
+    failed: dict[str, object] = {}
+    for point in points:
+        with tempfile.TemporaryDirectory() as tmp:
+            root = Path(tmp) / "store"
+            snap = Path(tmp) / "snap"
+            inj = F.FaultInjector()
+            store = _build(backend, root, inj)
+            d1 = _data(120_000, 3)
+            d2 = d1[:60_000] + _data(20_000, 4) + d1[60_000:]
+            store.fit([d1])
+            inj.arm(point)
+            run = F.run_crash_script(store, [
+                ("ingest", "a", d1), ("ingest", "b", d2),
+                ("delete", "a"), ("collect",), ("compact",),
+                ("ingest", "c", _data(90_000, 5)), ("flush",)])
+            F.snapshot_dir(root, snap)
+            F.abandon(store)
+            if run.crashed_at != point:
+                failed[point] = "crashpoint never fired"
+                continue
+            reopened = _build(backend, snap)
+            errors = F.check_crash_invariants(reopened, run)
+            reopened.close()
+            if errors:
+                failed[point] = errors
+    check(not failed, f"{backend}: crash matrix violations: {failed}")
+    print(f"  crash matrix [{backend}]: {len(points)} points, "
+          f"all invariants held")
+
+
+def journal_damage_drill() -> None:
+    with tempfile.TemporaryDirectory() as tmp:
+        root = Path(tmp) / "store"
+        store = _build("file", root)
+        data = _data(120_000, 6)
+        store.fit([data])
+        with store.open_stream() as s:
+            s.write(data)
+        h = s.report.handle
+        with store.open_stream() as s:
+            s.write(_data(60_000, 7))
+        store.close()
+        recipes = root / "recipes.jsonl"
+
+        # torn tail: must open clean and restore
+        pristine = recipes.read_bytes()
+        with open(recipes, "ab") as f:
+            f.write(b'{"recipe": [9')
+        store2 = _build("file", root)
+        check(store2.restore(h) == data, "torn tail broke recovery")
+        check(store2.scrub().clean, "torn tail left store dirty")
+        store2.close()
+
+        # mid-file damage: must be a typed, loud error
+        lines = pristine.splitlines(keepends=True)
+        lines[1] = b"@@garbage@@\n"
+        recipes.write_bytes(b"".join(lines))
+        typed = False
+        try:
+            _build("file", root)
+        except api.CorruptJournalError:
+            typed = True
+        check(typed, "mid-file journal damage was not a typed error")
+    print("  journal damage: torn tail recovered, mid-file damage typed")
+
+
+def main() -> None:
+    print("# chaos smoke (DESIGN.md §13)")
+    for backend in ("file", "objectstore"):
+        bitrot_drill(backend)
+    reg = F.registered_crashpoints()
+    crash_matrix("file", sorted(p for p in reg if p.startswith("file.")))
+    crash_matrix("objectstore",
+                 sorted(p for p in reg if p.startswith("objstore.")))
+    journal_damage_drill()
+    print("chaos-smoke OK")
+
+
+if __name__ == "__main__":
+    main()

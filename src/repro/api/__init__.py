@@ -15,6 +15,11 @@ Layers (DESIGN.md §2 and §7), each depending only on the ones above it:
                per-thread shards), structured trace spans (ring buffer +
                JSONL sink), Prometheus/JSON exporters and the dump/tail
                CLI (DESIGN.md §12)
+  faults       deterministic fault injection: FaultSchedule, named
+               crashpoints + FaultInjector, bit-flip/truncate helpers,
+               and the crash-script harness (DESIGN.md §13.4)
+  integrity    crc32c, typed corruption errors, and the scrub/repair
+               fsck walk behind DedupStore.scrub (DESIGN.md §13)
   refcount     chunk recipe/base refcounting for space reclamation
   restore      serving-path policy: restore planner (chain-grouped,
                topologically ordered, offset-sorted reads), byte-budgeted
@@ -119,6 +124,19 @@ _OBJECTSTORE_EXPORTS = frozenset({
     "S3ObjectClient", "TransientError",
 })
 
+# integrity + fault-injection layers (DESIGN.md §13) resolve lazily too:
+# both are leaf modules, but keeping them off the package-import path
+# keeps ``import repro.api`` lean and mirrors the objectstore treatment.
+# FaultSchedule/TransientError stay addressed through objectstore above
+# for compatibility (objectstore re-exports them from faults).
+_INTEGRITY_EXPORTS = frozenset({
+    "CorruptChunkError", "CorruptJournalError", "ScrubReport", "crc32c",
+})
+_FAULTS_EXPORTS = frozenset({
+    "FaultInjector", "RetryBudgetExceeded", "SimulatedCrash",
+    "register_crashpoint", "registered_crashpoints",
+})
+
 # same lazy treatment for the observability layer: repro.api.observe has
 # a ``python -m`` CLI of its own (dump/tail), so it must not be imported
 # at package-import time (DedupStore imports it on construction, which
@@ -135,4 +153,10 @@ def __getattr__(name: str):
     if name in _OBSERVE_EXPORTS:
         from repro.api import observe
         return getattr(observe, name)
+    if name in _INTEGRITY_EXPORTS:
+        from repro.api import integrity
+        return getattr(integrity, name)
+    if name in _FAULTS_EXPORTS:
+        from repro.api import faults
+        return getattr(faults, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

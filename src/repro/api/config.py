@@ -36,16 +36,24 @@ _KNOWN_KEYS = {"detector", "detector_args", "chunker", "chunker_args",
                "backend", "backend_args", "policy", "policy_args",
                "restore_cache_bytes", "restore_cache_shards",
                "restore_reader_fds", "restore_readahead",
-               "restore_coalesce_gap", "trace_path", "trace_ring_events"}
+               "restore_coalesce_gap", "verify_reads", "retry_deadline",
+               "trace_path", "trace_ring_events"}
 
-# serving-engine knobs (DESIGN.md §10, §11.3) -> backend factory kwargs;
-# each is forwarded only when set and only to factories that declare the
-# kwarg
+# serving/integrity knobs (DESIGN.md §10, §11.3, §13) -> backend factory
+# kwargs; each is forwarded only when set and only to factories that
+# declare the kwarg
 _BACKEND_KNOBS = {"restore_cache_bytes": "cache_bytes",
                   "restore_cache_shards": "cache_shards",
                   "restore_reader_fds": "reader_fds",
                   "restore_readahead": "readahead",
-                  "restore_coalesce_gap": "coalesce_gap"}
+                  "restore_coalesce_gap": "coalesce_gap",
+                  "verify_reads": "verify_reads",
+                  "retry_deadline": "retry_deadline"}
+
+# integer knobs validated in from_dict: knob name -> smallest legal value
+_INT_KNOB_FLOORS = {"restore_cache_bytes": 1, "restore_cache_shards": 1,
+                    "restore_reader_fds": 1, "restore_readahead": 0,
+                    "restore_coalesce_gap": 0}
 
 
 @dataclasses.dataclass
@@ -72,6 +80,14 @@ class DedupConfig:
     # their medium — 4 KiB for the file log, 1 MiB for object stores —
     # so set it only to override; 0 coalesces exactly-adjacent reads only.
     restore_coalesce_gap: int | None = None
+    # integrity knobs (DESIGN.md §13): verify_reads=True makes backends
+    # that persist checksums validate every payload on the read path,
+    # raising CorruptChunkError instead of serving garbage;
+    # retry_deadline bounds the object-store retry policy's total sleep
+    # per logical request (seconds) — exceeding it raises
+    # RetryBudgetExceeded (§13.5). None keeps each backend's default.
+    verify_reads: bool | None = None
+    retry_deadline: float | None = None
     # observability (DESIGN.md §12): every store gets a metrics registry
     # unconditionally; structured op tracing turns on only when one of
     # these is set. trace_path appends spans as JSONL (followable with
@@ -92,17 +108,26 @@ class DedupConfig:
         for name in ("detector", "chunker", "backend", "policy"):
             if not isinstance(getattr(cfg, name), str):
                 raise TypeError(f"{name} must be a registry name (str)")
-        for name in _BACKEND_KNOBS:
+        for name, floor in _INT_KNOB_FLOORS.items():
             value = getattr(cfg, name)
             if value is None:
                 continue
             # 0 is meaningful for readahead (serial reads) and for the
             # coalesce gap (merge exactly-adjacent reads only)
-            floor = (0 if name in ("restore_readahead",
-                                   "restore_coalesce_gap") else 1)
-            if not isinstance(value, int) or value < floor:
+            if (not isinstance(value, int) or isinstance(value, bool)
+                    or value < floor):
                 raise ValueError(f"{name} must be an int >= {floor}, "
                                  f"got {value!r}")
+        if cfg.verify_reads is not None and not isinstance(cfg.verify_reads,
+                                                           bool):
+            raise TypeError(f"verify_reads must be a bool, "
+                            f"got {cfg.verify_reads!r}")
+        deadline = cfg.retry_deadline
+        if deadline is not None and (isinstance(deadline, bool)
+                                     or not isinstance(deadline, (int, float))
+                                     or deadline < 0):
+            raise ValueError(f"retry_deadline must be a number >= 0 "
+                             f"(seconds), got {deadline!r}")
         if cfg.trace_path is not None and not isinstance(cfg.trace_path,
                                                          str):
             raise TypeError("trace_path must be a str (JSONL sink path)")

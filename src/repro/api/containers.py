@@ -42,13 +42,17 @@ from pathlib import Path
 from typing import Iterable, Protocol, Sequence, runtime_checkable
 
 from repro.api.concurrency import IoTelemetry
+from repro.api.faults import register_crashpoint
+from repro.api.integrity import (CorruptChunkError, CorruptJournalError,
+                                 crc32c)
 from repro.api.registry import register_backend
 from repro.api.restore import (DEFAULT_CACHE_BYTES, DEFAULT_CACHE_SHARDS,
                                ShardedDecodeCache, coalesce_reads,
                                plan_chains)
 from repro.core import delta
 
-_REC_HEADER = struct.Struct("<BqqQ")  # kind, cid, base, payload length
+_REC_HEADER = struct.Struct("<BqqQ")    # v1: kind, cid, base, payload length
+_REC_HEADER2 = struct.Struct("<BqqQI")  # v2 (§13.1): ... + payload crc32c
 _KIND_RAW = 0
 _KIND_DELTA = 1
 
@@ -61,8 +65,13 @@ _READ_MAX_RUN = 8 << 20
 
 # chunk-log file header: magic + compaction epoch. Logs written before the
 # header existed start directly with a record whose first byte is a kind
-# (0 or 1), never the magic's 'R', so both parse unambiguously.
+# (0 or 1), never the magic's 'R', so both parse unambiguously. RCL2
+# (§13.1) appends a crc32c to every record header; RCL1 logs still open
+# (their records scrub as ``unverifiable``) and keep appending v1 records
+# so one file never mixes record formats — the first compaction rewrites
+# the whole log as RCL2.
 _LOG_MAGIC = b"RCL1"
+_LOG_MAGIC2 = b"RCL2"
 _LOG_HEADER = struct.Struct("<4sQ")
 
 # serving-engine knobs (DESIGN.md §10): fds in the pread reader pool (=
@@ -70,6 +79,32 @@ _LOG_HEADER = struct.Struct("<4sQ")
 # fetcher keeps in flight ahead of the decode loop (0 disables readahead)
 DEFAULT_READER_FDS = 4
 DEFAULT_READAHEAD = 2
+
+# FileBackend crashpoints (DESIGN.md §13.4): every write/fsync/rename
+# boundary a kill can land on. Backends call them only when a
+# FaultInjector was threaded in via ``faults=``; the harness in
+# repro.api.faults enumerates this registry as its crash matrix.
+_CP_PUT_WRITTEN = register_crashpoint(
+    "file.put_many.written",
+    "after a group commit's buffered log append, before flush")
+_CP_RECIPE_APPENDED = register_crashpoint(
+    "file.recipe.appended",
+    "after a recipe journal line is written, before the commit flush")
+_CP_RETIRE_BEFORE_FSYNC = register_crashpoint(
+    "file.retire.before_fsync",
+    "after a retire tombstone is written, before its fsync")
+_CP_FLUSH_BEFORE_FSYNC = register_crashpoint(
+    "file.flush.before_fsync",
+    "after both file flushes, before the optional commit fsync")
+_CP_COMPACT_TMPS = register_crashpoint(
+    "file.compact.tmps_written",
+    "both compaction tmp files written+fsynced, before any rename")
+_CP_COMPACT_RECIPES_RENAMED = register_crashpoint(
+    "file.compact.recipes_renamed",
+    "recipes renamed into place, chunk log still the old one")
+_CP_COMPACT_DONE = register_crashpoint(
+    "file.compact.done",
+    "both renames durable, before in-memory state swaps")
 
 
 class _ReaderPool:
@@ -273,6 +308,41 @@ class PlannedChainReader:
     _obs = None
     _h_run_bytes = None
     _h_run_extents = None
+    _c_corrupt = None
+
+    # integrity defaults (§13): subclasses overwrite per instance —
+    # ``_crcs`` maps cid -> persisted payload crc32c (absent for records
+    # that predate checksums), ``_verify_reads`` turns on read-path
+    # verification, ``_faults`` threads a FaultInjector through the
+    # write-path crashpoints
+    _crcs: dict[int, int] = {}
+    _verify_reads = False
+    _faults = None
+
+    def _cp(self, point: str) -> None:
+        faults = self._faults
+        if faults is not None:
+            faults.crashpoint(point)
+
+    def checksum_of(self, cid: int) -> int | None:
+        """Persisted crc32c of the stored payload, or None when the
+        record predates checksums (scrub reports it unverifiable)."""
+        if cid not in self._index:
+            raise KeyError(cid)
+        return self._crcs.get(cid)
+
+    def _check_payload(self, cid: int, payload: bytes) -> None:
+        """Raise ``CorruptChunkError`` when a payload read off the
+        container does not match its persisted checksum; records without
+        one pass (there is nothing to verify them against)."""
+        expected = self._crcs.get(cid)
+        if expected is None:
+            return
+        actual = crc32c(payload)
+        if actual != expected:
+            if self._c_corrupt is not None:
+                self._c_corrupt.inc()
+            raise CorruptChunkError(cid, self._read_desc(), expected, actual)
 
     def bind_observability(self, obs) -> None:
         """Attach a store's ``Observability`` (DESIGN.md §12): coalesced
@@ -291,6 +361,9 @@ class PlannedChainReader:
             "repro_reader_run_extents",
             "Records served by one coalesced read run",
             bounds=om.COUNT_BUCKETS)
+        self._c_corrupt = m.counter(
+            "repro_corrupt_chunks_total",
+            "Payload checksum failures on the verified read path (§13.2)")
         tel, cache = self._telemetry, self._cache
         c_seconds = {p: m.counter("repro_reader_io_seconds_total",
                                   "Lifetime read vs. decode time",
@@ -411,10 +484,13 @@ class PlannedChainReader:
         # cache lookup (re-probing `cid` would double-count the miss in
         # the §9.4 telemetry).
         chain: list[tuple[int, bytes]] = []
+        verify = self._verify_reads
         cur = cid
         while True:
             kind, base, offset, length = self._index[cur]  # KeyError
             payload = self._read_payload(offset, length)   # before I/O
+            if verify:
+                self._check_payload(cur, payload)
             if kind == _KIND_RAW:
                 data = payload
                 self._cache.put(cur, data)
@@ -513,6 +589,8 @@ class PlannedChainReader:
                 order = plan.decode_order
                 decode_pos = 0
 
+                verify = self._verify_reads
+
                 def ingest_run(run: tuple, blob: bytes) -> None:
                     start, end, extents = run
                     tel.bytes_read += len(blob)
@@ -523,8 +601,10 @@ class PlannedChainReader:
                             f"{self._read_desc()}, got {len(blob)}")
                     view = memoryview(blob)
                     for off, ln, cid in extents:
-                        payloads[cid] = bytes(
-                            view[off - start:off - start + ln])
+                        payload = bytes(view[off - start:off - start + ln])
+                        if verify:      # per-chunk, coalesced span or not
+                            self._check_payload(cid, payload)
+                        payloads[cid] = payload
 
                 def decode_ready() -> None:
                     # decode the available prefix of the topological
@@ -667,8 +747,10 @@ class PlannedChainReader:
 
     def record(self, cid: int) -> tuple[int, int, bytes]:
         kind, base, offset, length = self._index[cid]
-        return (kind, base if kind == _KIND_DELTA else -1,
-                self._read_payload(offset, length))
+        payload = self._read_payload(offset, length)
+        if self._verify_reads:
+            self._check_payload(cid, payload)
+        return (kind, base if kind == _KIND_DELTA else -1, payload)
 
     def recipe(self, handle: int) -> list[int]:
         if not 0 <= handle < len(self._recipes):    # no negative aliasing
@@ -699,6 +781,7 @@ class InMemoryBackend:
     def __init__(self) -> None:
         self._kind: dict[int, tuple] = {}   # cid -> (RAW,) | (DELTA, base, patch)
         self._data: dict[int, bytes] = {}   # cid -> materialized bytes
+        self._crcs: dict[int, int] = {}     # cid -> crc32c of stored payload
         self._recipes: list[list[int] | None] = []
         self._recipe_lens: dict[int, list[int]] = {}
         self.epoch = 0
@@ -706,10 +789,12 @@ class InMemoryBackend:
     def put_raw(self, cid: int, data: bytes) -> None:
         self._kind[cid] = (_KIND_RAW,)
         self._data[cid] = data
+        self._crcs[cid] = crc32c(data)
 
     def put_delta(self, cid: int, base: int, patch: bytes,
                   data: bytes | None = None) -> None:
         self._kind[cid] = (_KIND_DELTA, base, patch)
+        self._crcs[cid] = crc32c(patch)
         if data is None:
             data = delta.decode(patch, self.get(base))
         self._data[cid] = data
@@ -754,6 +839,19 @@ class InMemoryBackend:
             return (_KIND_DELTA, rec[1], rec[2])
         return (_KIND_RAW, -1, self._data[cid])
 
+    def checksum_of(self, cid: int) -> int | None:
+        if cid not in self._kind:
+            raise KeyError(cid)
+        return self._crcs.get(cid)
+
+    def drop_chunks(self, cids: Sequence[int]) -> None:
+        """Quarantine: forget ``cids`` entirely (scrub --repair, §13.3).
+        Callers guarantee no live recipe references them."""
+        for cid in cids:
+            self._kind.pop(int(cid), None)
+            self._data.pop(int(cid), None)
+            self._crcs.pop(int(cid), None)
+
     def add_recipe(self, chunk_ids: Sequence[int],
                    lengths: Sequence[int] | None = None) -> int:
         self._recipes.append([int(c) for c in chunk_ids])
@@ -792,15 +890,18 @@ class InMemoryBackend:
     def rewrite_live(self, records: Iterable[tuple[int, int, int, bytes]]) -> None:
         kept_data: dict[int, bytes] = {}
         kept_kind: dict[int, tuple] = {}
+        kept_crcs: dict[int, int] = {}
         for cid, kind, base, payload in records:
             if kind == _KIND_DELTA:
                 kept_kind[cid] = (_KIND_DELTA, base, payload)
             else:
                 kept_kind[cid] = (_KIND_RAW,)
+            kept_crcs[cid] = crc32c(payload)
             # materialized content is invariant under compaction
             kept_data[cid] = self._data[cid]
         self._kind = kept_kind
         self._data = kept_data
+        self._crcs = kept_crcs
         self.epoch += 1
 
     def flush(self) -> None:
@@ -815,15 +916,18 @@ class FileBackend(PlannedChainReader):
     """Append-only on-disk containers.
 
     Layout under `path`:
-        chunks.log     [RCL1 epoch] then [header cid base len][payload]
-                       records, appended
+        chunks.log     [RCL2 epoch] then [kind cid base len crc32c]
+                       [payload] records, appended (RCL1 / pre-magic
+                       logs have no crc field and still open; §13.1)
         recipes.jsonl  {"epoch": N} header line, then one line per handle
                        slot: {"recipe": ids, "lens": lengths} (live
                        recipe with materialized chunk lengths for ranged
                        restores), a bare JSON array (live recipe written
                        before lengths existed), ``null`` (slot retired
-                       before the last compaction), or {"retire": h}
-                       (tombstone appended by a delete)
+                       before the last compaction), {"retire": h}
+                       (tombstone appended by a delete), or
+                       {"quarantine": [cids]} (scrub --repair drop,
+                       §13.3)
 
     An index {cid -> (kind, base, offset, length)} is rebuilt by scanning
     the log on open, so a fresh FileBackend on an existing directory can
@@ -853,7 +957,9 @@ class FileBackend(PlannedChainReader):
                  cache_shards: int | None = None,
                  reader_fds: int | None = None,
                  readahead: int | None = None,
-                 coalesce_gap: int | None = None) -> None:
+                 coalesce_gap: int | None = None,
+                 verify_reads: bool = False,
+                 faults=None) -> None:
         """``fsync_on_flush=True`` makes every ``flush()`` (one per
         committed stream — group commit, DESIGN.md §8) durable with a
         single fsync per file; the default keeps the historical
@@ -867,9 +973,14 @@ class FileBackend(PlannedChainReader):
         ``coalesce_gap`` is the largest hole (bytes of unwanted data)
         two records may straddle and still be fetched in one pread
         (default 4 KiB — one page of waste; object stores use MB-scale
-        gaps, §11.3)."""
+        gaps, §11.3). ``verify_reads`` checks every payload read off the
+        log against its persisted crc32c (§13.2); ``faults`` threads a
+        ``repro.api.faults.FaultInjector`` through the write-path
+        crashpoints (tests only)."""
         self.path = Path(path)
         self._fsync_on_flush = fsync_on_flush
+        self._verify_reads = bool(verify_reads)
+        self._faults = faults
         self.path.mkdir(parents=True, exist_ok=True)
         self._log_path = self.path / "chunks.log"
         self._recipes_path = self.path / "recipes.jsonl"
@@ -878,6 +989,11 @@ class FileBackend(PlannedChainReader):
             if tmp.exists():        # abandoned mid-compaction; originals win
                 tmp.unlink()
         self._index: dict[int, tuple[int, int, int, int]] = {}
+        self._crcs: dict[int, int] = {}
+        # one file never mixes record formats: fresh/empty logs start as
+        # RCL2 (checksummed records), existing RCL1/pre-magic logs keep
+        # appending v1 records until the first compaction rewrites them
+        self._log_v2 = True
         self._cache = ShardedDecodeCache(
             cache_bytes if cache_bytes is not None else DEFAULT_CACHE_BYTES,
             shards=cache_shards if cache_shards is not None
@@ -900,9 +1016,11 @@ class FileBackend(PlannedChainReader):
         self._max_run = _READ_MAX_RUN
         self.epoch = 0
         self._scan()
+        self.record_overhead = (_REC_HEADER2.size if self._log_v2
+                                else _REC_HEADER.size)
         self._log = open(self._log_path, "ab")
         if self._log.tell() == 0:
-            self._log.write(_LOG_HEADER.pack(_LOG_MAGIC, self.epoch))
+            self._log.write(_LOG_HEADER.pack(_LOG_MAGIC2, self.epoch))
         self._recipes_f = open(self._recipes_path, "a")
         if self._recipes_f.tell() == 0:
             self._recipes_f.write(json.dumps({"epoch": self.epoch}) + "\n")
@@ -937,19 +1055,30 @@ class FileBackend(PlannedChainReader):
             good_end = 0
             with open(self._log_path, "rb") as f:
                 head = f.read(_LOG_HEADER.size)
-                if len(head) == _LOG_HEADER.size and head[:4] == _LOG_MAGIC:
+                if len(head) == _LOG_HEADER.size and head[:4] in (
+                        _LOG_MAGIC, _LOG_MAGIC2):
                     log_epoch = _LOG_HEADER.unpack(head)[1]
                     good_end = _LOG_HEADER.size
+                    self._log_v2 = head[:4] == _LOG_MAGIC2
                 else:
                     f.seek(0)       # pre-epoch log: records start at 0
+                    self._log_v2 = size == 0    # never mix record formats
+                rec_header = _REC_HEADER2 if self._log_v2 else _REC_HEADER
                 while True:
-                    header = f.read(_REC_HEADER.size)
-                    if len(header) < _REC_HEADER.size:
+                    header = f.read(rec_header.size)
+                    if len(header) < rec_header.size:
                         break
-                    kind, cid, base, length = _REC_HEADER.unpack(header)
+                    if self._log_v2:
+                        kind, cid, base, length, crc = rec_header.unpack(
+                            header)
+                    else:
+                        kind, cid, base, length = rec_header.unpack(header)
+                        crc = None
                     if f.tell() + length > size:      # torn payload tail
                         break
                     self._index[cid] = (kind, base, f.tell(), length)
+                    if crc is not None:
+                        self._crcs[cid] = crc
                     f.seek(length, 1)
                     good_end = f.tell()
             if good_end < size:   # drop the torn bytes so later appends
@@ -957,45 +1086,62 @@ class FileBackend(PlannedChainReader):
         if self._recipes_path.exists():
             good_end = 0
             torn = False
-            first = True
             with open(self._recipes_path, "rb") as f:
-                for line in f:
-                    # an unterminated final line is torn even when it
-                    # parses — the next append would merge onto it
-                    if not line.endswith(b"\n"):
-                        torn = True
-                        break
-                    if line.strip():
-                        try:
-                            entry = json.loads(line)
-                        except json.JSONDecodeError:  # torn recipe tail
+                lines = f.readlines()
+            for i, line in enumerate(lines):
+                last = i == len(lines) - 1
+                # an unterminated final line is torn even when it
+                # parses — the next append would merge onto it
+                if not line.endswith(b"\n"):
+                    torn = True
+                    break
+                if line.strip():
+                    try:
+                        entry = json.loads(line)
+                    except json.JSONDecodeError:
+                        if last:            # torn recipe tail
                             torn = True
                             break
-                        if isinstance(entry, dict):
-                            if first and "epoch" in entry:
-                                recipes_epoch = int(entry["epoch"])
-                            elif "retire" in entry:
-                                h = int(entry["retire"])
-                                if 0 <= h < len(self._recipes):
-                                    self._recipes[h] = None
-                                    self._recipe_lens.pop(h, None)
-                            elif "recipe" in entry:
-                                rec = entry["recipe"]
-                                self._recipes.append(rec)
-                                if rec:
-                                    self._max_recipe_cid = max(
-                                        self._max_recipe_cid, max(rec))
-                                lens = entry.get("lens")
-                                if lens is not None:
-                                    self._recipe_lens[
-                                        len(self._recipes) - 1] = lens
-                        else:   # list = live recipe, null = retired slot
-                            self._recipes.append(entry)
-                            if entry:
+                        # a malformed line with durable lines AFTER it is
+                        # not a torn tail — truncating here would silently
+                        # drop committed streams (§13.3): fail loudly
+                        raise CorruptJournalError(
+                            self._recipes_path, i + 1,
+                            "unparseable journal line before end of file")
+                    if isinstance(entry, dict):
+                        if i == 0 and "epoch" in entry:
+                            recipes_epoch = int(entry["epoch"])
+                        elif "retire" in entry:
+                            h = int(entry["retire"])
+                            if 0 <= h < len(self._recipes):
+                                self._recipes[h] = None
+                                self._recipe_lens.pop(h, None)
+                        elif "quarantine" in entry:
+                            # scrub --repair dropped these cids (§13.3):
+                            # un-index them, but burn their ids so they
+                            # are never reissued to new content
+                            for cid in entry["quarantine"]:
+                                cid = int(cid)
+                                self._index.pop(cid, None)
+                                self._crcs.pop(cid, None)
                                 self._max_recipe_cid = max(
-                                    self._max_recipe_cid, max(entry))
-                    first = False
-                    good_end += len(line)
+                                    self._max_recipe_cid, cid)
+                        elif "recipe" in entry:
+                            rec = entry["recipe"]
+                            self._recipes.append(rec)
+                            if rec:
+                                self._max_recipe_cid = max(
+                                    self._max_recipe_cid, max(rec))
+                            lens = entry.get("lens")
+                            if lens is not None:
+                                self._recipe_lens[
+                                    len(self._recipes) - 1] = lens
+                    else:   # list = live recipe, null = retired slot
+                        self._recipes.append(entry)
+                        if entry:
+                            self._max_recipe_cid = max(
+                                self._max_recipe_cid, max(entry))
+                good_end += len(line)
             if torn:
                 os.truncate(self._recipes_path, good_end)
         # Joint-truncation hardening (DESIGN.md §10.6): the two files'
@@ -1032,13 +1178,25 @@ class FileBackend(PlannedChainReader):
         # apart; both file states are consistent (see module docstring)
         self.epoch = max(log_epoch, recipes_epoch)
 
+    def _pack_header(self, kind: int, cid: int, base: int,
+                     payload: bytes) -> tuple[bytes, int | None]:
+        if self._log_v2:
+            crc = crc32c(payload)
+            return (_REC_HEADER2.pack(kind, cid, base, len(payload), crc),
+                    crc)
+        return _REC_HEADER.pack(kind, cid, base, len(payload)), None
+
     def _append(self, kind: int, cid: int, base: int, payload: bytes) -> None:
+        header, crc = self._pack_header(kind, cid, base, payload)
         with self._io_lock:
-            self._log.write(_REC_HEADER.pack(kind, cid, base, len(payload)))
+            self._log.write(header)
             offset = self._log.tell()
             self._log.write(payload)
             self._log_dirty = True
         self._index[cid] = (kind, base, offset, len(payload))
+        if crc is not None:
+            self._crcs[cid] = crc
+        self._cp(_CP_PUT_WRITTEN)
 
     def put_raw(self, cid: int, data: bytes) -> None:
         self._append(_KIND_RAW, cid, -1, data)
@@ -1065,10 +1223,12 @@ class FileBackend(PlannedChainReader):
                 kind = _KIND_RAW if base < 0 else _KIND_DELTA
                 if kind == _KIND_RAW:
                     data = payload
-                buf += _REC_HEADER.pack(kind, cid, base if kind else -1,
-                                        len(payload))
+                header, crc = self._pack_header(kind, cid,
+                                                base if kind else -1,
+                                                payload)
+                buf += header
                 entries.append((cid, kind, base if kind else -1,
-                                start + len(buf), len(payload), data))
+                                start + len(buf), len(payload), crc, data))
                 buf += payload
             if not buf:
                 return
@@ -1076,10 +1236,13 @@ class FileBackend(PlannedChainReader):
             # must not leave phantom index entries at never-written offsets
             self._log.write(bytes(buf))
             self._log_dirty = True
-        for cid, kind, base, offset, length, data in entries:
+        for cid, kind, base, offset, length, crc, data in entries:
             self._index[cid] = (kind, base, offset, length)
+            if crc is not None:
+                self._crcs[cid] = crc
             if data is not None:
                 self._cache.put(cid, data)
+        self._cp(_CP_PUT_WRITTEN)
 
     def _flush_if_dirty(self) -> None:
         # double-checked: readers skip the lock entirely once clean
@@ -1103,6 +1266,7 @@ class FileBackend(PlannedChainReader):
             self._recipe_lens[handle] = lens
             self._recipes_f.write(
                 json.dumps({"recipe": recipe, "lens": lens}) + "\n")
+        self._cp(_CP_RECIPE_APPENDED)
         return handle
 
     def retire_recipe(self, handle: int) -> None:
@@ -1113,8 +1277,30 @@ class FileBackend(PlannedChainReader):
         # deletes are rare and irreversible-by-intent: fsync the tombstone
         # so a power loss cannot resurrect the stream (commits stay
         # flush-only; resurrecting a never-reported commit is harmless)
+        self._cp(_CP_RETIRE_BEFORE_FSYNC)
         self._recipes_f.flush()
         os.fsync(self._recipes_f.fileno())
+
+    def drop_chunks(self, cids: Sequence[int]) -> None:
+        """Quarantine: durably un-index ``cids`` (scrub --repair, §13.3).
+        A fsync'd ``{"quarantine": [...]}`` journal line records the drop
+        — the records stay physically in the log (append-only) but are
+        dead to the index on every future open, and their ids are burned
+        so they can never be reissued. Callers guarantee no live recipe
+        still references them and nothing deltas against them."""
+        cids = sorted(int(c) for c in cids)
+        if not cids:
+            return
+        self._recipes_f.write(json.dumps({"quarantine": cids}) + "\n")
+        self._recipes_f.flush()
+        os.fsync(self._recipes_f.fileno())
+        dropped = set()
+        for cid in cids:
+            if self._index.pop(cid, None) is not None:
+                dropped.add(cid)
+            self._crcs.pop(cid, None)
+            self._max_recipe_cid = max(self._max_recipe_cid, cid)
+        self._cache.retain(lambda cid: cid not in dropped)
 
     def storage_bytes(self) -> int:
         self.flush()
@@ -1140,12 +1326,18 @@ class FileBackend(PlannedChainReader):
         files (the stale tmps are cleaned on the next open)."""
         new_epoch = self.epoch + 1
         new_index: dict[int, tuple[int, int, int, int]] = {}
+        new_crcs: dict[int, int] = {}
+        # compaction always writes the current format: an RCL1 log is
+        # upgraded to RCL2 here, gaining checksums for every record
         log_tmp = self._log_path.with_suffix(".log.tmp")
         with open(log_tmp, "wb") as f:
-            f.write(_LOG_HEADER.pack(_LOG_MAGIC, new_epoch))
+            f.write(_LOG_HEADER.pack(_LOG_MAGIC2, new_epoch))
             for cid, kind, base, payload in records:
-                f.write(_REC_HEADER.pack(kind, cid, base, len(payload)))
+                crc = crc32c(payload)
+                f.write(_REC_HEADER2.pack(kind, cid, base, len(payload),
+                                          crc))
                 new_index[cid] = (kind, base, f.tell(), len(payload))
+                new_crcs[cid] = crc
                 f.write(payload)
             f.flush()
             os.fsync(f.fileno())
@@ -1163,9 +1355,11 @@ class FileBackend(PlannedChainReader):
             os.fsync(f.fileno())
 
         self.flush()                        # don't lose buffered appends
+        self._cp(_CP_COMPACT_TMPS)
         os.replace(recipes_tmp, self._recipes_path)
         try:
             self._fsync_dir()               # recipes durably renamed first
+            self._cp(_CP_COMPACT_RECIPES_RENAMED)
             os.replace(log_tmp, self._log_path)
             self._fsync_dir()
         finally:
@@ -1176,9 +1370,13 @@ class FileBackend(PlannedChainReader):
             self._recipes_f.close()
             self._recipes_f = open(self._recipes_path, "a")
 
+        self._cp(_CP_COMPACT_DONE)
         self._log.close()
         self.epoch = new_epoch
         self._index = new_index
+        self._crcs = new_crcs
+        self._log_v2 = True
+        self.record_overhead = _REC_HEADER2.size
         self._cache.retain(new_index.__contains__)
         self._log = open(self._log_path, "ab")
         self._pool.reopen()     # fresh fds on the renamed-into-place log
@@ -1189,6 +1387,7 @@ class FileBackend(PlannedChainReader):
             self._log.flush()
             self._log_dirty = False
             self._recipes_f.flush()
+            self._cp(_CP_FLUSH_BEFORE_FSYNC)
             if self._fsync_on_flush:
                 os.fsync(self._log.fileno())
                 os.fsync(self._recipes_f.fileno())

@@ -154,6 +154,23 @@ def _observe_gc(store: Any, phase: str, seconds: float,
         tr.record("gc." + phase, seconds, **labels)
 
 
+def rebind_store_views(store: Any) -> None:
+    """Rederive the store's in-memory views from durable backend state
+    after the record set changed shape underneath them (compaction here,
+    scrub repair in ``repro.api.integrity``): rebuild the refcount table,
+    drop digests of records no longer held (future ingests must not dedup
+    against vanished payloads), and refresh the lifecycle stats. Ranged-
+    restore prefix sums (``store._layouts``) survive — chunk lengths are
+    invariant under rebasing, and repair pops the layouts of the streams
+    it retires itself."""
+    backend = store.backend
+    store._refs = RefcountTable.rebuild(backend)
+    store._by_digest = {d: c for d, c in store._by_digest.items()
+                        if backend.contains(c)}
+    store._refresh_lifecycle_stats()
+    store._compact_skipped_at = None    # state changed; sizing is fresh
+
+
 def delete_stream(store: Any, handle: int) -> int:
     """Retire stream `handle` and release its chunk references. Returns
     the logical bytes the delete made reclaimable (dead + newly pinned).
@@ -291,11 +308,8 @@ def compact(store: Any) -> CompactionRun:
     # never materialized bytes, so every live recipe's chunk lengths —
     # and the lengths persisted next to the recipes — are invariant
     # under compaction (pinned by tests/test_restore.py).
-    store._refs = RefcountTable.rebuild(backend)
-    store._by_digest = {d: c for d, c in store._by_digest.items() if c in keep}
-    store._refresh_lifecycle_stats()
+    rebind_store_views(store)
     store.stats.reclaimed_bytes += bytes_before - bytes_after
-    store._compact_skipped_at = None        # state changed; sizing is fresh
 
     seconds = time.perf_counter() - t0
     reclaimed = bytes_before - bytes_after

@@ -40,10 +40,13 @@ only *missing* objects):
     e{epoch:08d}/journal/{seq:08d}.json
                                 journal objects, each a JSON list of
                                 entries replayed in order on open:
-                                {"chunks": [[cid,kind,base,seq,off,len]..]},
+                                {"chunks": [[cid,kind,base,seq,off,len,
+                                crc32c]..]} (pre-§13 rows lack the crc),
                                 {"recipe": ids, "lens": lens},
-                                {"retire": handle}, and the consolidated
-                                {"recipes": [...]} written by compaction
+                                {"retire": handle}, {"quarantine":
+                                [cids]} (scrub --repair), and the
+                                consolidated {"recipes": [...]} written
+                                by compaction
 
 Addressing: the index maps ``cid -> (kind, base, voff, length)`` where
 ``voff = seq << 40 | offset`` is a *virtual* offset. Chain plans sort
@@ -68,6 +71,7 @@ import argparse
 import hashlib
 import json
 import os
+import random
 import sys
 import threading
 import time
@@ -77,6 +81,11 @@ from typing import Callable, Iterable, Sequence
 from repro.api.concurrency import IoTelemetry
 from repro.api.containers import (_KIND_DELTA, _KIND_RAW, DEFAULT_READAHEAD,
                                   PlannedChainReader)
+# canonical home of the fault machinery is repro.api.faults (§13.4); the
+# re-exports keep the historical import path working
+from repro.api.faults import (FaultSchedule, RetryBudgetExceeded,  # noqa: F401
+                              TransientError, register_crashpoint)
+from repro.api.integrity import crc32c
 from repro.api.registry import register_backend
 from repro.api.restore import (DEFAULT_CACHE_BYTES, DEFAULT_CACHE_SHARDS,
                                ShardedDecodeCache)
@@ -102,41 +111,33 @@ DEFAULT_RETRY_BACKOFF = 0.05    # doubles per attempt: 50/100/200/400 ms
 
 _MANIFEST_KEY = "manifest.json"
 
-
-class TransientError(Exception):
-    """A retryable object-store failure — the moral equivalent of HTTP
-    429/500/503 or a socket timeout. ``ObjectStoreBackend`` retries
-    these with exponential backoff; anything else propagates."""
-
-    def __init__(self, status: int = 503,
-                 msg: str = "transient object-store error") -> None:
-        super().__init__(f"{status}: {msg}")
-        self.status = status
-
-
-class FaultSchedule:
-    """A ``fault_hook`` that fails chosen per-op request ordinals.
-
-    ``FaultSchedule({"get": [2, 3]})`` raises a ``TransientError`` on
-    the 2nd and 3rd GET-class requests (counting per op, 1-based) and
-    lets everything else through — deterministic, so tests can assert
-    exactly how many retries a restore needed."""
-
-    def __init__(self, fail: dict[str, Sequence[int]],
-                 status: int = 503) -> None:
-        self._fail = {op: set(int(n) for n in ns) for op, ns in fail.items()}
-        self._status = status
-        self._seen: dict[str, int] = {}
-        self._lock = threading.Lock()
-
-    def __call__(self, op: str, key: str, n: int) -> Exception | None:
-        with self._lock:
-            k = self._seen.get(op, 0) + 1
-            self._seen[op] = k
-        if k in self._fail.get(op, ()):
-            return TransientError(self._status,
-                                  f"injected fault: {op} #{k} ({key})")
-        return None
+# ObjectStoreBackend crashpoints (DESIGN.md §13.4): every PUT boundary a
+# kill can land on. Fired only when a FaultInjector was threaded in via
+# ``faults=``.
+_CP_LOCALPUT_BEFORE_RENAME = register_crashpoint(
+    "objstore.localput.before_rename",
+    "LocalObjectStore PUT: tmp written+fsynced, before the rename")
+_CP_FLUSH_BEFORE_CONTAINER = register_crashpoint(
+    "objstore.flush.before_container_put",
+    "commit flush entered, before the container object PUT")
+_CP_FLUSH_BETWEEN_PUTS = register_crashpoint(
+    "objstore.flush.between_puts",
+    "container object PUT landed, journal PUT not yet issued")
+_CP_FLUSH_AFTER_JOURNAL = register_crashpoint(
+    "objstore.flush.after_journal_put",
+    "journal PUT landed, before in-memory staging resets")
+_CP_RETIRE_BEFORE_FLUSH = register_crashpoint(
+    "objstore.retire.before_flush",
+    "retire entry journaled in memory, before its durable flush PUT")
+_CP_COMPACT_CONTAINERS_PUT = register_crashpoint(
+    "objstore.compact.containers_put",
+    "all new-epoch container objects PUT, journal not yet")
+_CP_COMPACT_JOURNAL_PUT = register_crashpoint(
+    "objstore.compact.journal_put",
+    "new-epoch consolidated journal PUT, manifest not yet flipped")
+_CP_COMPACT_MANIFEST_FLIPPED = register_crashpoint(
+    "objstore.compact.manifest_flipped",
+    "manifest flipped to the new epoch, old epoch not yet deleted")
 
 
 class LocalObjectStore:
@@ -158,12 +159,14 @@ class LocalObjectStore:
     def __init__(self, root: str | Path, latency: float = 0.0,
                  bandwidth_bps: float | None = None,
                  fault_hook: Callable[[str, str, int],
-                                      Exception | None] | None = None) -> None:
+                                      Exception | None] | None = None,
+                 faults=None) -> None:
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.latency = float(latency)
         self.bandwidth_bps = bandwidth_bps
         self.fault_hook = fault_hook
+        self.faults = faults    # FaultInjector for the PUT crashpoint
         self._lock = threading.Lock()
         self.requests = 0
         self.op_counts: dict[str, int] = {}
@@ -206,6 +209,8 @@ class LocalObjectStore:
             f.write(data)
             f.flush()
             os.fsync(f.fileno())
+        if self.faults is not None:
+            self.faults.crashpoint(_CP_LOCALPUT_BEFORE_RENAME)
         os.replace(tmp, path)
         self._bill("put", len(data))
 
@@ -399,7 +404,10 @@ class ObjectStoreBackend(PlannedChainReader):
                  fetchers: int | None = None,
                  max_object_bytes: int | None = None,
                  max_retries: int | None = None,
-                 retry_backoff: float | None = None) -> None:
+                 retry_backoff: float | None = None,
+                 retry_deadline: float | None = None,
+                 verify_reads: bool = False,
+                 faults=None) -> None:
         """Either ``path`` (a ``LocalObjectStore`` is built over it,
         forwarding ``latency``/``bandwidth_bps``/``fault_hook``) or an
         explicit ``client`` with the same surface. The serving knobs
@@ -407,15 +415,23 @@ class ObjectStoreBackend(PlannedChainReader):
         ``coalesce_gap``) mean what they do on ``FileBackend`` —
         ``coalesce_gap`` just defaults six orders of magnitude larger
         (§11.3). ``fetchers`` sizes the concurrent GET pool,
-        ``max_retries``/``retry_backoff`` the transient-failure budget."""
+        ``max_retries``/``retry_backoff``/``retry_deadline`` the
+        transient-failure budget (§13.5: backoff is decorrelated-jittered
+        and total sleep per logical request is capped by the deadline).
+        ``verify_reads`` checks every payload against its journaled
+        crc32c (§13.2); ``faults`` threads a FaultInjector through the
+        PUT-boundary crashpoints (tests only)."""
         if client is None:
             if path is None:
                 raise ValueError("ObjectStoreBackend needs a path (local "
                                  "object root) or an explicit client")
             client = LocalObjectStore(path, latency=latency,
                                       bandwidth_bps=bandwidth_bps,
-                                      fault_hook=fault_hook)
+                                      fault_hook=fault_hook, faults=faults)
         self.client = client
+        self._verify_reads = bool(verify_reads)
+        self._faults = faults
+        self._crcs: dict[int, int] = {}
         self._desc = f"objects at {getattr(client, 'root', None) or getattr(client, 'bucket', '?')}"
         self._max_object_bytes = (DEFAULT_OBJECT_BYTES
                                   if max_object_bytes is None
@@ -424,6 +440,15 @@ class ObjectStoreBackend(PlannedChainReader):
                              else max(0, int(max_retries)))
         self._backoff = (DEFAULT_RETRY_BACKOFF if retry_backoff is None
                          else float(retry_backoff))
+        # total seconds one logical request may spend ASLEEP across its
+        # retries before RetryBudgetExceeded; None = attempts-only budget
+        self._retry_deadline = (None if retry_deadline is None
+                                else max(0.0, float(retry_deadline)))
+        # decorrelated jitter needs a private RNG (never the global one —
+        # tests seed that); the cap keeps one sleep bounded at what the
+        # old deterministic schedule's final doubling would have been
+        self._retry_rng = random.Random()
+        self._backoff_cap = self._backoff * (1 << self._max_retries)
         self.retries = 0        # transient failures absorbed (lifetime)
         self._fetchers = (DEFAULT_FETCHERS if fetchers is None
                           else max(1, int(fetchers)))
@@ -514,29 +539,42 @@ class ObjectStoreBackend(PlannedChainReader):
     # --- request plumbing ----------------------------------------------------
 
     def _call(self, fn, *args):
-        """Issue one client request with the retry policy (§11.2): on
-        ``TransientError`` sleep ``backoff * 2^attempt`` and reissue, up
-        to ``max_retries`` reissues; then the error propagates. Every
-        attempt — including failed ones — shows up in the client's own
-        request counters; ``self.retries`` totals the absorbed faults.
-        When an Observability is bound, every attempt also lands in the
-        per-op latency histogram and each absorbed fault books its
-        backoff into the counter (plus an ``objstore.retry`` span when
-        tracing is on)."""
+        """Issue one client request with the retry policy (§11.2/§13.5):
+        on ``TransientError`` sleep a decorrelated-jittered backoff
+        (``uniform(base, 3 * previous_sleep)``, capped at
+        ``backoff * 2^max_retries``) and reissue, up to ``max_retries``
+        reissues AND at most ``retry_deadline`` total seconds asleep —
+        whichever budget runs out first. Exhausting the attempt budget
+        re-raises the last ``TransientError``; exhausting the deadline
+        raises ``RetryBudgetExceeded`` carrying the attempt count and
+        slept seconds. Every attempt — including failed ones — shows up
+        in the client's own request counters; ``self.retries`` totals
+        the absorbed faults. When an Observability is bound, every
+        attempt also lands in the per-op latency histogram and each
+        absorbed fault books its backoff into the counter (plus an
+        ``objstore.retry`` span when tracing is on)."""
         hists = self._h_req_seconds
         h = (hists[self._OP_LABELS.get(fn.__name__, fn.__name__)]
              if hists is not None else None)
         attempt = 0
+        slept = 0.0
+        prev_delay = self._backoff
         while True:
             t0 = time.perf_counter() if h is not None else 0.0
             try:
                 result = fn(*args)
-            except TransientError:
+            except TransientError as e:
                 if h is not None:
                     h.observe(time.perf_counter() - t0)
                 if attempt >= self._max_retries:
                     raise
-                delay = self._backoff * (1 << attempt)
+                delay = self._retry_rng.uniform(
+                    self._backoff, min(self._backoff_cap, prev_delay * 3))
+                deadline = self._retry_deadline
+                if deadline is not None and slept + delay > deadline:
+                    raise RetryBudgetExceeded(attempt + 1, slept, deadline,
+                                              last=e) from e
+                prev_delay = delay
                 if self._c_backoff is not None:
                     self._c_backoff.inc(delay)
                     tr = self._obs.tracer
@@ -546,6 +584,7 @@ class ObjectStoreBackend(PlannedChainReader):
                                       fn.__name__, fn.__name__),
                                   attempt=attempt + 1)
                 time.sleep(delay)
+                slept += delay
                 attempt += 1
                 self.retries += 1
                 continue
@@ -602,21 +641,28 @@ class ObjectStoreBackend(PlannedChainReader):
     def _flush_locked(self) -> None:
         # container object first, journal second (module docstring: a
         # journal must never name bytes that were not uploaded before it)
+        had_work = bool(self._pending or self._chunk_rows
+                        or self._journal_entries)
+        if had_work:
+            self._cp(_CP_FLUSH_BEFORE_CONTAINER)
         self._upload_pending_locked()
         entries: list[dict] = []
         if self._chunk_rows:
             entries.append({"chunks": self._chunk_rows})
         entries.extend(self._journal_entries)
         if entries:
+            self._cp(_CP_FLUSH_BETWEEN_PUTS)
             self._call(self.client.put,
                        self._journal_key(self.epoch, self._next_journal),
                        json.dumps(entries).encode())
+            self._cp(_CP_FLUSH_AFTER_JOURNAL)
             self._next_journal += 1
             self._chunk_rows = []
             self._journal_entries = []
         self._dirty = False
 
     def _stage(self, cid: int, base: int, payload: bytes) -> tuple:
+        crc = crc32c(payload)
         with self._io_lock:
             kind = _KIND_RAW if base < 0 else _KIND_DELTA
             if (self._pending and len(self._pending) + len(payload)
@@ -625,11 +671,12 @@ class ObjectStoreBackend(PlannedChainReader):
             seq, off = self._cur_seq, len(self._pending)
             self._pending += payload
             self._chunk_rows.append([cid, kind, base if kind else -1,
-                                     seq, off, len(payload)])
+                                     seq, off, len(payload), crc])
             self._dirty = True
         entry = (kind, base if kind else -1,
                  (seq << _OBJ_SHIFT) | off, len(payload))
         self._index[cid] = entry
+        self._crcs[cid] = crc
         return entry
 
     def put_raw(self, cid: int, data: bytes) -> None:
@@ -675,10 +722,33 @@ class ObjectStoreBackend(PlannedChainReader):
         with self._io_lock:
             self._journal_entries.append({"retire": handle})
             self._dirty = True
+            self._cp(_CP_RETIRE_BEFORE_FLUSH)
             # durable-tombstone parity with FileBackend's fsync: the PUT
             # completes before delete() returns, so a crash cannot
             # resurrect the stream
             self._flush_locked()
+
+    def drop_chunks(self, cids: Sequence[int]) -> None:
+        """Quarantine: durably un-index ``cids`` (scrub --repair, §13.3).
+        The ``{"quarantine": [...]}`` journal entry is flushed (PUT)
+        before this returns, so every later open agrees; the payload
+        bytes stay in their container objects until the next compaction
+        sweeps them. Callers guarantee no live recipe still references
+        the cids and nothing deltas against them."""
+        cids = sorted(int(c) for c in cids)
+        if not cids:
+            return
+        with self._io_lock:
+            self._journal_entries.append({"quarantine": cids})
+            self._dirty = True
+            self._flush_locked()
+        dropped = set()
+        for cid in cids:
+            if self._index.pop(cid, None) is not None:
+                dropped.add(cid)
+            self._crcs.pop(cid, None)
+            self._max_recipe_cid = max(self._max_recipe_cid, cid)
+        self._cache.retain(lambda cid: cid not in dropped)
 
     def storage_bytes(self) -> int:
         self.flush()
@@ -699,6 +769,7 @@ class ObjectStoreBackend(PlannedChainReader):
             self._flush_locked()    # nothing buffered crosses the flip
         old_epoch, new_epoch = self.epoch, self.epoch + 1
         new_index: dict[int, tuple[int, int, int, int]] = {}
+        new_crcs: dict[int, int] = {}
         rows: list[list[int]] = []
         buf = bytearray()
         seq = 0
@@ -710,13 +781,16 @@ class ObjectStoreBackend(PlannedChainReader):
                 seq += 1
             off = len(buf)
             buf += payload
-            rows.append([cid, kind, base, seq, off, len(payload)])
+            crc = crc32c(payload)
+            rows.append([cid, kind, base, seq, off, len(payload), crc])
             new_index[cid] = (kind, base, (seq << _OBJ_SHIFT) | off,
                               len(payload))
+            new_crcs[cid] = crc
         if buf:
             self._call(self.client.put, self._chunk_key(new_epoch, seq),
                        bytes(buf))
             seq += 1
+        self._cp(_CP_COMPACT_CONTAINERS_PUT)
         # consolidated recipe table: retired slots collapse to null
         # (tombstones dropped, handles stay stable — protocol contract)
         recipes_entry = {"recipes": [
@@ -724,12 +798,15 @@ class ObjectStoreBackend(PlannedChainReader):
             for h, r in enumerate(self._recipes)]}
         self._call(self.client.put, self._journal_key(new_epoch, 0),
                    json.dumps([{"chunks": rows}, recipes_entry]).encode())
+        self._cp(_CP_COMPACT_JOURNAL_PUT)
         self._call(self.client.put, _MANIFEST_KEY,
                    json.dumps({"epoch": new_epoch}).encode())     # the flip
+        self._cp(_CP_COMPACT_MANIFEST_FLIPPED)
         for key, _ in self._call(self.client.list, f"e{old_epoch:08d}/"):
             self._call(self.client.delete_object, key)
         self.epoch = new_epoch
         self._index = new_index
+        self._crcs = new_crcs
         self._cache.retain(new_index.__contains__)
         self._cur_seq = seq
         self._next_journal = 1
@@ -805,6 +882,7 @@ class ObjectStoreBackend(PlannedChainReader):
                     changed = True
         for cid in lost:
             del self._index[cid]
+            self._crcs.pop(cid, None)
         # recovery-retire recipes naming chunks we no longer hold; the
         # retires are journaled durably so every later open agrees
         # (exactly the file backend's torn-tail policy, §10.6 — the ids
@@ -833,10 +911,23 @@ class ObjectStoreBackend(PlannedChainReader):
 
     def _replay(self, entry: dict) -> None:
         if "chunks" in entry:
-            for cid, kind, base, seq, off, length in entry["chunks"]:
-                self._index[int(cid)] = (int(kind), int(base),
-                                         (int(seq) << _OBJ_SHIFT) | int(off),
-                                         int(length))
+            for row in entry["chunks"]:
+                # pre-§13 journals have 6-element rows (no crc); those
+                # records replay fine and scrub as ``unverifiable``
+                cid, kind, base, seq, off, length = (int(v)
+                                                     for v in row[:6])
+                self._index[cid] = (kind, base,
+                                    (seq << _OBJ_SHIFT) | off, length)
+                if len(row) > 6:
+                    self._crcs[cid] = int(row[6])
+        elif "quarantine" in entry:
+            # scrub --repair dropped these cids (§13.3): un-index them
+            # and burn their ids so they are never reissued
+            for cid in entry["quarantine"]:
+                cid = int(cid)
+                self._index.pop(cid, None)
+                self._crcs.pop(cid, None)
+                self._max_recipe_cid = max(self._max_recipe_cid, cid)
         elif "recipe" in entry:
             recipe = [int(c) for c in entry["recipe"]]
             self._recipes.append(recipe)
@@ -935,7 +1026,8 @@ class _CliStore:
 
     def __init__(self, root: Path, detector: str = "finesse",
                  chunk_size: int | None = None,
-                 create: bool = False, latency: float = 0.0) -> None:
+                 create: bool = False, latency: float = 0.0,
+                 verify_reads: bool = False) -> None:
         # local import: config imports the store; keeping it out of
         # module scope keeps backend-only users import-light
         from repro.api.config import DedupConfig, build_store
@@ -963,6 +1055,8 @@ class _CliStore:
         args["path"] = str(self.root / args.get("path", "objects"))
         if latency:
             args["latency"] = latency
+        if verify_reads:
+            cfg_dict["verify_reads"] = True
         self.cfg = DedupConfig.from_dict(cfg_dict)
         self.store = build_store(self.cfg)
         self._fitted = False
@@ -1109,8 +1203,9 @@ def _cmd_stat(args) -> int:
 
 
 def _cmd_verify(args) -> int:
+    from repro.api.integrity import CorruptChunkError
     root, name = _split_obj_url(args.url)
-    st = _CliStore(root)
+    st = _CliStore(root, verify_reads=True)
     failed = 0
     try:
         names = args.names or ([name] if name else sorted(st.files))
@@ -1120,7 +1215,13 @@ def _cmd_verify(args) -> int:
                 print(f"FAIL  {n}  (not in catalog)")
                 failed += 1
                 continue
-            data = st.store.restore(entry["handle"])
+            try:
+                data = st.store.restore(entry["handle"])
+            except CorruptChunkError as e:
+                # the per-record crc32c caught it before SHA could (§13.2)
+                print(f"FAIL  {n}  ({e})")
+                failed += 1
+                continue
             ok = (len(data) == entry["bytes"] and
                   hashlib.sha256(data).hexdigest() == entry["sha256"])
             rep = st.store.last_restore
@@ -1136,6 +1237,40 @@ def _cmd_verify(args) -> int:
         st.close()
     print(f"{len(names) - failed}/{len(names)} objects verified")
     return 1 if failed else 0
+
+
+def _cmd_scrub(args) -> int:
+    root, _ = _split_obj_url(args.url)
+    st = _CliStore(root)
+    try:
+        report = st.store.scrub(repair=args.repair)
+        print(f"chunks          {report.chunks} "
+              f"({report.verified} verified, "
+              f"{report.unverifiable} unverifiable)")
+        print(f"bytes checked   {_human(report.bytes_checked)}")
+        print(f"streams         {report.streams}")
+        if report.corrupt:
+            print(f"CORRUPT chunks  {list(report.corrupt)}")
+            for cid, n in sorted(report.blast_radius.items()):
+                print(f"  cid {cid}: blast radius {n} stream(s)")
+        if report.missing:
+            print(f"MISSING chunks  {list(report.missing)}")
+        if report.streams_lost:
+            print(f"streams lost    {list(report.streams_lost)}")
+        for err in report.structural_errors:
+            print(f"structural      {err}")
+        if report.repaired:
+            print(f"repaired: quarantined {len(report.quarantined)} "
+                  f"chunk(s), retired {len(report.retired_streams)} "
+                  f"stream(s)")
+            post = st.store.scrub()
+            print(f"post-repair     {'clean' if post.clean else 'DIRTY'}")
+            return 0 if post.clean else 1
+        print("clean" if report.clean else "DIRTY (rerun with --repair "
+              "to quarantine)")
+        return 0 if report.clean else 1
+    finally:
+        st.close()
 
 
 def main(argv: Sequence[str] | None = None) -> int:
@@ -1165,14 +1300,23 @@ def main(argv: Sequence[str] | None = None) -> int:
     st = sub.add_parser("stat", help="whole-store accounting (logical "
                                      "vs physical bytes, object counts)")
     st.add_argument("url", help="obj://ROOT")
-    vf = sub.add_parser("verify", help="restore object(s) and check "
-                                       "SHA-256 against the catalog")
+    vf = sub.add_parser("verify", help="restore object(s) with verified "
+                                       "reads (per-chunk crc32c) and "
+                                       "check SHA-256 against the catalog")
     vf.add_argument("url", help="obj://ROOT or obj://ROOT/NAME")
     vf.add_argument("names", nargs="*",
                     help="object names (default: every object)")
+    sc = sub.add_parser("scrub", help="fsck the store: verify every "
+                                      "record checksum, recipe "
+                                      "reachability, refcounts; exit 1 "
+                                      "when dirty")
+    sc.add_argument("url", help="obj://ROOT")
+    sc.add_argument("--repair", action="store_true",
+                    help="quarantine corrupt chunks and retire dependent "
+                         "streams (exit reflects the post-repair scrub)")
     args = ap.parse_args(argv)
-    return {"cp": _cmd_cp, "ls": _cmd_ls,
-            "stat": _cmd_stat, "verify": _cmd_verify}[args.cmd](args)
+    return {"cp": _cmd_cp, "ls": _cmd_ls, "stat": _cmd_stat,
+            "verify": _cmd_verify, "scrub": _cmd_scrub}[args.cmd](args)
 
 
 if __name__ == "__main__":      # pragma: no cover - thin; logic is main()

@@ -797,6 +797,21 @@ class DedupStore:
             self._check_open()
             return lifecycle.compact(self)
 
+    def scrub(self, repair: bool = False):
+        """Fsck walk (DESIGN.md §13.3): verify every stored record
+        against its persisted checksum, check recipe reachability (every
+        live recipe's chunks exist, every delta base resolves) and
+        refcount consistency, and return a ``ScrubReport`` with the
+        per-chunk blast radius. With ``repair=True`` corrupt chunks and
+        their transitive dependents are durably quarantined and every
+        affected stream retired through the recovery-retire tombstone
+        machinery — a follow-up scrub reports clean. Exclusive, like
+        delete/compact: nothing reads or commits while the walk runs."""
+        from repro.api import integrity
+        with self._lifecycle_lock.write():
+            self._check_open()
+            return integrity.scrub(self, repair=repair)
+
     def _refresh_lifecycle_stats(self) -> None:
         # dead_bytes = everything compaction can drop: unreferenced records
         # plus records pinned only as delta bases (rebasing frees them)

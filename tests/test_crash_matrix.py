@@ -1,0 +1,160 @@
+"""Systematic crash-consistency matrix (DESIGN.md §13.4): kill the
+process at every registered fsync/rename/PUT boundary, snapshot the
+directory as a ``kill -9`` left it, reopen, scrub, and assert the
+post-crash contract — committed streams restore byte-identically,
+deleted streams stay deleted, the in-flight op is all-or-nothing."""
+import os
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import faults as F
+import repro.api.objectstore  # noqa: F401 - registers objstore.* crashpoints
+
+
+def _data(size, seed):
+    rng = np.random.default_rng(seed)
+    return bytes(rng.integers(0, 256, size, np.uint8))
+
+
+def _build(backend, root, injector=None):
+    args = {"path": str(root)}
+    if injector is not None:
+        args["faults"] = injector
+    return api.build_store(api.DedupConfig.from_dict(
+        {"detector": "card", "backend": backend, "backend_args": args}))
+
+
+# every lifecycle transition the crashpoints guard: ingest (fresh +
+# resembling), delete, collect, compact, ingest-after-compact, flush
+_SCRIPT_SEEDS = (1, 2, 3)
+
+
+def _script():
+    d1 = _data(120_000, _SCRIPT_SEEDS[0])
+    d2 = d1[:60_000] + _data(20_000, _SCRIPT_SEEDS[1]) + d1[60_000:]
+    d3 = _data(90_000, _SCRIPT_SEEDS[2])
+    return d1, [("ingest", "a", d1),
+                ("ingest", "b", d2),
+                ("delete", "a"),
+                ("collect",),
+                ("compact",),
+                ("ingest", "c", d3),
+                ("flush",)]
+
+
+def _crash_once(backend, point, tmp_path, ordinal=1):
+    """Arm ``point``, run the script to the crash, snapshot, reopen the
+    snapshot, return (run, invariant_errors, fired?)."""
+    root = tmp_path / "store"
+    snap = tmp_path / "snap"
+    inj = F.FaultInjector()
+    store = _build(backend, root, inj)
+    train, ops = _script()
+    store.fit([train])
+    inj.arm(point, ordinal)
+    run = F.run_crash_script(store, ops)
+    F.snapshot_dir(root, snap)
+    F.abandon(store)
+    if run.crashed_at is None:
+        return run, [], False
+    assert run.crashed_at == point
+    reopened = _build(backend, snap)
+    errors = F.check_crash_invariants(reopened, run)
+    reopened.close()
+    return run, errors, True
+
+
+_FILE_POINTS = sorted(p for p in F.registered_crashpoints()
+                      if p.startswith("file."))
+_OBJ_POINTS = sorted(p for p in F.registered_crashpoints()
+                     if p.startswith("objstore."))
+
+
+def test_matrix_is_fully_registered():
+    reg = F.registered_crashpoints()
+    assert len(_FILE_POINTS) == 7 and len(_OBJ_POINTS) == 8
+    assert all(reg[p] for p in reg)       # every row has a description
+
+
+@pytest.mark.parametrize("point", _FILE_POINTS)
+def test_file_backend_crash(point, tmp_path):
+    run, errors, fired = _crash_once("file", point, tmp_path)
+    assert fired, f"script never reached {point}"
+    assert errors == []
+
+
+@pytest.mark.parametrize("point", _OBJ_POINTS)
+def test_objectstore_backend_crash(point, tmp_path):
+    run, errors, fired = _crash_once("objectstore", point, tmp_path)
+    assert fired, f"script never reached {point}"
+    assert errors == []
+
+
+def test_second_ordinal_crash(tmp_path):
+    """Crashing at the *second* hit of a hot boundary exercises a
+    different store state than the first."""
+    run, errors, fired = _crash_once("file", "file.flush.before_fsync",
+                                     tmp_path, ordinal=2)
+    assert fired and errors == []
+
+
+def test_unarmed_injector_never_fires(tmp_path):
+    inj = F.FaultInjector()
+    store = _build("file", tmp_path / "s", inj)
+    train, ops = _script()
+    store.fit([train])
+    run = F.run_crash_script(store, ops)
+    assert run.crashed_at is None and run.pending is None
+    assert inj.fired == []
+    assert inj.hits                        # boundaries were crossed
+    assert store.scrub().clean
+    store.close()
+
+
+def test_injector_rejects_unknown_point():
+    inj = F.FaultInjector()
+    with pytest.raises(ValueError):
+        inj.arm("no.such.point")
+    with pytest.raises(ValueError):
+        inj.arm(_FILE_POINTS[0], ordinal=0)
+
+
+def test_simulated_crash_is_base_exception():
+    # an `except Exception` recovery path must not absorb the signal
+    assert not issubclass(F.SimulatedCrash, Exception)
+    assert issubclass(F.SimulatedCrash, BaseException)
+
+
+# --- randomized sweep (hypothesis, when available) ---------------------------
+# guarded per-test (not a module-level importorskip) so the
+# deterministic matrix above always runs
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:         # pragma: no cover - env-dependent
+    _HAVE_HYPOTHESIS = False
+
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(pick=st.integers(min_value=0, max_value=10**9),
+           ordinal=st.integers(min_value=1, max_value=3))
+    def test_random_point_and_ordinal(pick, ordinal, tmp_path_factory):
+        points = _FILE_POINTS + _OBJ_POINTS
+        point = points[pick % len(points)]
+        backend = "file" if point.startswith("file.") else "objectstore"
+        tmp = tmp_path_factory.mktemp("crash")
+        run, errors, fired = _crash_once(backend, point, tmp, ordinal)
+        # high ordinals may never be reached — that is a legal outcome;
+        # a fired crash must still reopen to a contract-honouring store
+        if fired:
+            assert errors == []
+        else:
+            assert run.crashed_at is None
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_random_point_and_ordinal():
+        pass

@@ -1,0 +1,405 @@
+"""End-to-end integrity (DESIGN.md §13): the crc32c checksum itself,
+verified reads raising typed CorruptChunkError, scrub/repair with
+durable quarantine, pre-checksum format compatibility (RCL1 logs,
+6-element journal rows), mid-file journal corruption vs torn tails,
+blast radius, and the scrub CLI."""
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import integrity
+from repro.api import objectstore as osmod
+from repro.api.containers import (_LOG_HEADER, _LOG_MAGIC, _REC_HEADER,
+                                  _REC_HEADER2, FileBackend,
+                                  InMemoryBackend)
+from repro.api.faults import flip_bit, flip_byte, truncate_tail
+
+
+# --- fixtures ----------------------------------------------------------------
+
+def _data(size=150_000, seed=0):
+    rng = np.random.default_rng(seed)
+    return bytes(rng.integers(0, 256, size, np.uint8))
+
+
+def _store(tmp_path, backend, name="s", **knobs):
+    cfg = api.DedupConfig.from_dict({
+        "detector": "card", "backend": backend,
+        "backend_args": {"path": str(tmp_path / name)}, **knobs})
+    return api.build_store(cfg)
+
+
+def _ingest(store, data):
+    with store.open_stream() as s:
+        s.write(data)
+    return s.report.handle
+
+
+def _cold(store):
+    store.backend._cache.retain(lambda cid: False)
+
+
+def _payload_files(tmp_path, backend, name="s"):
+    """Every file holding chunk payloads for the given backend kind."""
+    root = tmp_path / name
+    if backend == "file":
+        return [root / "chunks.log"]
+    return sorted(root.glob("e*/chunks/*"))
+
+
+BACKENDS = ["file", "objectstore"]
+
+
+# --- the checksum ------------------------------------------------------------
+
+def test_crc32c_rfc_vector():
+    # RFC 3720 §B.4 test vector for CRC-32C (Castagnoli)
+    assert integrity.crc32c(b"123456789") == 0xE3069283
+    assert integrity._crc32c_py(b"123456789") == 0xE3069283
+
+
+def test_crc32c_pure_python_matches_dispatch():
+    rng = np.random.default_rng(7)
+    for size in (0, 1, 63, 4096):
+        blob = bytes(rng.integers(0, 256, size, np.uint8))
+        assert integrity.crc32c(blob) == integrity._crc32c_py(blob)
+
+
+def test_crc32c_accepts_buffer_types():
+    blob = b"abcdefgh" * 16
+    assert (integrity.crc32c(memoryview(blob))
+            == integrity.crc32c(bytearray(blob))
+            == integrity.crc32c(blob))
+
+
+# --- corruption injectors ----------------------------------------------------
+
+def test_flip_bit_bounds(tmp_path):
+    p = tmp_path / "f"
+    p.write_bytes(b"\x00\x01")
+    assert flip_bit(p, 0, bit=0) == 0x01
+    assert flip_byte(p, 1) == 0xFE
+    with pytest.raises(ValueError):
+        flip_bit(p, 2)              # offset past EOF
+    with pytest.raises(ValueError):
+        flip_bit(p, 0, bit=8)
+
+
+def test_truncate_tail(tmp_path):
+    p = tmp_path / "f"
+    p.write_bytes(b"x" * 10)
+    assert truncate_tail(p, 4) == 6
+    assert truncate_tail(p, 100) == 0
+
+
+# --- scrub on a healthy store ------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_scrub_clean_and_fully_verified(tmp_path, backend):
+    store = _store(tmp_path, backend)
+    data = _data()
+    store.fit([data])
+    h = _ingest(store, data)
+    rep = store.scrub()
+    assert rep.clean
+    assert rep.chunks > 0 and rep.verified == rep.chunks
+    assert rep.unverifiable == 0 and rep.bytes_checked > 0
+    assert rep.streams == 1 and not rep.repaired
+    assert store.restore(h) == data
+    store.close()
+
+
+def test_scrub_memory_backend():
+    store = api.build_store(api.DedupConfig.from_dict(
+        {"detector": "card", "backend": "memory"}))
+    assert isinstance(store.backend, InMemoryBackend)
+    data = _data(60_000)
+    store.fit([data])
+    _ingest(store, data)
+    rep = store.scrub()
+    assert rep.clean and rep.verified == rep.chunks and rep.unverifiable == 0
+    store.close()
+
+
+# --- verified reads + scrub detection of injected bit rot --------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_bitflip_detected_and_repaired(tmp_path, backend):
+    """The acceptance drill: flip payload bits, restore raises the typed
+    error, scrub finds the damage, repair leaves a scrub-clean store
+    that stays clean across reopen."""
+    store = _store(tmp_path, backend, verify_reads=True)
+    data = _data()
+    store.fit([data])
+    h = _ingest(store, data)
+    store.backend.flush()
+
+    target = _payload_files(tmp_path, backend)[0]
+    flip_bit(target, os.path.getsize(target) // 2, bit=3)
+    _cold(store)
+
+    with pytest.raises(api.CorruptChunkError) as ei:
+        store.restore(h)
+    err = ei.value
+    assert isinstance(err, IOError)     # documented supertype
+    assert err.expected != err.actual and err.cid >= 0
+    assert f"{err.cid}" in str(err)
+
+    rep = store.scrub()
+    assert not rep.clean and len(rep.corrupt) >= 1
+    assert set(rep.corrupt) <= set(rep.lost)
+    assert rep.streams_lost == (h,)
+    for cid in rep.corrupt:
+        assert rep.blast_radius[cid] == 1
+
+    fix = store.scrub(repair=True)
+    assert fix.repaired
+    assert set(fix.quarantined) >= set(rep.lost)
+    assert fix.retired_streams == (h,)
+    assert store.scrub().clean
+    with pytest.raises((KeyError, IndexError)):
+        store.restore(h)
+    store.close()
+
+    # quarantine + retire are durable: a fresh process agrees
+    store2 = _store(tmp_path, backend)
+    assert store2.scrub().clean
+    assert h not in store2.backend.live_handles()
+    store2.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_scrub_detects_without_verify_reads(tmp_path, backend):
+    """verify_reads is a read-path knob; scrub checksums regardless."""
+    store = _store(tmp_path, backend)        # verify_reads defaults off
+    data = _data(seed=3)
+    store.fit([data])
+    _ingest(store, data)
+    store.backend.flush()
+    target = _payload_files(tmp_path, backend)[0]
+    flip_bit(target, os.path.getsize(target) // 2)
+    _cold(store)
+    rep = store.scrub()
+    assert len(rep.corrupt) >= 1
+    store.close()
+
+
+def test_repair_spares_untouched_streams(tmp_path):
+    """Two independent streams; corrupting one leaves the other
+    restorable byte-identically after repair."""
+    store = _store(tmp_path, "file", verify_reads=True)
+    a, b = _data(seed=1), _data(seed=2)
+    store.fit([a])
+    ha = _ingest(store, a)
+    hb = _ingest(store, b)
+    store.backend.flush()
+    # find a chunk only stream b references, flip its payload
+    ra = set(store.backend.recipe(ha))
+    only_b = [c for c in store.backend.recipe(hb) if c not in ra]
+    assert only_b
+    _, _, off, ln = store.backend._index[only_b[0]]
+    log = tmp_path / "s" / "chunks.log"
+    flip_bit(log, off + ln // 2)
+    _cold(store)
+    fix = store.scrub(repair=True)
+    assert hb in fix.retired_streams and ha not in fix.retired_streams
+    assert store.scrub().clean
+    assert store.restore(ha) == a
+    store.close()
+
+
+def test_blast_radius_counts_sharing_streams(tmp_path):
+    """Identical data ingested twice dedups onto the same chunks; one
+    corrupt shared chunk takes out both streams — and says so."""
+    store = _store(tmp_path, "file")
+    data = _data(seed=5)
+    store.fit([data])
+    h1 = _ingest(store, data)
+    h2 = _ingest(store, data)
+    store.backend.flush()
+    shared = [c for c in store.backend.recipe(h1)
+              if c in set(store.backend.recipe(h2))]
+    assert shared
+    _, _, off, ln = store.backend._index[shared[0]]
+    flip_bit(tmp_path / "s" / "chunks.log", off + ln // 2)
+    _cold(store)
+    rep = store.scrub()
+    assert shared[0] in rep.corrupt
+    assert rep.blast_radius[shared[0]] == 2
+    assert set(rep.streams_lost) == {h1, h2}
+    store.close()
+
+
+def test_refcount_drift_is_structural(tmp_path):
+    store = _store(tmp_path, "file")
+    data = _data(60_000, seed=9)
+    store.fit([data])
+    _ingest(store, data)
+    assert store.scrub().clean
+    store._refs.live_bytes += 12345      # simulate unrecorded accounting
+    rep = store.scrub()
+    assert any("refcount drift" in s for s in rep.structural_errors)
+    store.close()
+
+
+# --- pre-checksum format compatibility ---------------------------------------
+
+def _downgrade_log_to_v1(path):
+    """Rewrite an RCL2 chunk log as RCL1 (strip per-record checksums),
+    byte-exactly what a pre-§13 build would have written."""
+    raw = path.read_bytes()
+    magic, epoch = _LOG_HEADER.unpack_from(raw, 0)
+    assert magic == b"RCL2"
+    out = bytearray(_LOG_HEADER.pack(_LOG_MAGIC, epoch))
+    pos = _LOG_HEADER.size
+    while pos < len(raw):
+        kind, cid, base, ln, _crc = _REC_HEADER2.unpack_from(raw, pos)
+        pos += _REC_HEADER2.size
+        out += _REC_HEADER.pack(kind, cid, base, ln)
+        out += raw[pos:pos + ln]
+        pos += ln
+    path.write_bytes(bytes(out))
+
+
+def test_v1_log_reads_and_scrubs_unverifiable(tmp_path):
+    store = _store(tmp_path, "file", verify_reads=True)
+    data = _data(seed=4)
+    store.fit([data])
+    h = _ingest(store, data)
+    store.close()
+    _downgrade_log_to_v1(tmp_path / "s" / "chunks.log")
+
+    store2 = _store(tmp_path, "file", verify_reads=True)
+    assert store2.backend.record_overhead == _REC_HEADER.size
+    assert store2.restore(h) == data     # verify_reads skips crc-less records
+    rep = store2.scrub()
+    assert rep.clean                     # unprovable is not dirty
+    assert rep.verified == 0 and rep.unverifiable == rep.chunks
+
+    # appends stay v1 (one file never mixes record formats) ...
+    store2.fit([data])                   # fresh process, untrained detector
+    h2 = _ingest(store2, _data(40_000, seed=6))
+    assert store2.backend.record_overhead == _REC_HEADER.size
+    assert store2.scrub().unverifiable == store2.scrub().chunks
+    # ... until compaction rewrites the log as RCL2 with fresh checksums
+    store2.compact()
+    assert store2.backend.record_overhead == _REC_HEADER2.size
+    rep2 = store2.scrub()
+    assert rep2.unverifiable == 0 and rep2.verified == rep2.chunks
+    assert store2.restore(h) == data and store2.restore(h2) is not None
+    store2.close()
+
+
+def test_v1_journal_rows_unverifiable(tmp_path):
+    """6-element journal rows (pre-checksum) replay fine and scrub as
+    unverifiable."""
+    store = _store(tmp_path, "objectstore")
+    data = _data(seed=8)
+    store.fit([data])
+    h = _ingest(store, data)
+    store.close()
+    root = tmp_path / "s"
+    for jp in sorted(root.glob("e*/journal/*.json")):
+        entries = json.loads(jp.read_text())
+        for e in entries:
+            if "chunks" in e:
+                e["chunks"] = [row[:6] for row in e["chunks"]]
+        jp.write_text(json.dumps(entries))
+    store2 = _store(tmp_path, "objectstore", verify_reads=True)
+    assert store2.restore(h) == data
+    rep = store2.scrub()
+    assert rep.clean and rep.unverifiable == rep.chunks
+    store2.close()
+
+
+# --- journal damage: torn tail vs mid-file corruption ------------------------
+
+def test_torn_journal_tail_still_truncated(tmp_path):
+    store = _store(tmp_path, "file")
+    data = _data(seed=10)
+    store.fit([data])
+    h = _ingest(store, data)
+    store.close()
+    recipes = tmp_path / "s" / "recipes.jsonl"
+    with open(recipes, "ab") as f:
+        f.write(b'{"recipe": [1, 2')        # crash mid-append
+    store2 = _store(tmp_path, "file")
+    assert store2.restore(h) == data
+    assert store2.scrub().clean
+    store2.close()
+
+
+def test_midfile_journal_corruption_is_typed_error(tmp_path):
+    store = _store(tmp_path, "file")
+    data = _data(seed=11)
+    store.fit([data])
+    _ingest(store, data)
+    _ingest(store, _data(40_000, seed=12))
+    store.close()
+    recipes = tmp_path / "s" / "recipes.jsonl"
+    lines = recipes.read_bytes().splitlines(keepends=True)
+    assert len(lines) >= 3
+    lines[1] = b"@@not json@@\n"            # damage *before* the tail
+    recipes.write_bytes(b"".join(lines))
+    with pytest.raises(api.CorruptJournalError) as ei:
+        FileBackend(tmp_path / "s")
+    assert ei.value.line_no == 2
+    assert str(recipes) in str(ei.value)
+
+
+# --- the scrub CLI -----------------------------------------------------------
+
+def test_cli_scrub_clean_then_dirty_then_repaired(tmp_path, capsys):
+    src = tmp_path / "in.bin"
+    src.write_bytes(_data(seed=13))
+    url = f"obj://{tmp_path / 'o'}"
+    assert osmod.main(["cp", str(src), url]) == 0
+    assert osmod.main(["scrub", url]) == 0
+    out = capsys.readouterr().out
+    assert "clean" in out
+
+    target = sorted((tmp_path / "o" / "objects").glob("e*/chunks/*"))[0]
+    flip_bit(target, os.path.getsize(target) // 2)
+    assert osmod.main(["scrub", url]) == 1
+    assert "DIRTY" in capsys.readouterr().out
+
+    assert osmod.main(["scrub", url, "--repair"]) == 0
+    assert osmod.main(["scrub", url]) == 0
+
+
+def test_cli_verify_reports_corrupt_chunk(tmp_path, capsys):
+    src = tmp_path / "in.bin"
+    src.write_bytes(_data(seed=14))
+    url = f"obj://{tmp_path / 'o'}"
+    assert osmod.main(["cp", str(src), url]) == 0
+    assert osmod.main(["verify", url]) == 0
+    capsys.readouterr()
+    target = sorted((tmp_path / "o" / "objects").glob("e*/chunks/*"))[0]
+    flip_bit(target, os.path.getsize(target) // 2)
+    assert osmod.main(["verify", url]) == 1
+    assert "FAIL" in capsys.readouterr().out
+
+
+# --- config plumbing ---------------------------------------------------------
+
+def test_config_rejects_bad_integrity_knobs():
+    with pytest.raises(TypeError):
+        api.DedupConfig.from_dict({"verify_reads": 1})
+    with pytest.raises(ValueError):
+        api.DedupConfig.from_dict({"retry_deadline": -1.0})
+    cfg = api.DedupConfig.from_dict({"verify_reads": True,
+                                     "retry_deadline": 2.5})
+    assert cfg.verify_reads is True and cfg.retry_deadline == 2.5
+    assert api.DedupConfig.from_dict(cfg.to_dict()) == cfg
+
+
+def test_lazy_exports():
+    assert api.CorruptChunkError is integrity.CorruptChunkError
+    assert api.ScrubReport is integrity.ScrubReport
+    from repro.api import faults
+    assert api.SimulatedCrash is faults.SimulatedCrash
+    assert api.RetryBudgetExceeded is faults.RetryBudgetExceeded

@@ -1,0 +1,112 @@
+"""Object-client conformance (DESIGN.md §11.2): one parametrized
+contract suite run against every client that claims the
+``LocalObjectStore`` surface — put/get/get_range/head/list/
+delete_object semantics, KeyError on absent keys, idempotent deletes,
+short ranged reads at object end.
+
+``LocalObjectStore`` always runs. ``S3ObjectClient`` runs against a
+real bucket only when boto3 is importable AND ``REPRO_S3_TEST_BUCKET``
+is set (an opt-in — CI has neither network nor credentials); otherwise
+its parametrization skips cleanly, keeping the seam honest without
+making the suite flaky."""
+import os
+import uuid
+
+import pytest
+
+
+def _local_client(tmp_path):
+    from repro.api.objectstore import LocalObjectStore
+    return LocalObjectStore(tmp_path / "objects")
+
+
+def _s3_client(tmp_path):
+    pytest.importorskip("boto3")
+    bucket = os.environ.get("REPRO_S3_TEST_BUCKET")
+    if not bucket:
+        pytest.skip("REPRO_S3_TEST_BUCKET not set (opt-in integration)")
+    from repro.api.objectstore import S3ObjectClient
+    return S3ObjectClient(bucket, prefix=f"conformance-{uuid.uuid4().hex}")
+
+
+@pytest.fixture(params=["local", "s3"])
+def client(request, tmp_path):
+    make = _local_client if request.param == "local" else _s3_client
+    cl = make(tmp_path)
+    yield cl
+    for key, _ in cl.list(""):
+        cl.delete_object(key)
+
+
+class TestObjectClientConformance:
+    def test_put_get_roundtrip(self, client):
+        client.put("a/b/c", b"payload bytes")
+        assert client.get("a/b/c") == b"payload bytes"
+
+    def test_put_overwrites(self, client):
+        client.put("k", b"old")
+        client.put("k", b"new and longer")
+        assert client.get("k") == b"new and longer"
+
+    def test_get_missing_raises_keyerror(self, client):
+        with pytest.raises(KeyError):
+            client.get("never/put")
+
+    def test_get_range_middle(self, client):
+        client.put("r", b"0123456789")
+        assert client.get_range("r", 2, 5) == b"23456"
+
+    def test_get_range_short_at_end(self, client):
+        # short read, not an error — callers treat short as truncation
+        client.put("r", b"0123456789")
+        assert client.get_range("r", 7, 100) == b"789"
+
+    def test_get_range_missing_raises_keyerror(self, client):
+        with pytest.raises(KeyError):
+            client.get_range("never/put", 0, 4)
+
+    def test_head_size_and_absence(self, client):
+        client.put("h", b"12345")
+        assert client.head("h") == 5
+        assert client.head("absent") is None
+
+    def test_list_prefix_sorted_with_sizes(self, client):
+        client.put("p/a", b"1")
+        client.put("p/b", b"22")
+        client.put("q/c", b"333")
+        assert client.list("p/") == [("p/a", 1), ("p/b", 2)]
+        listed = client.list("")
+        assert ("q/c", 3) in listed and listed == sorted(listed)
+
+    def test_delete_removes_and_is_idempotent(self, client):
+        client.put("d", b"x")
+        client.delete_object("d")
+        assert client.head("d") is None
+        client.delete_object("d")           # deleting a missing key is OK
+        with pytest.raises(KeyError):
+            client.get("d")
+
+    def test_empty_object(self, client):
+        client.put("empty", b"")
+        assert client.get("empty") == b""
+        assert client.head("empty") == 0
+
+    def test_binary_safety(self, client):
+        blob = bytes(range(256)) * 17
+        client.put("bin", blob)
+        assert client.get("bin") == blob
+        assert client.get_range("bin", 255, 2) == blob[255:257]
+
+
+def test_local_rejects_traversal_keys(tmp_path):
+    cl = _local_client(tmp_path)
+    with pytest.raises(ValueError):
+        cl.put("../escape", b"x")
+
+
+def test_local_tmp_files_invisible_to_list(tmp_path):
+    # a torn PUT (crash before rename) must never surface as an object
+    cl = _local_client(tmp_path)
+    cl.put("seen", b"x")
+    (cl.root / "torn.tmp").write_bytes(b"half")
+    assert [k for k, _ in cl.list("")] == ["seen"]

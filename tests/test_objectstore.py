@@ -217,6 +217,67 @@ def test_retry_budget_exhaustion_raises(tmp_path):
     re.close()
 
 
+def test_retry_deadline_raises_typed_budget_error(tmp_path):
+    """§13.5: a total-sleep deadline bounds the hang; exceeding it
+    raises RetryBudgetExceeded with forensics, never sleeps past it."""
+    from repro.api.faults import RetryBudgetExceeded
+    blobs = _blobs(2)
+    b = ObjectStoreBackend(tmp_path / "o")
+    _populate(b, blobs, 1)
+    b.close()
+    re = ObjectStoreBackend(tmp_path / "o", max_retries=10,
+                            retry_backoff=0.01, retry_deadline=0.05)
+    _cold(re)
+    re.client.fault_hook = FaultSchedule({"get": list(range(1, 100))})
+    with pytest.raises(RetryBudgetExceeded) as ei:
+        re.get_many([0, 1])
+    err = ei.value
+    assert isinstance(err, TransientError)      # generic callers keep working
+    assert err.deadline == 0.05
+    assert 0 <= err.slept <= err.deadline       # never overslept
+    assert err.attempts >= 1
+    assert isinstance(err.last, TransientError)
+    assert "deadline" in str(err)
+    re.close()
+
+
+def test_retry_deadline_unhit_is_invisible(tmp_path):
+    """A generous deadline changes nothing: transient faults under the
+    attempt budget are still absorbed byte-identically."""
+    blobs = _blobs(6)
+    b = ObjectStoreBackend(tmp_path / "o")
+    _populate(b, blobs, 3)
+    b.close()
+    re = ObjectStoreBackend(tmp_path / "o", retry_backoff=0.001,
+                            retry_deadline=30.0)
+    _cold(re)
+    # scan is done; fail the first two GETs the restore itself issues
+    re.client.fault_hook = FaultSchedule({"get": [1, 2]})
+    assert re.get_many(list(range(6))) == [blobs[i] for i in range(6)]
+    assert re.retries > 0
+    re.close()
+
+
+def test_decorrelated_jitter_bounds(tmp_path):
+    """Every sampled backoff lies in [base, min(cap, 3*previous)] — the
+    decorrelated-jitter envelope — and is not a constant ladder."""
+    b = ObjectStoreBackend(tmp_path / "o", retry_backoff=0.01,
+                           max_retries=6)
+    base, cap = b._backoff, b._backoff_cap
+    assert cap == pytest.approx(0.01 * 2 ** 6)
+    rng = b._retry_rng
+    prev = base
+    seen = []
+    for _ in range(200):
+        delay = rng.uniform(base, min(cap, prev * 3))
+        assert base <= delay <= min(cap, prev * 3)
+        assert delay <= cap
+        seen.append(delay)
+        prev = delay
+    assert len(set(seen)) > 100     # jittered, not a deterministic ladder
+    b.close()
+
+
 def test_concurrent_readers_under_latency(tmp_path):
     """Several threads restoring at once over a slow client: all byte
     identical, no cross-thread cache/pin corruption."""
