@@ -6,7 +6,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: dev-deps test test-fast test-lifecycle ci bench bench-smoke \
         observe-smoke chaos-smoke gc-bench ingest-bench restore-bench \
-        serve-bench verify-bench objstore-bench quickstart
+        serve-bench verify-bench objstore-bench cache-bench quickstart
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -72,6 +72,12 @@ verify-bench:
 # injected latency (DESIGN.md §11.3); writes BENCH_OBJSTORE.json
 objstore-bench:
 	$(PYTHON) -m benchmarks.bench_objstore
+
+# cache hierarchy (DESIGN.md §14): scan A/B lru vs arc, cold-race
+# singleflight collapse, disk tier over a latency+bandwidth-limited
+# object store; writes BENCH_CACHE.json
+cache-bench:
+	$(PYTHON) -m benchmarks.bench_cache
 
 quickstart:
 	$(PYTHON) examples/quickstart.py

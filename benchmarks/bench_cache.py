@@ -1,0 +1,368 @@
+"""Cache-hierarchy benchmarks (DESIGN.md §14): scan resistance, cold-
+decode singleflight, and the local-disk tier over the object store.
+
+Three sections, one JSON row set each:
+
+    cache_scan          pointed-restore throughput (random 64 KiB ranged
+                        reads on a hot delta-chained stream, decode
+                        cache warm) measured alone and with one-touch
+                        cold scans interleaved between read batches —
+                        each scan restores a *distinct* chunk-disjoint
+                        stream bigger than the cache, the §14.1 backup-
+                        scan shape. One row per eviction policy: lru's
+                        single recency queue lets every scan flush the
+                        hot set; arc's T2 holds the twice-touched chain
+                        while the one-touch scan lives and dies in T1,
+                        so arc's under-scan throughput must stay within
+                        10% of the no-scan baseline (``within_guard``).
+    cache_singleflight  4 threads cold-restoring the same delta-heavy
+                        sql_dump streams in lockstep (identical handle
+                        order, barrier start — the thundering-herd
+                        shape), singleflight off vs on. Off, every
+                        thread decodes every shared base chain; on, the
+                        first prober owns the decode and the rest wait
+                        for the materialized bytes — the aggregate MB/s
+                        gate is >= 2x (``sf_gate``), with per-restore
+                        SHA1 identity checked both ways (``errors``).
+    cache_tier          cold restores over the object store with
+                        injected per-request latency and a bandwidth
+                        cap (the WAN-object-store regime), without a
+                        disk tier vs with one: the first tiered pass
+                        fills the tier (crc-verified), the second — a
+                        fresh process reopen — serves payload bytes
+                        from local disk and keeps only journal/manifest
+                        GETs. Rows record MB/s and client GET counts.
+
+Cold/measured numbers are best-of-``repeats`` (min-time estimator, same
+argument as bench_restore). Rows land in BENCH_CACHE.json.
+
+    PYTHONPATH=src python -m benchmarks.bench_cache [--quick] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks import common
+from repro import api
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_CACHE.json"
+
+RANGE_BYTES = 64 << 10
+
+
+def _ingest(tmp: str, vs, avg_size: int = 8192,
+            detector: str = "card") -> list[int]:
+    cfg = common.detector_config(detector, avg_size=avg_size)
+    cfg.backend, cfg.backend_args = "file", {"path": tmp}
+    store = api.build_store(cfg)
+    store.fit(list(vs[:1]))
+    handles = []
+    for v in vs:
+        with store.open_stream() as s:
+            s.write(v)
+        handles.append(s.report.handle)
+    store.close()
+    return handles
+
+
+def _serving(tmp: str, policy: str, cache_bytes: int) -> api.DedupStore:
+    cfg = api.DedupConfig.from_dict(
+        {"detector": "dedup-only", "backend": "file",
+         "backend_args": {"path": tmp},
+         "restore_cache_bytes": cache_bytes,
+         "restore_cache_policy": policy})
+    return api.build_store(cfg)
+
+
+def _pointed_pass(store, handle, nbytes, offs) -> tuple[float, int]:
+    t0 = time.perf_counter()
+    total = 0
+    for off in offs:
+        total += len(store.restore_range(handle, int(off), RANGE_BYTES))
+    return time.perf_counter() - t0, total
+
+
+def run_scan(base_size: int = 2 << 20, versions: int = 4,
+             avg_size: int = 8192, range_reads: int = 150,
+             scan_rounds: int = 3, scan_mb: int = 12,
+             repeats: int = 3, guard: bool = True) -> list[dict]:
+    """One row per policy: pointed-restore MB/s with and without
+    interleaved one-touch scans, cache sized to the hot chain only.
+    Scan fodder is incompressible random data ingested dedup-only, so
+    its chunks share nothing with the hot stream's — every scan is pure
+    one-touch cache pressure, ``scan_mb`` per round against a cache of
+    ``3 * base_size`` bytes."""
+    rows = []
+    vs = common.make_versions("sql_dump", base_size, versions)
+    hot = vs[-1]
+    # holds the hot version's materialized chain comfortably, nowhere
+    # near the scan set — the regime where eviction policy decides
+    cache_bytes = 3 * base_size
+    rng = np.random.default_rng(0)
+    offs = rng.integers(0, max(1, len(hot) - RANGE_BYTES), range_reads)
+    with tempfile.TemporaryDirectory() as tmp:
+        handles = _ingest(tmp, vs, avg_size=avg_size)
+        h = handles[-1]
+        # chunk-disjoint scan fodder, one distinct stream per round
+        # (dedup-only reopen on the same containers keeps ingest cheap)
+        cfg = api.DedupConfig.from_dict(
+            {"detector": "dedup-only", "backend": "file",
+             "backend_args": {"path": tmp},
+             "chunker_args": {"avg_size": avg_size}})
+        feeder = api.build_store(cfg)
+        scan_handles = []
+        for i in range(scan_rounds):
+            blob = np.random.default_rng(100 + i).integers(
+                0, 256, scan_mb << 20, np.uint8).tobytes()
+            with feeder.open_stream() as s:
+                s.write(blob)
+            scan_handles.append(s.report.handle)
+        feeder.close()
+        for policy in ("lru", "arc"):
+            noscan_s = scan_s = float("inf")
+            signals = {}
+            for _rep in range(repeats):
+                store = _serving(tmp, policy, cache_bytes)
+                _pointed_pass(store, h, len(hot), offs)     # warm the chain
+                noscan_s = min(noscan_s,
+                               _pointed_pass(store, h, len(hot), offs)[0])
+                t_scan = 0.0
+                step = 512 << 10
+                for sh in scan_handles:                     # the scans:
+                    for off in range(0, scan_mb << 20, step):
+                        # bounded ranged sweeps, not one whole-stream
+                        # get_many — a 12 MB batch would hold most of
+                        # the cache pinned at once and force eviction
+                        # onto T2 regardless of policy
+                        store.restore_range(sh, off, step)
+                    dt, _ = _pointed_pass(store, h, len(hot), offs)
+                    t_scan += dt
+                scan_s = min(scan_s, t_scan / len(scan_handles))
+                signals = store.cache_stats()
+                store.close()
+            total = range_reads * RANGE_BYTES
+            noscan = common.mbps(total, noscan_s)
+            under = common.mbps(total, scan_s)
+            rows.append({
+                "bench": "cache_scan", "workload": "sql_dump",
+                "policy": policy, "variant": "scan-ab",
+                "versions": versions, "cache_mb": round(
+                    cache_bytes / 2**20, 2),
+                "range_reads": range_reads,
+                "noscan_mbps": round(noscan, 2),
+                "underscan_mbps": round(under, 2),
+                "retained_pct": round(100.0 * under / noscan, 1),
+                "ghost_hits": signals["ghost_hits"],
+                "evictions": signals["evictions"],
+                # the 10% guard binds arc only (lru *degrading* under
+                # the scan is the expected half of the A/B), and only
+                # at full scale — quick/CI caches are small enough
+                # that the threshold is noise, so guard=False leaves
+                # the column advisory (None)
+                "within_guard": (under >= 0.9 * noscan
+                                 if policy == "arc" and guard else None),
+            })
+    return rows
+
+
+def _race(tmp: str, jobs, n_threads: int,
+          singleflight: bool) -> tuple[float, int, dict]:
+    cfg = api.DedupConfig.from_dict(
+        {"detector": "dedup-only", "backend": "file",
+         "backend_args": {"path": tmp, "singleflight": singleflight}})
+    store = api.build_store(cfg)
+    errors = [0]
+    lock = threading.Lock()
+    barrier = threading.Barrier(n_threads)
+
+    def worker():
+        # lockstep, not a shared queue: every thread restores the same
+        # streams in the same order, so cold chains are hit by all
+        # threads at once — the thundering-herd shape singleflight
+        # exists for
+        barrier.wait()
+        for handle, digest, _ in jobs:
+            try:
+                ok = hashlib.sha1(store.restore(handle)).digest() == digest
+            except Exception:
+                ok = False
+            if not ok:
+                with lock:
+                    errors[0] += 1
+
+    threads = [threading.Thread(target=worker, daemon=True)
+               for _ in range(n_threads)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    signals = store.cache_stats()
+    store.close()
+    return wall, errors[0], signals
+
+
+def run_singleflight(base_size: int = 4 << 20, versions: int = 6,
+                     avg_size: int = 8192, n_threads: int = 4,
+                     repeats: int = 3) -> list[dict]:
+    """Cold aggregate MB/s, 4 threads racing over the newest (deepest-
+    chained, decode-dominated) delta-heavy stream, singleflight off vs
+    on; one paired row. The newest version is the one every chunk of
+    which decodes through the shared ancestor chains — the stream whose
+    cold thundering herd singleflight collapses."""
+    vs = common.make_versions("sql_dump", base_size, versions)
+    with tempfile.TemporaryDirectory() as tmp:
+        handles = _ingest(tmp, vs, avg_size=avg_size)
+        # every thread restores the newest stream, in lockstep (_race)
+        jobs = [(handles[-1], hashlib.sha1(vs[-1]).digest(), len(vs[-1]))]
+        total = len(vs[-1]) * n_threads
+        timing, errs, signals = {}, 0, {}
+        for sf in (False, True):
+            best = float("inf")
+            for _rep in range(repeats):
+                wall, e, sig = _race(tmp, jobs, n_threads, sf)
+                errs += e
+                if wall < best:
+                    best = wall
+                    if sf:
+                        signals = sig
+            timing[sf] = best
+        off = common.mbps(total, timing[False])
+        on = common.mbps(total, timing[True])
+        return [{
+            "bench": "cache_singleflight", "workload": "sql_dump",
+            "variant": "cold-race", "threads": n_threads,
+            "versions": versions, "bytes_mb": round(total / 2**20, 2),
+            "nosf_agg_mbps": round(off, 2),
+            "sf_agg_mbps": round(on, 2),
+            "speedup": round(on / off, 2),
+            "sf_waits": signals.get("singleflight_waits", 0),
+            "sf_collapsed": signals.get("singleflight_collapsed", 0),
+            "decoded_chunks": signals.get("decoded_chunks", 0),
+            "errors": errs,
+            "sf_gate": on >= 2.0 * off,
+        }]
+
+
+def _obj_serving(tmp: str, latency: float, bandwidth: float,
+                 tier: str | None) -> api.DedupStore:
+    d = {"detector": "dedup-only", "backend": "objectstore",
+         "backend_args": {"path": tmp, "latency": latency,
+                          "bandwidth_bps": bandwidth}}
+    if tier is not None:
+        d["restore_tier_path"] = tier
+    return api.build_store(api.DedupConfig.from_dict(d))
+
+
+def run_tier(base_size: int = 4 << 20, versions: int = 4,
+             avg_size: int = 8192, latency: float = 0.002,
+             bandwidth: float = 24e6, repeats: int = 3) -> list[dict]:
+    """Cold restores over the object store with per-request latency and
+    a bandwidth cap (remote bytes cost wall-clock; local tier bytes are
+    free): no tier, tier filling (first cold pass), tier serving (fresh
+    reopen, payloads off local disk). One row per variant, GET counts
+    included."""
+    vs = common.make_versions("sql_dump", base_size, versions)
+    rows = []
+    with tempfile.TemporaryDirectory() as tmp, \
+            tempfile.TemporaryDirectory() as tier:
+        obj = str(Path(tmp) / "o")
+        cfg = common.detector_config("card", avg_size=avg_size)
+        cfg.backend, cfg.backend_args = "objectstore", {"path": obj}
+        store = api.build_store(cfg)
+        store.fit(list(vs[:1]))
+        handles = []
+        for v in vs:
+            with store.open_stream() as s:
+                s.write(v)
+            handles.append(s.report.handle)
+        store.close()
+        total = sum(len(v) for v in vs)
+
+        def cold_pass(tier_path):
+            store = _obj_serving(obj, latency, bandwidth, tier_path)
+            t0 = time.perf_counter()
+            for h in handles:
+                store.restore(h)
+            wall = time.perf_counter() - t0
+            counts = store.backend.client.op_counts
+            gets = counts.get("get", 0) + counts.get("get_range", 0)
+            store.close()
+            return wall, gets
+
+        variants = []
+        for name in ("no-tier", "tier-fill", "tier-serve"):
+            best, gets = float("inf"), 0
+            for _rep in range(repeats):
+                if name != "tier-serve":    # fill measures an empty tier
+                    for p in Path(tier).glob("**/*"):
+                        if p.is_file():
+                            p.unlink()
+                if name == "tier-fill":
+                    wall, g = cold_pass(tier)
+                elif name == "tier-serve":
+                    cold_pass(tier)         # fill, then measure a reopen
+                    wall, g = cold_pass(tier)
+                else:
+                    wall, g = cold_pass(None)
+                if wall < best:
+                    best, gets = wall, g
+            variants.append((name, best, gets))
+        for name, wall, gets in variants:
+            rows.append({
+                "bench": "cache_tier", "workload": "sql_dump",
+                "variant": name, "versions": versions,
+                "latency_ms": latency * 1e3,
+                "bandwidth_mbps": round(bandwidth / 1e6, 1),
+                "bytes_mb": round(total / 2**20, 2),
+                "cold_mbps": round(common.mbps(total, wall), 2),
+                "gets": gets,
+            })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workloads (CI smoke)")
+    ap.add_argument("--json", default=str(JSON_PATH),
+                    help="where to write the JSON row dump")
+    args = ap.parse_args()
+    if args.quick:
+        rows = (run_scan(base_size=1 << 20, versions=3, range_reads=60,
+                         scan_rounds=2, scan_mb=6, repeats=1, guard=False)
+                + run_singleflight(base_size=1 << 20, versions=3,
+                                   repeats=1)
+                + run_tier(base_size=1 << 20, versions=3, repeats=1))
+    else:
+        rows = run_scan() + run_singleflight() + run_tier()
+    for section in ("cache_scan", "cache_singleflight", "cache_tier"):
+        common.emit([r for r in rows if r["bench"] == section], section)
+    bad = [r for r in rows
+           if r.get("within_guard") is False or r.get("sf_gate") is False
+           or r.get("errors", 0)]
+    if bad:
+        print(f"# WARNING: {len(bad)} row(s) outside the §14 gates")
+    path = Path(args.json)
+    existing = []
+    if path.exists():
+        keep = {(r.get("bench"), r.get("variant"), r.get("policy"))
+                for r in rows}
+        existing = [r for r in json.loads(path.read_text())
+                    if (r.get("bench"), r.get("variant"),
+                        r.get("policy")) not in keep]
+    path.write_text(json.dumps(existing + rows, indent=2) + "\n")
+    print(f"# wrote {len(rows)} rows to {path}")
+
+
+if __name__ == "__main__":
+    main()

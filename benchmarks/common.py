@@ -77,10 +77,14 @@ def fmt_ratio(num: float, den: float, places: int = 2) -> str:
 
 
 def emit(rows: list[dict], name: str) -> None:
-    """name,us_per_call,derived CSV convention + full column dump."""
-    if not rows:
-        return
-    cols = list(rows[0].keys())
-    print(",".join(cols))
+    """name,us_per_call,derived CSV convention + full column dump.
+
+    A section may concatenate sub-benches with different columns (the
+    cache section's scan/singleflight/tier rows); a fresh header line
+    is printed whenever the row shape changes."""
+    cols: list[str] | None = None
     for r in rows:
+        if list(r.keys()) != cols:
+            cols = list(r.keys())
+            print(",".join(cols))
         print(",".join(str(r[c]) for c in cols))

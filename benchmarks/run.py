@@ -18,13 +18,13 @@ def main() -> None:
                          "raise (perf-plumbing CI gate; implies --quick)")
     ap.add_argument("--only", default=None,
                     help="comma list: dcr,time,dims,kernels,ckpt,ablation,"
-                         "roofline,gc,ingest,restore,serve,objstore")
+                         "roofline,gc,ingest,restore,serve,objstore,cache")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     quick = args.quick or args.smoke
 
-    from benchmarks import (bench_ablation, bench_ckpt_store, bench_dcr,
-                            bench_dims, bench_gc, bench_ingest,
+    from benchmarks import (bench_ablation, bench_cache, bench_ckpt_store,
+                            bench_dcr, bench_dims, bench_gc, bench_ingest,
                             bench_kernels, bench_objstore, bench_restore,
                             bench_roofline, bench_time, common)
 
@@ -72,6 +72,21 @@ def main() -> None:
             workloads=("sql_dump",) if quick else bench_objstore.WORKLOADS,
             latencies=(0.0, 0.002) if args.smoke else (0.0, 0.01),
             repeats=1 if quick else 2),
+        # cache hierarchy (DESIGN.md §14): scan resistance lru vs arc,
+        # cold-race singleflight collapse, disk tier over the object
+        # store; the singleflight section's errors column (SHA1 checks
+        # under the thread race) feeds the smoke gate below
+        "cache": lambda: (
+            bench_cache.run_scan(base_size=min(base, 1 << 20), versions=3,
+                                 range_reads=60, scan_rounds=2, scan_mb=6,
+                                 repeats=1, guard=False)
+            + bench_cache.run_singleflight(base_size=min(base, 2 << 20),
+                                           versions=4, repeats=1)
+            + bench_cache.run_tier(base_size=min(base, 1 << 20),
+                                   versions=3, repeats=1)
+        ) if quick else (bench_cache.run_scan()
+                         + bench_cache.run_singleflight()
+                         + bench_cache.run_tier()),
     }
 
     for name, fn in sections.items():

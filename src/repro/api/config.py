@@ -35,8 +35,10 @@ from repro.api.store import DedupStore
 _KNOWN_KEYS = {"detector", "detector_args", "chunker", "chunker_args",
                "backend", "backend_args", "policy", "policy_args",
                "restore_cache_bytes", "restore_cache_shards",
-               "restore_reader_fds", "restore_readahead",
-               "restore_coalesce_gap", "verify_reads", "retry_deadline",
+               "restore_cache_policy", "restore_reader_fds",
+               "restore_readahead", "restore_coalesce_gap",
+               "restore_tier_path", "restore_tier_bytes",
+               "verify_reads", "retry_deadline",
                "trace_path", "trace_ring_events"}
 
 # serving/integrity knobs (DESIGN.md §10, §11.3, §13) -> backend factory
@@ -44,16 +46,19 @@ _KNOWN_KEYS = {"detector", "detector_args", "chunker", "chunker_args",
 # declare the kwarg
 _BACKEND_KNOBS = {"restore_cache_bytes": "cache_bytes",
                   "restore_cache_shards": "cache_shards",
+                  "restore_cache_policy": "cache_policy",
                   "restore_reader_fds": "reader_fds",
                   "restore_readahead": "readahead",
                   "restore_coalesce_gap": "coalesce_gap",
+                  "restore_tier_path": "tier_path",
+                  "restore_tier_bytes": "tier_bytes",
                   "verify_reads": "verify_reads",
                   "retry_deadline": "retry_deadline"}
 
 # integer knobs validated in from_dict: knob name -> smallest legal value
 _INT_KNOB_FLOORS = {"restore_cache_bytes": 1, "restore_cache_shards": 1,
                     "restore_reader_fds": 1, "restore_readahead": 0,
-                    "restore_coalesce_gap": 0}
+                    "restore_coalesce_gap": 0, "restore_tier_bytes": 1}
 
 
 @dataclasses.dataclass
@@ -73,6 +78,10 @@ class DedupConfig:
     # backends without a decode cache / reader pool (memory) ignore all.
     restore_cache_bytes: int | None = None      # decode-cache budget
     restore_cache_shards: int | None = None     # cache lock stripes
+    # decode-cache eviction policy by registry name (DESIGN.md §14.1):
+    # "lru" (default) or the scan-resistant "arc"; resolved through
+    # registry.get_cache_policy at backend construction
+    restore_cache_policy: str | None = None
     restore_reader_fds: int | None = None       # pread pool size
     restore_readahead: int | None = None        # read runs in flight (0 off)
     # largest gap (bytes) two payload reads may straddle and still be
@@ -80,6 +89,12 @@ class DedupConfig:
     # their medium — 4 KiB for the file log, 1 MiB for object stores —
     # so set it only to override; 0 coalesces exactly-adjacent reads only.
     restore_coalesce_gap: int | None = None
+    # local-disk chunk cache tier in front of remote backends
+    # (DESIGN.md §14.3): tier_path roots the per-chunk payload files,
+    # tier_bytes budgets them (None = backend default). Backends without
+    # a remote hop (file, memory) ignore both.
+    restore_tier_path: str | None = None
+    restore_tier_bytes: int | None = None
     # integrity knobs (DESIGN.md §13): verify_reads=True makes backends
     # that persist checksums validate every payload on the read path,
     # raising CorruptChunkError instead of serving garbage;
@@ -118,6 +133,10 @@ class DedupConfig:
                     or value < floor):
                 raise ValueError(f"{name} must be an int >= {floor}, "
                                  f"got {value!r}")
+        for name in ("restore_cache_policy", "restore_tier_path"):
+            value = getattr(cfg, name)
+            if value is not None and not isinstance(value, str):
+                raise TypeError(f"{name} must be a str, got {value!r}")
         if cfg.verify_reads is not None and not isinstance(cfg.verify_reads,
                                                            bool):
             raise TypeError(f"verify_reads must be a bool, "

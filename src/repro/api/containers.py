@@ -46,9 +46,9 @@ from repro.api.faults import register_crashpoint
 from repro.api.integrity import (CorruptChunkError, CorruptJournalError,
                                  crc32c)
 from repro.api.registry import register_backend
-from repro.api.restore import (DEFAULT_CACHE_BYTES, DEFAULT_CACHE_SHARDS,
-                               ShardedDecodeCache, coalesce_reads,
-                               plan_chains)
+from repro.api.restore import (DEFAULT_CACHE_BYTES, DEFAULT_CACHE_POLICY,
+                               DEFAULT_CACHE_SHARDS, ShardedDecodeCache,
+                               coalesce_reads, plan_chains)
 from repro.core import delta
 
 _REC_HEADER = struct.Struct("<BqqQ")    # v1: kind, cid, base, payload length
@@ -105,6 +105,24 @@ _CP_COMPACT_RECIPES_RENAMED = register_crashpoint(
 _CP_COMPACT_DONE = register_crashpoint(
     "file.compact.done",
     "both renames durable, before in-memory state swaps")
+
+
+class _Flight:
+    """One in-flight cold decode (DESIGN.md §14.2).
+
+    The owning plan sets ``data`` (or flags ``error``) and fires the
+    event exactly once, right after the decoded bytes land in the cache;
+    waiting plans block on the event instead of re-reading and
+    re-decoding the same chain. Waiters hold a direct reference, so the
+    owner may drop the flight from the shared table the moment it
+    resolves."""
+
+    __slots__ = ("event", "data", "error")
+
+    def __init__(self) -> None:
+        self.event = threading.Event()
+        self.data: bytes | None = None
+        self.error = False
 
 
 class _ReaderPool:
@@ -319,6 +337,63 @@ class PlannedChainReader:
     _verify_reads = False
     _faults = None
 
+    # cold-decode singleflight + heat defaults (§14.2, §14.4): real
+    # per-instance state comes from _init_read_engine_state(); the
+    # class-level Nones keep a subclass that never calls it working
+    # (singleflight off, no heat signal)
+    _flights = None                 # cid -> _Flight, shared across plans
+    _sf_lock = None
+    _singleflight = False
+    _sf_waits = 0                   # plans that parked on a foreign flight
+    _sf_collapsed = 0               # chunks served from a foreign flight
+    _heat = None                    # cid -> lifetime request count
+    # local-disk chunk tier (§14.3): remote backends install one; the
+    # get_many read path consults/fills it generically
+    _tier = None
+    #: chunks materialized from stored payloads over the backend's
+    #: lifetime (raw reads + delta decodes) — the singleflight race test
+    #: pins "each base decoded exactly once" against this
+    decoded_chunks = 0
+
+    def _init_read_engine_state(self, singleflight: bool = True) -> None:
+        """Per-instance singleflight/heat state; durable subclasses call
+        this from ``__init__`` (the class attributes above must never be
+        mutated — they would be shared across every backend)."""
+        self._flights = {}
+        self._sf_lock = threading.Lock()
+        self._singleflight = bool(singleflight)
+        self._sf_waits = 0
+        self._sf_collapsed = 0
+        self._heat = {}
+        self.decoded_chunks = 0
+
+    def chunk_heat(self) -> dict[int, int]:
+        """Lifetime request count per chunk id (targets of ``get`` /
+        ``get_many``; §14.4). Compaction placement consumes this to lay
+        hot chains contiguously. Snapshot copy — safe to iterate while
+        restores proceed."""
+        heat = self._heat
+        if heat is None:
+            return {}
+        with self._sf_lock:
+            return dict(heat)
+
+    def _bump_heat(self, cids) -> None:
+        heat = self._heat
+        if heat is not None:
+            with self._sf_lock:
+                for cid in cids:
+                    heat[cid] = heat.get(cid, 0) + 1
+
+    def _count_decodes(self, n: int) -> None:
+        if n:
+            lock = self._sf_lock
+            if lock is not None:
+                with lock:
+                    self.decoded_chunks += n
+            else:
+                self.decoded_chunks += n
+
     def _cp(self, point: str) -> None:
         faults = self._faults
         if faults is not None:
@@ -382,6 +457,19 @@ class PlannedChainReader:
         g_cache = {k: m.gauge("repro_reader_cache_bytes",
                               "Decode-cache residency", labels={"kind": k})
                    for k in ("current", "peak")}
+        c_ghost = m.counter(
+            "repro_cache_ghost_hits_total",
+            "Misses on recently-evicted chunks (the scan-resistance "
+            "adaptation signal; §14.1)")
+        c_evict = m.counter(
+            "repro_cache_evictions_total",
+            "Decode-cache evictions across every shard (§14.1)")
+        c_sf = {e: m.counter(
+                    "repro_singleflight_total",
+                    "Cold-decode singleflight outcomes: plans parked on "
+                    "a foreign in-flight decode / chunks served from one "
+                    "(§14.2)", labels={"event": e})
+                for e in ("wait", "collapsed")}
 
         def _export_reader_views() -> None:
             t = tel.totals()    # COUNTER_FIELDS order
@@ -394,6 +482,10 @@ class PlannedChainReader:
             c_requests.set_total(t[6])
             g_cache["current"].set(cache.bytes)
             g_cache["peak"].set(cache.peak_bytes)
+            c_ghost.set_total(getattr(cache, "ghost_hits", 0))
+            c_evict.set_total(getattr(cache, "evictions", 0))
+            c_sf["wait"].set_total(self._sf_waits)
+            c_sf["collapsed"].set_total(self._sf_collapsed)
 
         m.register_callback(_export_reader_views)
 
@@ -470,6 +562,7 @@ class PlannedChainReader:
 
     def get(self, cid: int) -> bytes:
         tel = self._telemetry.local()
+        self._bump_heat((cid,))
         data = self._cache.get(cid)
         if data is not None:
             tel.cache_hits += 1
@@ -485,14 +578,22 @@ class PlannedChainReader:
         # the §9.4 telemetry).
         chain: list[tuple[int, bytes]] = []
         verify = self._verify_reads
+        tier = self._tier
+        decoded = 0
         cur = cid
         while True:
             kind, base, offset, length = self._index[cur]  # KeyError
-            payload = self._read_payload(offset, length)   # before I/O
+            payload = (tier.get(cur, self._crcs.get(cur))
+                       if tier is not None else None)
+            if payload is None:
+                payload = self._read_payload(offset, length)   # before I/O
+                if tier is not None:
+                    tier.put(cur, payload, self._crcs.get(cur))
             if verify:
                 self._check_payload(cur, payload)
             if kind == _KIND_RAW:
                 data = payload
+                decoded += 1
                 self._cache.put(cur, data)
                 break
             chain.append((cur, payload))
@@ -504,7 +605,9 @@ class PlannedChainReader:
             tel.cache_misses += 1
         for c, patch in reversed(chain):
             data = delta.decode(patch, data)
+            decoded += 1
             self._cache.put(c, data)
+        self._count_decodes(decoded)
         return data
 
     def _reader_executor(self) -> ThreadPoolExecutor:
@@ -536,6 +639,7 @@ class PlannedChainReader:
         cache = self._cache
         tel = self._telemetry.local()
         targets = list(dict.fromkeys(int(c) for c in cids))
+        self._bump_heat(targets)
         # batched cache probe: one lock round-trip per shard, not per
         # chunk — this IS the warm restore (every target a hit)
         out = cache.get_present(targets)
@@ -553,29 +657,99 @@ class PlannedChainReader:
 
             pinned: set[int] = set()
             pinned_data: dict[int, bytes] = {}
+            use_sf = self._singleflight and self._flights is not None
+            sf_lock = self._sf_lock
+            flights = self._flights
+            flights_won: dict[int, _Flight] = {}   # cids this plan decodes
+            flights_wait: dict[int, _Flight] = {}  # foreign decodes parked on
+            owned_unresolved: set[int] = set()
 
             def probe(cid: int) -> bool:
                 # the planner's is_cached callback, made concurrency-safe:
                 # pin-if-present is one atomic step, so another thread's
                 # eviction cannot undo the answer between planning and
                 # decoding (§10.2). At most one pin per cid per plan.
-                if cid in pinned_data:
+                if cid in pinned_data or cid in flights_wait:
                     return True
                 data = cache.try_pin(cid)
-                if data is None:
+                if data is not None:
+                    pinned.add(cid)
+                    pinned_data[cid] = data
+                    return True
+                if not use_sf:
                     return False
-                pinned.add(cid)
-                pinned_data[cid] = data
+                # cold-decode singleflight (§14.2): claim the cid when
+                # nobody is decoding it — this plan becomes the owner
+                # and schedules the read — else park on the owner's
+                # flight: the planner treats a foreign flight like a
+                # cached chunk, so the chain walk stops here and this
+                # plan never re-reads or re-decodes the shared suffix.
+                with sf_lock:
+                    fl = flights.get(cid)
+                    if fl is None:
+                        fl = _Flight()
+                        flights[cid] = fl
+                        flights_won[cid] = fl
+                        owned_unresolved.add(cid)
+                        return False
+                    self._sf_waits += 1
+                flights_wait[cid] = fl
                 return True
+
+            def resolve_flight(cid: int, data: bytes) -> None:
+                # the decoded bytes are already in the cache; publish to
+                # waiters and drop the table entry so later plans probe
+                # the cache instead of a dead flight
+                fl = flights_won.get(cid)
+                if fl is None:
+                    return
+                fl.data = data
+                fl.event.set()
+                owned_unresolved.discard(cid)
+                with sf_lock:
+                    flights.pop(cid, None)
+
+            def await_flight(fl) -> bytes | None:
+                # §14.2 deadlock rule: a plan may block on a foreign
+                # flight only while it owns no unresolved flight of its
+                # own — two plans interleaved along one physical chain
+                # could otherwise wait on each other forever. Owners
+                # fall back to self.get instead (a rare duplicate
+                # decode beats a deadlock).
+                if not fl.event.is_set():
+                    if owned_unresolved:
+                        return None
+                    fl.event.wait()
+                return None if fl.error else fl.data
 
             try:
                 plan = plan_chains(missing, entry, probe)
                 wanted = set(plan.targets)
 
+                payloads: dict[int, bytes] = {}
+                verify = self._verify_reads
+                tier = self._tier
+                crcs = self._crcs
+                reads = plan.reads
+                if tier is not None and reads:
+                    # disk-tier filter (§14.3): serve whatever the local
+                    # tier holds (crc-verified inside), fetch the rest
+                    # remotely. Tier bytes are local and free of the
+                    # remote hop, so they stay out of bytes_read.
+                    reads = []
+                    for off, ln, cid in plan.reads:
+                        payload = tier.get(cid, crcs.get(cid))
+                        if payload is None:
+                            reads.append((off, ln, cid))
+                        else:
+                            if verify:  # §13.2 contract holds tier or not
+                                self._check_payload(cid, payload)
+                            payloads[cid] = payload
+
                 # coalesce the offset-sorted reads into sequential runs
                 # (gap/cap are backend knobs — MB-scale for object
                 # stores, KB-scale for the local log; §9.1, §11.3)
-                runs = coalesce_reads(plan.reads, self._merge_gap,
+                runs = coalesce_reads(reads, self._merge_gap,
                                       self._max_run)
                 h_run = self._h_run_bytes
                 if h_run is not None:       # §12.3: run shapes, natively
@@ -584,12 +758,9 @@ class PlannedChainReader:
                         h_run.observe(end - start)
                         h_ext.observe(len(extents))
 
-                payloads: dict[int, bytes] = {}
                 remaining = dict(plan.dependents)
                 order = plan.decode_order
                 decode_pos = 0
-
-                verify = self._verify_reads
 
                 def ingest_run(run: tuple, blob: bytes) -> None:
                     start, end, extents = run
@@ -605,6 +776,10 @@ class PlannedChainReader:
                         if verify:      # per-chunk, coalesced span or not
                             self._check_payload(cid, payload)
                         payloads[cid] = payload
+                        if tier is not None:
+                            # crc-verified-on-fill (§14.3): put() drops
+                            # fills that do not match the journaled crc
+                            tier.put(cid, payload, crcs.get(cid))
 
                 def decode_ready() -> None:
                     # decode the available prefix of the topological
@@ -612,6 +787,7 @@ class PlannedChainReader:
                     # still in flight (a later run)
                     nonlocal decode_pos
                     t0 = time.perf_counter()
+                    decoded = 0
                     while decode_pos < len(order):
                         cid = order[decode_pos]
                         payload = payloads.pop(cid, None)
@@ -629,7 +805,14 @@ class PlannedChainReader:
                             base_data = pinned_data.get(base)
                             if base_data is None:
                                 base_data = cache.peek(base)
-                            if base_data is None:  # pinned: a logic bug
+                            if base_data is None and flights_wait:
+                                fl = flights_wait.get(base)
+                                if fl is not None:
+                                    base_data = await_flight(fl)
+                                    if base_data is not None:
+                                        with sf_lock:
+                                            self._sf_collapsed += 1
+                            if base_data is None:  # flight failed/deferred
                                 base_data = self.get(base)
                             data = delta.decode(payload, base_data)
                             left = remaining.get(base)
@@ -638,15 +821,23 @@ class PlannedChainReader:
                                     remaining[base] = left - 1
                                 else:
                                     del remaining[base]
-                                    cache.unpin(base)
-                                    pinned.discard(base)
+                                    # flight-waited bases were never
+                                    # pinned by this plan — unpinning
+                                    # them would steal the owner's pin
+                                    if base in pinned:
+                                        cache.unpin(base)
+                                        pinned.discard(base)
+                        decoded += 1
                         pin = cid in remaining
                         cache.put(cid, data, pin=pin)
                         if pin:
                             pinned.add(cid)
+                        if flights_won:
+                            resolve_flight(cid, data)
                         if cid in wanted:
                             out[cid] = data
                     tel.decode_seconds += time.perf_counter() - t0
+                    self._count_decodes(decoded)
 
                 self._flush_if_dirty()
                 read_span = self._read_span
@@ -710,12 +901,43 @@ class PlannedChainReader:
 
                 # a target can become cached (by a concurrent restore)
                 # between the fast-path miss and the planner probe; the
-                # probe pinned it, so serve it from the plan's own refs
+                # probe pinned it — or parked on the plan actually
+                # decoding it — so serve it from the plan's own refs.
+                # get_present already counted every one of these as a
+                # miss, so the tally is corrected once the real outcome
+                # is known (§14.2 hit-ratio fix): a flight-served target
+                # was a concurrent decode (a hit for the report), and a
+                # self.get fallback re-counts the lookup itself.
                 for tgt in plan.targets:
-                    if tgt not in out:
-                        data = pinned_data.get(tgt)
-                        out[tgt] = data if data is not None else self.get(tgt)
+                    if tgt in out:
+                        continue
+                    data = pinned_data.get(tgt)
+                    if data is None and flights_wait:
+                        fl = flights_wait.get(tgt)
+                        if fl is not None:
+                            data = await_flight(fl)
+                            if data is not None:
+                                with sf_lock:
+                                    self._sf_collapsed += 1
+                                tel.cache_misses -= 1
+                                tel.cache_hits += 1
+                    if data is None:
+                        tel.cache_misses -= 1   # self.get counts its own
+                        data = self.get(tgt)
+                    out[tgt] = data
             finally:
+                # a failed plan must not leave its claimed flights
+                # unresolved — waiters would park forever. On success
+                # every owned flight resolved during decode; anything
+                # still pending here is flagged as an error and waiters
+                # fall back to their own self.get.
+                if flights_won:
+                    with sf_lock:
+                        for cid, fl in flights_won.items():
+                            if not fl.event.is_set():
+                                fl.error = True
+                                fl.event.set()
+                                flights.pop(cid, None)
                 # a failed plan (corrupt patch, truncated read) must not
                 # leak pins — leaked entries would be unevictable forever
                 for cid in pinned:
@@ -955,10 +1177,12 @@ class FileBackend(PlannedChainReader):
     def __init__(self, path: str | Path, fsync_on_flush: bool = False,
                  cache_bytes: int | None = None,
                  cache_shards: int | None = None,
+                 cache_policy: str | None = None,
                  reader_fds: int | None = None,
                  readahead: int | None = None,
                  coalesce_gap: int | None = None,
                  verify_reads: bool = False,
+                 singleflight: bool = True,
                  faults=None) -> None:
         """``fsync_on_flush=True`` makes every ``flush()`` (one per
         committed stream — group commit, DESIGN.md §8) durable with a
@@ -973,7 +1197,10 @@ class FileBackend(PlannedChainReader):
         ``coalesce_gap`` is the largest hole (bytes of unwanted data)
         two records may straddle and still be fetched in one pread
         (default 4 KiB — one page of waste; object stores use MB-scale
-        gaps, §11.3). ``verify_reads`` checks every payload read off the
+        gaps, §11.3). ``cache_policy`` names the decode-cache eviction
+        policy ("lru"/"arc", §14.1); ``singleflight=False`` disables the
+        §14.2 cold-decode collapse (benchmark A/B only).
+        ``verify_reads`` checks every payload read off the
         log against its persisted crc32c (§13.2); ``faults`` threads a
         ``repro.api.faults.FaultInjector`` through the write-path
         crashpoints (tests only)."""
@@ -997,7 +1224,10 @@ class FileBackend(PlannedChainReader):
         self._cache = ShardedDecodeCache(
             cache_bytes if cache_bytes is not None else DEFAULT_CACHE_BYTES,
             shards=cache_shards if cache_shards is not None
-            else DEFAULT_CACHE_SHARDS)
+            else DEFAULT_CACHE_SHARDS,
+            policy=cache_policy if cache_policy is not None
+            else DEFAULT_CACHE_POLICY)
+        self._init_read_engine_state(singleflight)
         self._recipes: list[list[int] | None] = []
         self._recipe_lens: dict[int, list[int]] = {}
         # largest cid referenced by ANY recipe line ever seen — retired

@@ -128,7 +128,14 @@ class ScrubReport:
     In repair mode ``quarantined``/``retired_streams`` record what was
     durably dropped: corrupt+lost chunks via the backend's quarantine
     journal entries, affected streams via the recovery-retire tombstone
-    machinery — after which a fresh scrub of the store is clean."""
+    machinery — after which a fresh scrub of the store is clean.
+
+    ``payload_requests`` counts the backend payload requests the walk
+    actually issued; ``payload_requests_naive`` is what a per-chunk walk
+    would have issued (one GET per indexed chunk). Backends exposing
+    ``scrub_stream`` (the object store, §14.5) serve one streamed GET
+    per container object, so the gap between the two is the scrub's
+    request savings."""
 
     chunks: int
     bytes_checked: int
@@ -145,12 +152,31 @@ class ScrubReport:
     quarantined: tuple[int, ...]
     retired_streams: tuple[int, ...]
     seconds: float
+    payload_requests: int = 0
+    payload_requests_naive: int = 0
 
     @property
     def clean(self) -> bool:
         """No corruption, nothing lost or missing, structure consistent."""
         return not (self.corrupt or self.lost or self.missing
                     or self.streams_lost or self.structural_errors)
+
+
+def _record_source(backend: Any, cids: list[int]) -> Any:
+    """Per-chunk payload source for backends without ``scrub_stream``:
+    yields ``(cid, payload | None, note)`` straight off the containers
+    via ``backend.record`` — a ``None`` payload is unreadable-or-corrupt,
+    a non-None ``note`` additionally flags a structural finding."""
+    for cid in cids:
+        try:
+            _, _, payload = backend.record(cid)
+        except CorruptChunkError:
+            # a verify_reads backend checked for us; trust its verdict
+            yield cid, None, None
+        except (OSError, KeyError, IndexError) as e:
+            yield cid, None, f"unreadable ({e})"
+        else:
+            yield cid, payload, None
 
 
 def _dependents_closure(seeds: set[int], base_of: dict[int, int]) -> set[int]:
@@ -175,8 +201,10 @@ def scrub(store: Any, repair: bool = False) -> ScrubReport:
     flight while records are walked or, in repair mode, while recipes
     are retired and chunks quarantined.
 
-    The walk reads every indexed payload through ``backend.record`` —
-    straight off the container, never the decode cache — and checks it
+    The walk reads every indexed payload straight off the containers —
+    never the decode cache or disk tier — preferring the backend's
+    ``scrub_stream`` (one streamed GET per container object, §14.5) over
+    per-chunk ``backend.record`` calls, and checks each payload
     against the persisted checksum (``backend.checksum_of``). Records
     without one (pre-checksum formats) count as ``unverifiable``.
     Structural checks: every delta base resolves (no dangling chains, no
@@ -195,22 +223,35 @@ def scrub(store: Any, repair: bool = False) -> ScrubReport:
     checksum_of = getattr(backend, "checksum_of", None)
 
     cids = sorted(backend.chunk_ids())
-    base_of: dict[int, int] = {}
+    base_of: dict[int, int] = {cid: backend.base_of(cid) for cid in cids}
     corrupt: list[int] = []
     structural: list[str] = []
     verified = unverifiable = 0
     bytes_checked = 0
-    for cid in cids:
-        base_of[cid] = backend.base_of(cid)
-        try:
-            _, _, payload = backend.record(cid)
-        except CorruptChunkError:
-            # a verify_reads backend checked for us; trust its verdict
+
+    # payload source: backends that can stream one GET per container
+    # object (scrub_stream, §14.5) beat the naive one-request-per-chunk
+    # walk by the dedup factor; everything downstream is order-independent
+    # so the stream may yield in container order, not cid order.
+    payload_requests_naive = len(cids)
+    stream_fn = getattr(backend, "scrub_stream", None)
+    if stream_fn is not None:
+        payload_requests, stream = stream_fn()
+        source = ((cid, payload,
+                   None if payload is not None
+                   else "unreadable (missing or short container object)")
+                  for cid, payload in stream)
+    else:
+        payload_requests = payload_requests_naive
+        source = _record_source(backend, cids)
+
+    walked: set[int] = set()
+    for cid, payload, note in source:
+        walked.add(cid)
+        if payload is None:
             corrupt.append(cid)
-            continue
-        except (OSError, KeyError, IndexError) as e:
-            corrupt.append(cid)
-            structural.append(f"chunk {cid}: unreadable ({e})")
+            if note is not None:
+                structural.append(f"chunk {cid}: {note}")
             continue
         bytes_checked += len(payload)
         expected = checksum_of(cid) if checksum_of is not None else None
@@ -220,6 +261,11 @@ def scrub(store: Any, repair: bool = False) -> ScrubReport:
             corrupt.append(cid)
         else:
             verified += 1
+    for cid in cids:                # indexed but never yielded: unreadable
+        if cid not in walked:
+            corrupt.append(cid)
+            structural.append(f"chunk {cid}: unreadable (not in scrub walk)")
+    corrupt.sort()
 
     # structural: dangling bases and base-chain cycles
     held = set(cids)
@@ -308,7 +354,8 @@ def scrub(store: Any, repair: bool = False) -> ScrubReport:
         blast_radius=blast, structural_errors=tuple(structural),
         repaired=bool(repair and (quarantined or retired)),
         quarantined=tuple(quarantined), retired_streams=tuple(retired),
-        seconds=seconds)
+        seconds=seconds, payload_requests=payload_requests,
+        payload_requests_naive=payload_requests_naive)
     _observe_scrub(store, report)
     return report
 
@@ -340,6 +387,7 @@ def _observe_scrub(store: Any, report: ScrubReport) -> None:
     tr = obs.tracer
     if tr is not None:
         tr.record("scrub", report.seconds, chunks=report.chunks,
+                  payload_requests=report.payload_requests,
                   verified=report.verified,
                   unverifiable=report.unverifiable,
                   corrupt=len(report.corrupt), lost=len(report.lost),

@@ -225,9 +225,52 @@ def collect(store: Any) -> CollectReport:
     return report
 
 
+def _placement_order(keep: set[int], rebases: dict[int, tuple],
+                     base_of: Any, heat: dict[int, int]) -> list[int]:
+    """Heat-aware placement for the compaction rewrite (DESIGN.md §14.4).
+
+    Group the live set by post-rebase delta-chain root (a rebase changes
+    a patch's base, so placement must follow where the chain will point
+    *after* the rewrite, not where it points now), write whole chains
+    contiguously, and order chains by aggregate read heat (hottest
+    first, root cid breaking ties for determinism). Within a chain,
+    members go base-before-dependent in cid order — the order a pointed
+    restore walks them. Cold stores (no heat) keep the plain sorted
+    order so the rewrite stays byte-stable across otherwise-identical
+    compactions."""
+    if not heat:
+        return sorted(keep)
+    chain_root: dict[int, int] = {}
+
+    def root_of(cid: int) -> int:
+        seen: list[int] = []
+        cur = cid
+        while cur in keep and cur not in chain_root:
+            seen.append(cur)
+            hit = rebases.get(cur)
+            base = hit[1] if hit is not None else base_of(cur)
+            if base < 0 or base not in keep:
+                break
+            cur = base
+        root = chain_root.get(cur, cur if cur in keep else seen[-1])
+        for c in seen:
+            chain_root[c] = root
+        return root
+
+    chains: dict[int, list[int]] = {}
+    for cid in sorted(keep):        # sorted -> base precedes dependents
+        chains.setdefault(root_of(cid), []).append(cid)
+    ranked = sorted(chains, key=lambda r: (-sum(heat.get(c, 0)
+                                                for c in chains[r]), r))
+    return [cid for r in ranked for cid in chains[r]]
+
+
 def compact(store: Any) -> CompactionRun:
     """Rewrite the container without dead/pinned records, rebasing live
-    patches whose base is evicted; see module docstring."""
+    patches whose base is evicted; see module docstring. Backends that
+    track read heat (``chunk_heat``) get hot delta chains placed
+    contiguously at the front of the rewritten container (§14.4), so the
+    coalescer turns a hot pointed restore into few long reads."""
     t0 = time.perf_counter()
     refs: RefcountTable = store._refs
     backend = store.backend
@@ -282,11 +325,15 @@ def compact(store: Any) -> CompactionRun:
             bytes_before=size, bytes_after=size, reclaimed_bytes=0,
             seconds=seconds, skipped=True)
 
+    heat_fn = getattr(backend, "chunk_heat", None)
+    order = _placement_order(keep, rebases, backend.base_of,
+                             heat_fn() if heat_fn is not None else {})
+
     def live_records():
         # streamed, not a list: the backend consumes one record at a time,
         # so compaction RAM is one payload (plus the re-encoded patches),
         # not the whole live container
-        for cid in sorted(keep):
+        for cid in order:
             hit = rebases.get(cid)
             if hit is None:
                 kind, base, payload = backend.record(cid)

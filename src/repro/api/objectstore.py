@@ -86,9 +86,9 @@ from repro.api.containers import (_KIND_DELTA, _KIND_RAW, DEFAULT_READAHEAD,
 from repro.api.faults import (FaultSchedule, RetryBudgetExceeded,  # noqa: F401
                               TransientError, register_crashpoint)
 from repro.api.integrity import crc32c
-from repro.api.registry import register_backend
-from repro.api.restore import (DEFAULT_CACHE_BYTES, DEFAULT_CACHE_SHARDS,
-                               ShardedDecodeCache)
+from repro.api.registry import get_cache_policy, register_backend
+from repro.api.restore import (DEFAULT_CACHE_BYTES, DEFAULT_CACHE_POLICY,
+                               DEFAULT_CACHE_SHARDS, ShardedDecodeCache)
 
 # voff = seq << _OBJ_SHIFT | offset-in-object. 2^40 per object is far
 # beyond any real object size, and far beyond any coalesce gap — the
@@ -108,6 +108,9 @@ DEFAULT_OBJECT_BYTES = 8 << 20
 DEFAULT_FETCHERS = 4            # concurrent ranged GETs in flight
 DEFAULT_MAX_RETRIES = 4
 DEFAULT_RETRY_BACKOFF = 0.05    # doubles per attempt: 50/100/200/400 ms
+#: Default byte budget for the local-disk chunk tier (§14.3) when a
+#: ``tier_path`` is given without an explicit ``tier_bytes``.
+DEFAULT_TIER_BYTES = 256 << 20
 
 _MANIFEST_KEY = "manifest.json"
 
@@ -365,6 +368,159 @@ class S3ObjectClient:
             raise self._wrap(e) from e
 
 
+class DiskTierCache:
+    """Byte-budgeted local-disk chunk tier in front of a remote object
+    store (DESIGN.md §14.3).
+
+    One plain file per cached chunk payload (``{cid & 0xff:02x}/{cid}``
+    under the tier root, tmp+rename writes), no on-disk metadata —
+    reopen rebuilds the in-memory book by scanning the directory, so
+    the tier survives process restarts and tolerates losing any file at
+    any time (a lost entry is just a miss).
+
+    Coherence rules (§14.3):
+
+      * **crc-verified on fill** — ``put`` computes crc32c over the
+        payload and drops the fill unless it matches the journaled crc
+        the backend passed in (chunks without a journaled crc are never
+        tiered: there would be nothing to verify reads against);
+      * **lazily re-verified on read** — the first ``get`` of an entry
+        this process hasn't verified yet (every entry, after a reopen)
+        recomputes the crc; a mismatch — bit rot, or a patch rebased by
+        compaction — unlinks the file and reports a miss, so corruption
+        is *refetched*, never served;
+      * eviction ordering comes from the same pluggable
+        :class:`repro.api.restore.CachePolicy` family as the decode
+        cache ("arc" by default, so whole-store scans stream through
+        without flushing hot chains).
+
+    All operations serialize on one lock — tier file I/O is local and
+    micro-seconds-scale against the remote hop it replaces, and the
+    simplicity keeps the directory book exact.
+    """
+
+    def __init__(self, root: str | Path, budget_bytes: int,
+                 policy: str = "arc") -> None:
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.budget_bytes = max(1, int(budget_bytes))
+        self.policy_name = str(policy)
+        self._policy = get_cache_policy(self.policy_name)(self.budget_bytes)
+        self._lock = threading.Lock()
+        self._sizes: dict[int, int] = {}
+        self._verified: set[int] = set()
+        self.bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.bytes_served = 0
+        self.bytes_filled = 0
+        self.dropped = 0        # crc-failed entries unlinked (bit rot or
+        #                         post-compaction staleness) — §14.3
+        with self._lock:
+            self._scan_dir()
+
+    def _path(self, cid: int) -> Path:
+        return self.root / f"{cid & 0xff:02x}" / str(cid)
+
+    def _scan_dir(self) -> None:
+        # lock held. Torn fills (tmp files) are dropped; everything else
+        # is adopted unverified — the first read re-checks its crc
+        for sub in sorted(self.root.iterdir()):
+            if not sub.is_dir():
+                continue
+            for f in sorted(sub.iterdir()):
+                if f.name.endswith(".tmp"):
+                    f.unlink(missing_ok=True)
+                    continue
+                try:
+                    cid = int(f.name)
+                except ValueError:
+                    continue
+                size = f.stat().st_size
+                self._sizes[cid] = size
+                self.bytes += size
+                self._policy.on_insert(cid, size)
+        self._evict_over_budget()
+
+    def _evict_over_budget(self) -> None:
+        # lock held; the tier has no pin concept, every entry is fair game
+        while self.bytes > self.budget_bytes:
+            victim = self._policy.victim(lambda c: False)
+            if victim is None:
+                break
+            self._forget(victim)
+
+    def _forget(self, cid: int) -> None:
+        # lock held; policy bookkeeping is the caller's (victim() already
+        # moved evictees to its ghost side; on_remove covers the rest)
+        size = self._sizes.pop(cid, None)
+        if size is not None:
+            self.bytes -= size
+        self._verified.discard(cid)
+        self._path(cid).unlink(missing_ok=True)
+
+    def get(self, cid: int, expected_crc: int | None) -> bytes | None:
+        """Tiered payload bytes, or None (miss / dropped-as-bad)."""
+        with self._lock:
+            size = self._sizes.get(cid)
+            if size is None:
+                self.misses += 1
+                return None
+            try:
+                data = self._path(cid).read_bytes()
+            except OSError:
+                data = None
+            ok = (data is not None and len(data) == size
+                  and (cid in self._verified or expected_crc is None
+                       or crc32c(data) == expected_crc))
+            if not ok:
+                self._policy.on_remove(cid)
+                self._forget(cid)
+                self.misses += 1
+                self.dropped += 1
+                return None
+            self._verified.add(cid)
+            self.hits += 1
+            self.bytes_served += len(data)
+            self._policy.on_hit(cid)
+            return data
+
+    def put(self, cid: int, payload: bytes, expected_crc: int | None) -> None:
+        """Fill from a coalesced-GET span; drops silently unless the
+        payload matches the journaled crc (crc-verified-on-fill)."""
+        if expected_crc is None or crc32c(payload) != expected_crc:
+            return
+        with self._lock:
+            if cid in self._sizes:
+                return
+            path = self._path(cid)
+            path.parent.mkdir(exist_ok=True)
+            tmp = path.with_name(path.name + ".tmp")
+            tmp.write_bytes(payload)
+            os.replace(tmp, path)
+            self._sizes[cid] = len(payload)
+            self._verified.add(cid)
+            self.bytes += len(payload)
+            self.bytes_filled += len(payload)
+            self._policy.on_insert(cid, len(payload))
+            self._evict_over_budget()
+
+    def retain(self, keep: Callable[[int], bool]) -> None:
+        """Drop entries whose cid fails ``keep`` (compaction sweep /
+        quarantine). Entries whose *payload* compaction rewrote (rebased
+        patches) are caught lazily by the read-path crc check — which is
+        why every surviving entry is demoted to unverified here: their
+        expected crcs may have just changed under them."""
+        with self._lock:
+            for cid in [c for c in self._sizes if not keep(c)]:
+                self._policy.on_remove(cid)
+                self._forget(cid)
+            self._verified.clear()
+
+    def __len__(self) -> int:
+        return len(self._sizes)
+
+
 class ObjectStoreBackend(PlannedChainReader):
     """``ContainerBackend`` over an object API (module docstring, §11).
 
@@ -399,6 +555,7 @@ class ObjectStoreBackend(PlannedChainReader):
                  fault_hook=None,
                  cache_bytes: int | None = None,
                  cache_shards: int | None = None,
+                 cache_policy: str | None = None,
                  readahead: int | None = None,
                  coalesce_gap: int | None = None,
                  fetchers: int | None = None,
@@ -407,6 +564,9 @@ class ObjectStoreBackend(PlannedChainReader):
                  retry_backoff: float | None = None,
                  retry_deadline: float | None = None,
                  verify_reads: bool = False,
+                 singleflight: bool = True,
+                 tier_path: str | Path | None = None,
+                 tier_bytes: int | None = None,
                  faults=None) -> None:
         """Either ``path`` (a ``LocalObjectStore`` is built over it,
         forwarding ``latency``/``bandwidth_bps``/``fault_hook``) or an
@@ -420,7 +580,13 @@ class ObjectStoreBackend(PlannedChainReader):
         and total sleep per logical request is capped by the deadline).
         ``verify_reads`` checks every payload against its journaled
         crc32c (§13.2); ``faults`` threads a FaultInjector through the
-        PUT-boundary crashpoints (tests only)."""
+        PUT-boundary crashpoints (tests only). ``cache_policy`` names
+        the decode-cache eviction policy ("lru"/"arc", §14.1) and
+        ``singleflight=False`` disables the §14.2 cold-decode collapse
+        (benchmark A/B only). ``tier_path`` roots a local-disk chunk
+        tier in front of the remote store (§14.3) budgeted by
+        ``tier_bytes`` (default ``DEFAULT_TIER_BYTES``); the tier reuses
+        the scan-resistant policy family and survives reopen."""
         if client is None:
             if path is None:
                 raise ValueError("ObjectStoreBackend needs a path (local "
@@ -457,7 +623,19 @@ class ObjectStoreBackend(PlannedChainReader):
         self._cache = ShardedDecodeCache(
             cache_bytes if cache_bytes is not None else DEFAULT_CACHE_BYTES,
             shards=cache_shards if cache_shards is not None
-            else DEFAULT_CACHE_SHARDS)
+            else DEFAULT_CACHE_SHARDS,
+            policy=cache_policy if cache_policy is not None
+            else DEFAULT_CACHE_POLICY)
+        self._init_read_engine_state(singleflight)
+        if tier_path is not None:
+            # the tier defaults to the scan-resistant policy even when
+            # the in-RAM cache stays lru — scans must stream through the
+            # disk tier too, and there is no compatibility reason to
+            # rotate it (§14.3)
+            self._tier = DiskTierCache(
+                tier_path,
+                tier_bytes if tier_bytes is not None else DEFAULT_TIER_BYTES,
+                policy=cache_policy if cache_policy is not None else "arc")
         self._recipes: list[list[int] | None] = []
         self._recipe_lens: dict[int, list[int]] = {}
         self._max_recipe_cid = -1
@@ -515,8 +693,37 @@ class ObjectStoreBackend(PlannedChainReader):
                               "Transient failures absorbed by the retry "
                               "policy")
         client = self.client
+        tier = self._tier
+        c_tier = g_tier = None
+        if tier is not None:
+            c_tier = {
+                "hit": m.counter("repro_tier_lookups_total",
+                                 "Disk-tier probe outcomes (§14.3)",
+                                 labels={"outcome": "hit"}),
+                "miss": m.counter("repro_tier_lookups_total",
+                                  "Disk-tier probe outcomes (§14.3)",
+                                  labels={"outcome": "miss"}),
+                "served": m.counter("repro_tier_bytes_total",
+                                    "Bytes served from / filled into the "
+                                    "disk tier", labels={"dir": "served"}),
+                "filled": m.counter("repro_tier_bytes_total",
+                                    "Bytes served from / filled into the "
+                                    "disk tier", labels={"dir": "filled"}),
+                "dropped": m.counter("repro_tier_dropped_total",
+                                     "Tier entries unlinked on crc "
+                                     "mismatch (bit rot or "
+                                     "post-compaction staleness; §14.3)"),
+            }
+            g_tier = m.gauge("repro_tier_bytes", "Disk-tier residency")
 
         def _export_objstore_views() -> None:
+            if c_tier is not None:
+                c_tier["hit"].set_total(tier.hits)
+                c_tier["miss"].set_total(tier.misses)
+                c_tier["served"].set_total(tier.bytes_served)
+                c_tier["filled"].set_total(tier.bytes_filled)
+                c_tier["dropped"].set_total(tier.dropped)
+                g_tier.set(tier.bytes)
             c_retries.set_total(self.retries)
             op_counts = getattr(client, "op_counts", None)
             if op_counts is not None:
@@ -749,6 +956,8 @@ class ObjectStoreBackend(PlannedChainReader):
             self._crcs.pop(cid, None)
             self._max_recipe_cid = max(self._max_recipe_cid, cid)
         self._cache.retain(lambda cid: cid not in dropped)
+        if self._tier is not None:
+            self._tier.retain(lambda cid: cid not in dropped)
 
     def storage_bytes(self) -> int:
         self.flush()
@@ -808,9 +1017,50 @@ class ObjectStoreBackend(PlannedChainReader):
         self._index = new_index
         self._crcs = new_crcs
         self._cache.retain(new_index.__contains__)
+        if self._tier is not None:
+            # swept cids leave the tier now; entries whose payload the
+            # rebase rewrote fail their next crc re-check and drop then
+            self._tier.retain(new_index.__contains__)
         self._cur_seq = seq
         self._next_journal = 1
         self._dirty = False
+
+    def scrub_stream(self):
+        """Streaming scrub source (§14.5): ``(payload_requests, iter)``
+        where the iterator yields ``(cid, payload | None)`` for every
+        indexed chunk and ``payload_requests`` counts the client GETs it
+        will cost — **one full GET per container object** instead of one
+        ranged GET per chunk (the §13 scrub's per-record path). ``None``
+        means the chunk's bytes are unreadable (container object missing
+        or too short); scrub classifies those. Bypasses the decode cache
+        and the disk tier by design — scrub verifies what the *store*
+        holds, not what a cache holds."""
+        self.flush()
+        by_seq: dict[int, list[tuple[int, int, int]]] = {}
+        for cid, (kind, base, voff, length) in self._index.items():
+            by_seq.setdefault(voff >> _OBJ_SHIFT, []).append(
+                (voff & _OBJ_MASK, length, cid))
+
+        def stream():
+            for seq in sorted(by_seq):
+                key = self._chunk_key(self.epoch, seq)
+                try:
+                    blob = self._call(self.client.get, key)
+                except (KeyError, OSError):
+                    blob = None
+                extents = sorted(by_seq[seq])
+                if blob is None:
+                    for _, _, cid in extents:
+                        yield cid, None
+                    continue
+                view = memoryview(blob)
+                for off, length, cid in extents:
+                    if off + length > len(blob):
+                        yield cid, None     # short object: torn record
+                    else:
+                        yield cid, bytes(view[off:off + length])
+
+        return len(by_seq), stream()
 
     def flush(self) -> None:
         with self._io_lock:
@@ -1248,6 +1498,12 @@ def _cmd_scrub(args) -> int:
               f"({report.verified} verified, "
               f"{report.unverifiable} unverifiable)")
         print(f"bytes checked   {_human(report.bytes_checked)}")
+        naive = report.payload_requests_naive
+        if naive and report.payload_requests < naive:
+            saved = naive - report.payload_requests
+            print(f"GET requests    {report.payload_requests} streamed "
+                  f"(vs {naive} per-chunk: {saved} saved, "
+                  f"{100.0 * saved / naive:.0f}%)")
         print(f"streams         {report.streams}")
         if report.corrupt:
             print(f"CORRUPT chunks  {list(report.corrupt)}")

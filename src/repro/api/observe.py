@@ -47,7 +47,10 @@ Two kinds of metric, one registry (the "no parallel bookkeeping" rule):
 
 Naming convention: ``repro_<subsystem>_<name>{label="..."}`` with
 subsystems ``ingest`` / ``restore`` / ``gc`` / ``lock`` / ``reader`` /
-``objstore`` / ``store``; ``_total`` suffixes monotonic counters,
+``objstore`` / ``store`` / ``scrub`` and the §14 cache hierarchy's
+``cache`` (eviction/ghost signals) / ``singleflight`` (cold-decode
+collapsing) / ``tier`` (local-disk chunk cache) families;
+``_total`` suffixes monotonic counters,
 ``_seconds`` / ``_bytes`` name units (DESIGN.md §12.2 lists the full
 catalog).
 

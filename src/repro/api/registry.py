@@ -13,6 +13,9 @@ evolve independently):
     backends    "memory", "file", "objectstore", "s3" container backends
     policies    "eager", "threshold", "never" reclamation policies
                 (DESIGN.md §7.4) — when a delete should trigger compaction
+    cache policies  "lru", "arc" decode-cache eviction policies
+                (DESIGN.md §14.1) — factories taking ``budget_bytes`` and
+                returning a ``CachePolicy`` (api/restore.py)
 
 Built-ins register themselves via the decorators at their definition site
 (e.g. ``@register_index("exact")`` in core/similarity.py); third-party
@@ -36,6 +39,7 @@ _INDEXES: dict[str, Callable[..., Any]] = {}
 _CHUNKERS: dict[str, Callable[..., Any]] = {}
 _BACKENDS: dict[str, Callable[..., Any]] = {}
 _POLICIES: dict[str, Callable[..., Any]] = {}
+_CACHE_POLICIES: dict[str, Callable[..., Any]] = {}
 
 _builtins_loaded = False
 
@@ -91,15 +95,18 @@ register_index = _make_register(_INDEXES, "index")
 register_chunker = _make_register(_CHUNKERS, "chunker")
 register_backend = _make_register(_BACKENDS, "backend")
 register_policy = _make_register(_POLICIES, "policy")
+register_cache_policy = _make_register(_CACHE_POLICIES, "cache policy")
 
 get_detector = _make_get(_DETECTORS, "detector")
 get_index = _make_get(_INDEXES, "index")
 get_chunker = _make_get(_CHUNKERS, "chunker")
 get_backend = _make_get(_BACKENDS, "backend")
 get_policy = _make_get(_POLICIES, "policy")
+get_cache_policy = _make_get(_CACHE_POLICIES, "cache policy")
 
 available_detectors = _make_available(_DETECTORS)
 available_indexes = _make_available(_INDEXES)
 available_chunkers = _make_available(_CHUNKERS)
 available_backends = _make_available(_BACKENDS)
 available_policies = _make_available(_POLICIES)
+available_cache_policies = _make_available(_CACHE_POLICIES)

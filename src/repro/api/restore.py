@@ -12,11 +12,13 @@ backend I/O), so every backend and the store share them:
                    physical payload reads in ascending log-offset order
                    (the backend coalesces adjacent records into batched
                    sequential reads);
-    DecodeCache    byte-budgeted LRU over materialized chunk bytes with
+    DecodeCache    byte-budgeted cache over materialized chunk bytes with
                    chain-aware pinning: an entry a still-pending patch in
                    the current plan decodes against is pinned and cannot
-                   be evicted, everything else rotates LRU under the
-                   budget. Replaces FileBackend's unbounded dict cache —
+                   be evicted, everything else rotates under the budget
+                   according to a pluggable :class:`CachePolicy`
+                   ("lru" or the scan-resistant "arc", DESIGN.md §14.1).
+                   Replaces FileBackend's unbounded dict cache —
                    restoring a store larger than RAM no longer
                    materializes the whole dataset.
     RecipeLayout   prefix sums over a recipe's materialized chunk
@@ -36,7 +38,9 @@ import dataclasses
 import itertools
 import threading
 from collections import OrderedDict
-from typing import Callable, Sequence
+from typing import Callable, Protocol, Sequence
+
+from repro.api.registry import get_cache_policy, register_cache_policy
 
 #: Default decode-cache budget for file-backed stores. Large enough that
 #: version-chain restores stay warm, small enough that restoring a
@@ -49,9 +53,201 @@ DEFAULT_CACHE_BYTES = 128 << 20
 #: rarely contend on the same shard lock.
 DEFAULT_CACHE_SHARDS = 8
 
+#: Default eviction policy (DESIGN.md §14.1). "lru" preserves the
+#: pre-§14 behaviour bit-for-bit; "arc" adds scan resistance.
+DEFAULT_CACHE_POLICY = "lru"
+
+
+class CachePolicy(Protocol):
+    """Eviction-ordering strategy behind :class:`DecodeCache`
+    (DESIGN.md §14.1).
+
+    The cache owns storage (``cid -> bytes``), pin refcounts, the byte
+    ledger, and the lock; the policy owns only *ordering* metadata —
+    which live cid to evict next, plus any ghost bookkeeping for
+    entries already evicted. Every method is called with the cache's
+    shard lock held, so policies need no locking of their own. The
+    policy's live-entry book must mirror the cache's entries exactly:
+    every ``on_insert``ed cid stays known until ``victim`` returns it
+    or ``on_remove`` drops it.
+
+    Factories are registered via ``register_cache_policy(name)`` and
+    take the shard's ``budget_bytes`` (ghost lists size themselves off
+    it).
+    """
+
+    ghost_hits: int   # evicted-then-rereferenced events (scan signal)
+    evictions: int    # victims handed back from victim()
+
+    def on_hit(self, cid: int) -> None:
+        """A cached cid was referenced (get/get_present/try_pin)."""
+
+    def on_insert(self, cid: int, nbytes: int) -> None:
+        """``put`` stored ``nbytes`` for cid (may replace a live entry;
+        policies must treat a live re-insert as a size update + touch)."""
+
+    def on_remove(self, cid: int) -> None:
+        """cid was invalidated (compaction ``retain``): forget it
+        entirely — no ghost entry, the chunk no longer exists."""
+
+    def victim(self, is_pinned: Callable[[int], object]) -> int | None:
+        """Pick, book-keep (live -> ghost), and return the next evictee,
+        skipping cids where ``is_pinned(cid)`` is truthy; None when every
+        live entry is pinned."""
+
+
+@register_cache_policy("lru")
+class LruCachePolicy:
+    """Classic least-recently-used — the pre-§14 inlined policy, byte
+    identical: one recency queue, oldest unpinned entry evicts first,
+    no ghost memory (``ghost_hits`` stays 0)."""
+
+    def __init__(self, budget_bytes: int) -> None:
+        self._order: "OrderedDict[int, int]" = OrderedDict()
+        self.ghost_hits = 0
+        self.evictions = 0
+
+    def on_hit(self, cid: int) -> None:
+        self._order.move_to_end(cid)
+
+    def on_insert(self, cid: int, nbytes: int) -> None:
+        self._order[cid] = nbytes
+        self._order.move_to_end(cid)
+
+    def on_remove(self, cid: int) -> None:
+        self._order.pop(cid, None)
+
+    def victim(self, is_pinned: Callable[[int], object]) -> int | None:
+        cid = next((c for c in self._order if not is_pinned(c)), None)
+        if cid is not None:
+            del self._order[cid]
+            self.evictions += 1
+        return cid
+
+
+@register_cache_policy("arc")
+class ArcCachePolicy:
+    """Scan-resistant adaptive policy (ARC-style ghost lists, §14.1).
+
+    Live entries split into a recency queue T1 (seen once) and a
+    frequency queue T2 (seen again while live); evicted cids leave a
+    byte-sized *ghost* in B1/B2 mirroring the queue they died in. A
+    miss that lands on a ghost is a reuse the cache failed to hold —
+    the adaptation target ``p`` (how many budget bytes T1 deserves)
+    grows on B1 ghost hits and shrinks on B2 ghost hits, and the
+    reinserted cid goes straight to T2. A whole-store scan touches
+    every chunk exactly once, so its pages live and die in T1 without
+    ever displacing T2 — the hot chain bases pointed restores need
+    (the 1701.04451 workload argument in ISSUE/ROADMAP).
+
+    Sizes are bytes, not entry counts — chunk sizes vary ~100× and an
+    entry-counted ARC would let one jumbo raw chunk evict a thousand
+    hot bases. Ghost lists are trimmed to one budget's worth of bytes
+    per side, so policy overhead stays O(metadata), never O(payload).
+    """
+
+    def __init__(self, budget_bytes: int) -> None:
+        self.budget_bytes = int(budget_bytes)
+        self._t1: "OrderedDict[int, int]" = OrderedDict()  # recency
+        self._t2: "OrderedDict[int, int]" = OrderedDict()  # frequency
+        self._b1: "OrderedDict[int, int]" = OrderedDict()  # ghosts of T1
+        self._b2: "OrderedDict[int, int]" = OrderedDict()  # ghosts of T2
+        self._t1_bytes = 0
+        self._b1_bytes = 0
+        self._b2_bytes = 0
+        self._p = 0               # byte target for T1
+        self.ghost_hits = 0
+        self.evictions = 0
+
+    def on_hit(self, cid: int) -> None:
+        nbytes = self._t1.pop(cid, None)
+        if nbytes is not None:    # second reference: promote to T2
+            self._t1_bytes -= nbytes
+            self._t2[cid] = nbytes
+        elif cid in self._t2:
+            self._t2.move_to_end(cid)
+
+    def on_insert(self, cid: int, nbytes: int) -> None:
+        nbytes = int(nbytes)
+        if cid in self._t1:       # live replacement: size update + touch
+            self._t1_bytes += nbytes - self._t1[cid]
+            self._t1[cid] = nbytes
+            self._t1.move_to_end(cid)
+            return
+        if cid in self._t2:
+            self._t2[cid] = nbytes
+            self._t2.move_to_end(cid)
+            return
+        ghost = self._b1.pop(cid, None)
+        if ghost is not None:     # recency ghost: T1 was too small
+            self._b1_bytes -= ghost
+            self.ghost_hits += 1
+            self._p = min(self.budget_bytes, self._p + ghost)
+            self._t2[cid] = nbytes
+            return
+        ghost = self._b2.pop(cid, None)
+        if ghost is not None:     # frequency ghost: T1 was too greedy
+            self._b2_bytes -= ghost
+            self.ghost_hits += 1
+            self._p = max(0, self._p - ghost)
+            self._t2[cid] = nbytes
+            return
+        self._t1[cid] = nbytes    # brand new: recency side
+        self._t1_bytes += nbytes
+
+    def on_remove(self, cid: int) -> None:
+        nbytes = self._t1.pop(cid, None)
+        if nbytes is not None:
+            self._t1_bytes -= nbytes
+        else:
+            self._t2.pop(cid, None)
+        # invalidations leave no ghost: the chunk is gone from the
+        # store, remembering it would skew adaptation toward dead ids
+
+    def victim(self, is_pinned: Callable[[int], object]) -> int | None:
+        # evict from T1 while it overshoots its target (or T2 is empty),
+        # else from T2; fall back to the other queue when the preferred
+        # one holds only pinned entries
+        prefer_t1 = self._t1_bytes > self._p or not self._t2
+        queues = (self._t1, self._t2) if prefer_t1 else (self._t2, self._t1)
+        for queue in queues:
+            cid = next((c for c in queue if not is_pinned(c)), None)
+            if cid is None:
+                continue
+            nbytes = queue.pop(cid)
+            if queue is self._t1:
+                self._t1_bytes -= nbytes
+                self._b1[cid] = nbytes
+                self._b1_bytes += nbytes
+            else:
+                self._b2[cid] = nbytes
+                self._b2_bytes += nbytes
+            self.evictions += 1
+            self._trim_ghosts()
+            return cid
+        return None
+
+    def _trim_ghosts(self) -> None:
+        # each ghost side remembers at most one budget's worth of
+        # evicted bytes — enough to recognize any reuse the live cache
+        # could possibly have held, bounded so metadata cannot grow
+        # with the store
+        while self._b1_bytes > self.budget_bytes and self._b1:
+            _, nbytes = self._b1.popitem(last=False)
+            self._b1_bytes -= nbytes
+        while self._b2_bytes > self.budget_bytes and self._b2:
+            _, nbytes = self._b2.popitem(last=False)
+            self._b2_bytes -= nbytes
+
+
+def _resolve_policy(policy: str, budget_bytes: int):
+    factory = get_cache_policy(policy)
+    return factory(budget_bytes)
+
 
 class DecodeCache:
-    """Byte-budgeted LRU of materialized chunk bytes with pinning.
+    """Byte-budgeted cache of materialized chunk bytes with pinning and
+    a pluggable eviction policy (DESIGN.md §9, §14.1).
 
     ``pin``/``unpin`` are refcounted; pinned entries are skipped by
     eviction (the restore planner pins a base until the last dependent
@@ -60,18 +256,26 @@ class DecodeCache:
     stable points (after each eviction pass), which is what the budget
     acceptance test pins.
 
+    Eviction *ordering* is delegated to a :class:`CachePolicy` resolved
+    by registry name ("lru" default, "arc" scan-resistant); storage,
+    pins, byte accounting, and hit/miss counters live here so the
+    pin/try_pin/get_present contracts are identical under every policy.
+
     Every mutating operation is atomic under an internal lock, so a
     single instance is safe to share between restore threads — and it is
     the shard building block of :class:`ShardedDecodeCache`, which
     spreads that lock N ways (DESIGN.md §10.2).
     """
 
-    def __init__(self, budget_bytes: int = DEFAULT_CACHE_BYTES) -> None:
+    def __init__(self, budget_bytes: int = DEFAULT_CACHE_BYTES,
+                 policy: str = DEFAULT_CACHE_POLICY) -> None:
         if budget_bytes <= 0:
             raise ValueError(f"cache budget must be positive, got {budget_bytes}")
         self.budget_bytes = int(budget_bytes)
+        self.policy_name = str(policy)
+        self._policy = _resolve_policy(self.policy_name, self.budget_bytes)
         self._lock = threading.Lock()
-        self._entries: "OrderedDict[int, bytes]" = OrderedDict()
+        self._entries: dict[int, bytes] = {}
         self._pins: dict[int, int] = {}
         self.bytes = 0
         self.peak_bytes = 0
@@ -85,22 +289,23 @@ class DecodeCache:
         return len(self._entries)
 
     def get(self, cid: int) -> bytes | None:
-        """Cached bytes (refreshing LRU position) or None; counts hit/miss."""
+        """Cached bytes (touching the policy's ordering) or None; counts
+        hit/miss."""
         with self._lock:
             data = self._entries.get(cid)
             if data is None:
                 self.misses += 1
                 return None
             self.hits += 1
-            self._entries.move_to_end(cid)
+            self._policy.on_hit(cid)
             return data
 
     def peek(self, cid: int) -> bytes | None:
-        """``get`` without touching the hit/miss counters or LRU order —
-        for plan-internal base lookups (the plan itself pinned the entry
-        moments ago; counting those as hits would inflate the §9.4
-        telemetry every cold restore of a delta chain). Still takes the
-        lock — other threads mutate the OrderedDict under it, and the
+        """``get`` without touching the hit/miss counters or eviction
+        order — for plan-internal base lookups (the plan itself pinned
+        the entry moments ago; counting those as hits would inflate the
+        §9.4 telemetry every cold restore of a delta chain). Still takes
+        the lock — other threads mutate the dict under it, and the
         thread-safety contract is every-operation-atomic, not
         GIL-happens-to-save-us."""
         with self._lock:
@@ -109,11 +314,14 @@ class DecodeCache:
     def get_present(self, cids: Sequence[int]) -> dict[int, bytes]:
         """Batched ``get``: one lock acquisition for the whole batch —
         the warm-restore hot path (§10.2) would otherwise pay a lock
-        round-trip per recipe slot. Counter/LRU semantics are identical
-        to per-cid ``get``; absent cids are simply missing from the
-        result (and counted as misses)."""
+        round-trip per recipe slot. Counter/ordering semantics are
+        identical to per-cid ``get``; absent cids are simply missing
+        from the result (and counted as misses — a caller that then
+        materializes them itself must reclassify, see
+        ``PlannedChainReader.get_many``)."""
         with self._lock:
             entries = self._entries
+            on_hit = self._policy.on_hit
             found: dict[int, bytes] = {}
             for cid in cids:
                 data = entries.get(cid)
@@ -121,7 +329,7 @@ class DecodeCache:
                     self.misses += 1
                 else:
                     self.hits += 1
-                    entries.move_to_end(cid)
+                    on_hit(cid)
                     found[cid] = data
             return found
 
@@ -131,8 +339,8 @@ class DecodeCache:
             if old is not None:
                 self.bytes -= len(old)
             self._entries[cid] = data
-            self._entries.move_to_end(cid)
             self.bytes += len(data)
+            self._policy.on_insert(cid, len(data))
             if pin:
                 self._pins[cid] = self._pins.get(cid, 0) + 1
             self._evict()
@@ -152,12 +360,13 @@ class DecodeCache:
         entry, so the two must be one operation. Deliberately does NOT
         count hits/misses — the serial planner's ``is_cached`` probe was
         uncounted too, and probing every chain node would otherwise
-        inflate the §9.4 telemetry on every cold restore."""
+        inflate the §9.4 telemetry on every cold restore. It IS a real
+        reuse though, so the policy ordering is touched."""
         with self._lock:
             data = self._entries.get(cid)
             if data is None:
                 return None
-            self._entries.move_to_end(cid)
+            self._policy.on_hit(cid)
             self._pins[cid] = self._pins.get(cid, 0) + 1
             return data
 
@@ -178,16 +387,24 @@ class DecodeCache:
             for cid in [c for c in self._entries
                         if not keep(c) and not self._pins.get(c)]:
                 data = self._entries.pop(cid)
+                self._policy.on_remove(cid)
                 self.bytes -= len(data)
 
+    @property
+    def ghost_hits(self) -> int:
+        return self._policy.ghost_hits
+
+    @property
+    def evictions(self) -> int:
+        return self._policy.evictions
+
     def _evict(self) -> None:
-        # called with self._lock held. Oldest-first scan that skips
-        # pinned entries; pinned bytes may transiently exceed the budget
-        # (the plan working set), and then nothing can be dropped until
-        # an unpin
+        # called with self._lock held. The policy picks victims (and
+        # does its ghost bookkeeping); pinned bytes may transiently
+        # exceed the budget (the plan working set), and then nothing
+        # can be dropped until an unpin
         while self.bytes > self.budget_bytes:
-            victim = next((c for c in self._entries
-                           if not self._pins.get(c)), None)
+            victim = self._policy.victim(self._pins.get)
             if victim is None:
                 break
             self.bytes -= len(self._entries.pop(victim))
@@ -209,12 +426,16 @@ class ShardedDecodeCache:
 
     Counters (``hits``/``misses``/``bytes``/``peak_bytes``) aggregate
     across shards; on a serial workload they equal a single-shard cache's
-    counters as long as no eviction fires (eviction order is per-shard
-    LRU, not global LRU — the one observable policy difference).
+    counters as long as no eviction fires (eviction order is per-shard,
+    not global — the one observable policy difference).
+
+    Every shard runs its own instance of the same :class:`CachePolicy`
+    (§14.1), each adapting to the id-striped slice of traffic it sees.
     """
 
     def __init__(self, budget_bytes: int = DEFAULT_CACHE_BYTES,
-                 shards: int = DEFAULT_CACHE_SHARDS) -> None:
+                 shards: int = DEFAULT_CACHE_SHARDS,
+                 policy: str = DEFAULT_CACHE_POLICY) -> None:
         if budget_bytes <= 0:
             raise ValueError(f"cache budget must be positive, got {budget_bytes}")
         if shards <= 0:
@@ -222,9 +443,10 @@ class ShardedDecodeCache:
         # never hand a shard a zero budget (DecodeCache rejects it)
         shards = min(int(shards), int(budget_bytes))
         base, rem = divmod(int(budget_bytes), shards)
-        self.shards = [DecodeCache(base + (1 if i < rem else 0))
+        self.shards = [DecodeCache(base + (1 if i < rem else 0), policy=policy)
                        for i in range(shards)]
         self.budget_bytes = int(budget_bytes)
+        self.policy_name = str(policy)
 
     def _shard(self, cid: int) -> DecodeCache:
         return self.shards[cid % len(self.shards)]
@@ -293,6 +515,14 @@ class ShardedDecodeCache:
     @property
     def peak_bytes(self) -> int:
         return sum(s.peak_bytes for s in self.shards)
+
+    @property
+    def ghost_hits(self) -> int:
+        return sum(s.ghost_hits for s in self.shards)
+
+    @property
+    def evictions(self) -> int:
+        return sum(s.evictions for s in self.shards)
 
     @property
     def _pins(self) -> dict[int, int]:

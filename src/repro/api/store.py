@@ -296,6 +296,33 @@ class DedupStore:
         Also reachable as ``store.observe.metrics``."""
         return self.observe.metrics
 
+    def cache_stats(self) -> dict:
+        """Lifetime cache-hierarchy signals (DESIGN.md §14) as one flat
+        dict: eviction-policy name plus ghost hits and evictions from the
+        decode cache, cold-decode singleflight waits/collapsed and the
+        total decode count, and the local-disk tier's hit/miss/byte/drop
+        tallies when a tier is configured. Every key reads straight off
+        the backend (derived view, never a second copy); backends without
+        the §14 read engine (memory, third-party) report zeros."""
+        b = self.backend
+        cache = getattr(b, "_cache", None)
+        out = {
+            "policy": getattr(cache, "policy_name", None),
+            "ghost_hits": getattr(cache, "ghost_hits", 0),
+            "evictions": getattr(cache, "evictions", 0),
+            "singleflight_waits": getattr(b, "_sf_waits", 0),
+            "singleflight_collapsed": getattr(b, "_sf_collapsed", 0),
+            "decoded_chunks": getattr(b, "decoded_chunks", 0),
+        }
+        tier = getattr(b, "_tier", None)
+        out["tier"] = None if tier is None else {
+            "bytes": tier.bytes, "entries": len(tier),
+            "hits": tier.hits, "misses": tier.misses,
+            "bytes_served": tier.bytes_served,
+            "bytes_filled": tier.bytes_filled, "dropped": tier.dropped,
+        }
+        return out
+
     def fit(self, training_streams: Sequence[bytes]) -> None:
         t0 = time.perf_counter()
         self.detector.fit(training_streams, self.cfg)

@@ -1,0 +1,434 @@
+"""Scan-resistant tiered cache hierarchy (DESIGN.md §14): pluggable
+eviction policies (lru/arc parity + scan resistance), per-shard budget
+ceilings, cold-decode singleflight (decode counters under a thread
+race), the local-disk tier (reopen survival, corrupt-entry refetch),
+heat-aware compaction placement, streaming-scrub request savings, and
+the new Prometheus families' round-trip."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api.config import DedupConfig, build_store
+from repro.api.containers import FileBackend
+from repro.api.lifecycle import _placement_order
+from repro.api.objectstore import DiskTierCache, ObjectStoreBackend
+from repro.api.observe import parse_prometheus_text
+from repro.api.registry import available_cache_policies, get_cache_policy
+from repro.api.restore import (ArcCachePolicy, DecodeCache, LruCachePolicy,
+                               ShardedDecodeCache)
+from repro.core import delta
+
+
+# --- fixtures ----------------------------------------------------------------
+
+def _blobs(n, size=3000, seed=0):
+    rng = np.random.default_rng(seed)
+    return {i: bytes(rng.integers(0, 256, size, np.uint8)) for i in range(n)}
+
+
+def _populate(backend, blobs, raw_n):
+    """First ``raw_n`` chunks raw, the rest delta-chained onto them;
+    one recipe per half. Returns (h0, h1)."""
+    n = len(blobs)
+    backend.put_many([(i, -1, blobs[i], None) for i in range(raw_n)])
+    backend.put_many([(i, i - raw_n,
+                       delta.encode(blobs[i], blobs[i - raw_n]), blobs[i])
+                      for i in range(raw_n, n)])
+    h0 = backend.add_recipe(list(range(raw_n)),
+                            [len(blobs[i]) for i in range(raw_n)])
+    h1 = backend.add_recipe(list(range(raw_n, n)),
+                            [len(blobs[i]) for i in range(raw_n, n)])
+    backend.flush()
+    return h0, h1
+
+
+def _cold(backend):
+    backend._cache.retain(lambda cid: False)
+
+
+def _store(tmp_path, name, **knobs):
+    cfg = DedupConfig.from_dict({
+        "detector": "dedup-only", "backend": "file",
+        "backend_args": {"path": str(tmp_path / name)},
+        "chunker_args": {"avg_size": 2048}, **knobs})
+    return build_store(cfg)
+
+
+# --- policy registry + config knobs ------------------------------------------
+
+def test_cache_policy_registry():
+    assert {"lru", "arc"} <= set(available_cache_policies())
+    assert get_cache_policy("lru") is LruCachePolicy
+    assert get_cache_policy("arc") is ArcCachePolicy
+    with pytest.raises(KeyError):
+        get_cache_policy("clock")
+
+
+def test_cache_policy_knob_validation(tmp_path):
+    with pytest.raises(TypeError):
+        DedupConfig.from_dict({"restore_cache_policy": 7})
+    with pytest.raises(TypeError):
+        DedupConfig.from_dict({"restore_tier_path": 7})
+    with pytest.raises(ValueError):
+        DedupConfig.from_dict({"restore_tier_bytes": 0})
+    store = _store(tmp_path, "f", restore_cache_policy="arc")
+    assert store.backend._cache.policy_name == "arc"
+    store.close()
+    with pytest.raises(KeyError):        # unknown name fails at build
+        build_store(DedupConfig.from_dict({
+            "detector": "dedup-only", "backend": "file",
+            "backend_args": {"path": str(tmp_path / "g")},
+            "restore_cache_policy": "clock"}))
+
+
+# --- policy parity: restores byte-identical under every policy ---------------
+
+@pytest.mark.parametrize("policy", ["lru", "arc"])
+def test_policy_restore_byte_identity(tmp_path, policy):
+    """A tiny cache forces constant eviction; every policy must still
+    restore byte-identically (policies order eviction, never bytes)."""
+    blobs = _blobs(24, size=4000, seed=3)
+    backend = FileBackend(tmp_path / policy, cache_bytes=10_000,
+                          cache_shards=2, cache_policy=policy)
+    h0, h1 = _populate(backend, blobs, 12)
+    for _ in range(3):                  # repeat: hits + evictions interleave
+        got = backend.get_many(list(range(24)))
+        assert got == [blobs[i] for i in range(24)]
+    assert backend._cache.evictions > 0
+    backend.close()
+
+
+def test_lru_matches_inlined_behaviour():
+    """The extracted lru policy preserves the pre-§14 inlined ordering:
+    oldest unpinned evicts first, get refreshes recency, pins skip."""
+    cache = DecodeCache(budget_bytes=30, policy="lru")
+    cache.put(1, b"x" * 10)
+    cache.put(2, b"y" * 10)
+    cache.put(3, b"z" * 10)
+    assert cache.get(1) is not None     # refresh 1: 2 is now oldest
+    cache.put(4, b"w" * 10)             # evicts 2
+    assert cache.peek(2) is None and cache.peek(1) is not None
+    cache.pin(3)
+    cache.put(5, b"v" * 20)             # needs 2 evictions; 3 is pinned
+    assert cache.peek(3) is not None and cache.peek(5) is not None
+    assert cache.ghost_hits == 0        # lru keeps no ghosts
+
+
+# --- arc: scan resistance ----------------------------------------------------
+
+def test_arc_scan_does_not_evict_hot_set():
+    """Chunks referenced twice live in T2; a one-touch scan flows
+    through T1 and must not displace them (the §14.1 argument). Under
+    lru the same scan evicts the whole hot set."""
+    def run(policy):
+        cache = DecodeCache(budget_bytes=100, policy=policy)
+        for cid in range(5):            # hot set: 50 bytes, touched again
+            cache.put(cid, b"h" * 10)
+        for cid in range(5):
+            assert cache.get(cid) is not None
+        for cid in range(100, 140):     # 400-byte one-touch scan
+            cache.put(cid, b"s" * 10)
+        return sum(cache.peek(cid) is not None for cid in range(5))
+
+    assert run("lru") == 0              # scan flushed everything
+    assert run("arc") >= 4              # T2 survived the scan
+
+def test_arc_ghost_hit_adapts_and_counts():
+    pol = ArcCachePolicy(budget_bytes=20)
+    pol.on_insert(1, 10)
+    pol.on_insert(2, 10)
+    assert pol.victim(lambda c: False) == 1     # oldest T1 -> B1 ghost
+    assert pol.evictions == 1
+    pol.on_insert(1, 10)                # miss on a B1 ghost
+    assert pol.ghost_hits == 1
+    assert pol._p == 10                 # recency side earned bytes
+    assert 1 in pol._t2                 # reinserted as frequent
+    pol.on_remove(1)                    # invalidation: no ghost left
+    assert 1 not in pol._b1 and 1 not in pol._b2
+
+
+def test_arc_all_pinned_returns_none():
+    cache = DecodeCache(budget_bytes=20, policy="arc")
+    cache.put(1, b"x" * 10, pin=True)
+    cache.put(2, b"y" * 10, pin=True)
+    cache.put(3, b"z" * 30)             # over budget, nothing evictable
+    assert cache.peek(1) is not None and cache.peek(2) is not None
+
+
+# --- sharded budget ceiling --------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["lru", "arc"])
+def test_sharded_budget_ceiling(policy):
+    budget = 64 << 10
+    cache = ShardedDecodeCache(budget_bytes=budget, shards=4, policy=policy)
+    rng = np.random.default_rng(11)
+    for cid in range(300):
+        cache.put(cid, bytes(rng.integers(0, 256, 1024, np.uint8)))
+        assert cache.bytes <= budget
+    assert cache.peak_bytes <= budget
+    assert cache.evictions > 0
+    assert cache.policy_name == policy
+
+
+# --- cold-decode singleflight ------------------------------------------------
+
+def test_singleflight_race_decode_counters(tmp_path, monkeypatch):
+    """N threads cold-restoring the same delta-heavy recipe: decodes
+    collapse to roughly one per chunk (bounded slack for the deadlock-
+    avoiding ownership fallback), waits/collapses are counted, and every
+    thread gets byte-identical data. A slowed decode pins the overlap
+    the race needs — local preads alone finish before contention."""
+    import time as _time
+
+    from repro.api import containers as cmod
+    real_decode = cmod.delta.decode
+
+    def slow_decode(patch, base):
+        _time.sleep(0.002)
+        return real_decode(patch, base)
+
+    monkeypatch.setattr(cmod.delta, "decode", slow_decode)
+    blobs = _blobs(16, size=6000, seed=7)
+    backend = FileBackend(tmp_path / "sf", cache_bytes=32 << 20)
+    _populate(backend, blobs, 4)
+    want = [blobs[i] for i in range(16)]
+    nthreads = 4
+    barrier = threading.Barrier(nthreads)
+    results, errors = [None] * nthreads, []
+
+    def worker(i):
+        try:
+            barrier.wait()
+            results[i] = backend.get_many(list(range(16)))
+        except Exception as e:          # pragma: no cover - fail loudly
+            errors.append(e)
+
+    _cold(backend)
+    backend.decoded_chunks = 0
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(nthreads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert all(r == want for r in results)
+    # decode-once up to the rare ownership fallback: far below the
+    # nthreads * unique a raceable cache would pay
+    assert backend.decoded_chunks <= 2 * len(blobs)
+    assert backend._sf_waits + backend._sf_collapsed > 0
+    backend.close()
+
+
+def test_singleflight_off_still_correct(tmp_path):
+    blobs = _blobs(8, size=4000, seed=9)
+    backend = FileBackend(tmp_path / "nosf", singleflight=False)
+    _populate(backend, blobs, 2)
+    _cold(backend)
+    assert backend.get_many(list(range(8))) == [blobs[i] for i in range(8)]
+    assert backend._sf_waits == 0 and backend._sf_collapsed == 0
+    backend.close()
+
+
+# --- local-disk tier ---------------------------------------------------------
+
+def _tier_backend(tmp_path, **kw):
+    return ObjectStoreBackend(tmp_path / "o",
+                              tier_path=tmp_path / "tier",
+                              tier_bytes=8 << 20, **kw)
+
+
+def test_disk_tier_serves_and_survives_reopen(tmp_path):
+    blobs = _blobs(12, size=5000, seed=13)
+    b0 = _tier_backend(tmp_path)
+    _populate(b0, blobs, 6)
+    _cold(b0)
+    assert b0.get_many(list(range(12))) == [blobs[i] for i in range(12)]
+    assert b0._tier.bytes_filled > 0    # cold read fed the tier
+    b0.close()
+
+    b1 = _tier_backend(tmp_path)        # reopen: tier adopted from disk
+    assert len(b1._tier) > 0
+    gets_before = b1.client.op_counts["get"]
+    assert b1.get_many(list(range(12))) == [blobs[i] for i in range(12)]
+    assert b1._tier.hits > 0
+    # tier hits replace remote payload GETs (journal/manifest reads and
+    # sub-span fills remain)
+    assert b1.client.op_counts["get"] - gets_before < b1._tier.hits + 12
+    b1.close()
+
+
+def test_disk_tier_corrupt_entry_refetches(tmp_path):
+    """A bit-flipped tier file must never be served: the lazy crc
+    re-verify drops it (dropped counter) and the read refetches from
+    the store, byte-identical."""
+    blobs = _blobs(6, size=4000, seed=17)
+    b0 = _tier_backend(tmp_path)
+    _populate(b0, blobs, 3)
+    _cold(b0)
+    b0.get_many(list(range(6)))
+    b0.close()
+
+    victim = 2
+    path = DiskTierCache(tmp_path / "tier", 8 << 20)._path(victim)
+    raw = bytearray(path.read_bytes())
+    raw[0] ^= 0xFF
+    path.write_bytes(bytes(raw))
+
+    b1 = _tier_backend(tmp_path)
+    assert b1.get_many(list(range(6))) == [blobs[i] for i in range(6)]
+    assert b1._tier.dropped >= 1
+    b1.close()
+
+
+def test_disk_tier_respects_budget(tmp_path):
+    tier = DiskTierCache(tmp_path / "t", budget_bytes=10_000, policy="lru")
+    rng = np.random.default_rng(19)
+    from repro.api.integrity import crc32c
+    for cid in range(20):
+        payload = bytes(rng.integers(0, 256, 1000, np.uint8))
+        tier.put(cid, payload, crc32c(payload))
+        assert tier.bytes <= 10_000
+    assert len(tier) <= 10
+    tier.put(99, b"x" * 100, None)      # no journaled crc: never tiered
+    assert tier.get(99, None) is None
+
+
+def test_disk_tier_retain_after_compaction(tmp_path):
+    """Compaction rebases patches (same cid, new bytes): retain must
+    force every surviving entry through a fresh crc check so stale
+    pre-rebase bytes can never be served against the new journal crc."""
+    cfg = DedupConfig.from_dict({
+        "detector": "dedup-only", "backend": "objectstore",
+        "backend_args": {"path": str(tmp_path / "o")},
+        "restore_tier_path": str(tmp_path / "tier"),
+        "chunker_args": {"avg_size": 2048}})
+    store = build_store(cfg)
+    rng = np.random.default_rng(23)
+    base = rng.integers(0, 256, 48 << 10, np.uint8).tobytes()
+    edited = base[: 24 << 10] + rng.integers(0, 256, 24 << 10,
+                                             np.uint8).tobytes()
+    handles = []
+    for data in (base, edited):
+        with store.open_stream() as s:
+            s.write(data)
+        handles.append(s.report.handle)
+    _cold(store.backend)
+    assert store.restore(handles[1]) == edited      # tier filled
+    store.delete(handles[0])
+    store.compact()
+    _cold(store.backend)
+    assert store.restore(handles[1]) == edited      # post-rebase identity
+    store.close()
+
+
+# --- heat-aware compaction placement -----------------------------------------
+
+def test_placement_order_groups_hot_chains_first():
+    # two chains: 1 <- 2 <- 3 and 10 <- 11; chain 10 is hotter
+    keep = {1, 2, 3, 10, 11}
+    base_of = {1: -1, 2: 1, 3: 2, 10: -1, 11: 10}.__getitem__
+    heat = {10: 50, 11: 50, 2: 5}
+    assert _placement_order(keep, {}, base_of, heat) == [10, 11, 1, 2, 3]
+    # no heat: byte-stable sorted order
+    assert _placement_order(keep, {}, base_of, {}) == [1, 2, 3, 10, 11]
+    # a rebase moves 11 onto 1: placement follows the post-rebase chain
+    rebases = {11: (1, 1, b"p")}
+    assert _placement_order(keep, rebases, base_of, heat)[:4] == [1, 2, 3, 11]
+
+
+def test_compact_places_hot_chain_contiguously(tmp_path):
+    blobs = _blobs(12, size=3000, seed=29)
+    backend = FileBackend(tmp_path / "heat")
+    _populate(backend, blobs, 6)
+    for _ in range(10):                 # heat up the second recipe's chain
+        backend.get_many([7, 8])
+    heat = backend.chunk_heat()
+    assert heat[7] == 10 and heat[8] == 10
+
+    class _Store:                       # minimal lifecycle test double
+        pass
+
+    from repro.api.lifecycle import compact
+    from repro.api.refcount import RefcountTable
+    st = _Store()
+    st.backend = backend
+    st._refs = RefcountTable.rebuild(backend)
+    st._by_digest = {}
+    st._refresh_lifecycle_stats = lambda: None
+    st._compact_skipped_at = None
+    import types
+    st.stats = types.SimpleNamespace(reclaimed_bytes=0)
+    compact(st)
+    # the hot patches' chain (bases 1,2 + patches 7,8) leads the log
+    order = sorted(backend._index, key=lambda c: backend._index[c][2])
+    assert set(order[:4]) == {1, 7, 2, 8}
+    assert backend.get_many(list(range(12))) == \
+        [blobs[i] for i in range(12)]
+    backend.close()
+
+
+# --- streaming scrub ---------------------------------------------------------
+
+def test_scrub_stream_saves_requests(tmp_path):
+    cfg = DedupConfig.from_dict({
+        "detector": "dedup-only", "backend": "objectstore",
+        "backend_args": {"path": str(tmp_path / "o")},
+        "chunker_args": {"avg_size": 2048}})
+    store = build_store(cfg)
+    rng = np.random.default_rng(31)
+    data = rng.integers(0, 256, 64 << 10, np.uint8).tobytes()
+    with store.open_stream() as s:
+        s.write(data)
+    report = store.scrub()
+    assert report.clean
+    assert report.payload_requests_naive == report.chunks
+    assert 0 < report.payload_requests < report.payload_requests_naive
+    store.close()
+
+
+def test_scrub_per_chunk_fallback_counts_naive(tmp_path):
+    store = _store(tmp_path, "f")
+    with store.open_stream() as s:
+        s.write(b"ab" * 4096)
+    report = store.scrub()
+    assert report.clean
+    assert report.payload_requests == report.payload_requests_naive \
+        == report.chunks
+    store.close()
+
+
+# --- observability round-trip ------------------------------------------------
+
+def test_cache_hierarchy_prometheus_round_trip(tmp_path):
+    cfg = DedupConfig.from_dict({
+        "detector": "dedup-only", "backend": "objectstore",
+        "backend_args": {"path": str(tmp_path / "o")},
+        "restore_cache_bytes": 1 << 20, "restore_cache_policy": "arc",
+        "restore_tier_path": str(tmp_path / "tier"),
+        "chunker_args": {"avg_size": 2048}})
+    store = build_store(cfg)
+    rng = np.random.default_rng(37)
+    data = rng.integers(0, 256, 128 << 10, np.uint8).tobytes()
+    with store.open_stream() as s:
+        s.write(data)
+    h = s.report.handle
+    _cold(store.backend)
+    assert store.restore(h) == data
+    parsed = parse_prometheus_text(store.metrics().to_prometheus())
+    names = {n for n, _, _ in parsed["samples"]}
+    for name in ("repro_cache_ghost_hits_total",
+                 "repro_cache_evictions_total",
+                 "repro_singleflight_total",
+                 "repro_tier_lookups_total",
+                 "repro_tier_bytes_total",
+                 "repro_tier_dropped_total",
+                 "repro_tier_bytes"):
+        assert name in names, name
+    stats = store.cache_stats()
+    assert stats["policy"] == "arc"
+    assert stats["decoded_chunks"] > 0
+    assert stats["tier"] is not None
+    assert stats["tier"]["bytes_filled"] > 0
+    store.close()
