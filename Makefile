@@ -6,7 +6,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: dev-deps test test-fast test-lifecycle ci bench bench-smoke \
         observe-smoke chaos-smoke gc-bench ingest-bench restore-bench \
-        serve-bench verify-bench objstore-bench cache-bench quickstart
+        serve-bench verify-bench objstore-bench cache-bench serve-slo \
+        quickstart
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -78,6 +79,13 @@ objstore-bench:
 # object store; writes BENCH_CACHE.json
 cache-bench:
 	$(PYTHON) -m benchmarks.bench_cache
+
+# multi-tenant SLO load harness (DESIGN.md §15.5): open-loop mixed
+# workload across 4 tenants, baseline + backend fault drill; gates on
+# zero integrity errors / hangs / late reads and on the breaker
+# opening then recovering; writes BENCH_SERVE.json
+serve-slo:
+	$(PYTHON) -m benchmarks.bench_serve --quick --check
 
 quickstart:
 	$(PYTHON) examples/quickstart.py

@@ -1,0 +1,411 @@
+"""Multi-tenant SLO load harness (DESIGN.md §15.5): an open-loop
+generator drives a ``DedupServer`` over the object-store backend with a
+mixed ingest/restore/range/delete workload across N tenants, then
+repeats the run with a transient-fault storm on the backend.
+
+Open loop means arrivals follow a fixed schedule regardless of how the
+server keeps up — the honest way to measure tail latency under
+overload (a closed loop self-throttles and hides queueing delay,
+the "coordinated omission" trap). Every completed restore is verified
+by SHA-256 against the bytes ingested; every in-flight request is
+awaited with a generous timeout so a hang is detected, never masked.
+
+Two phases, one row each:
+
+    baseline    no faults: p50/p99 restore latency, goodput, shed
+                counts (overload shedding can legitimately fire if the
+                arrival rate beats the executor).
+    fault-drill the same schedule with the backend failing GETs/PUTs
+                for a window mid-run (``TransientError`` past the
+                retry budget). The §15.4 breaker must open, gate
+                writes with typed ``CircuitOpenError``, then recover
+                through a half-open probe once the storm passes.
+
+Gates (enforced with ``--check``, CI smoke):
+    * zero integrity errors (SHA mismatches) in both phases,
+    * zero hangs — every over-deadline request failed *typed*,
+    * zero deadline violations (reads completing OK but later than
+      deadline + grace; writes past their last shed point are exempt —
+      commit atomicity beats lateness, §15.3),
+    * the drill demonstrably opened AND recovered the breaker
+      (transitions open >= 1, half_open >= 1, final state closed).
+
+Rows land in BENCH_SERVE.json.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--quick] [--check]
+                                                    [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import random
+import sys
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+from benchmarks import common
+from repro import api
+from repro.api.concurrency import DeadlineExceededError, LockTimeout
+from repro.api.faults import TransientError
+from repro.api.serve import (CircuitBreaker, CircuitOpenError, DedupServer,
+                             OverloadError, QuotaExceededError, TenantConfig)
+
+JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_SERVE.json"
+
+HANG_TIMEOUT_S = 30.0       # a request not done by then is a hang
+LATE_GRACE_S = 0.30         # ok-completion later than deadline+grace = violation
+OP_MIX = (("restore", 0.50), ("restore_range", 0.70),
+          ("ingest", 0.95), ("delete", 1.00))
+
+
+class _Storm:
+    """Toggleable backend fault hook: while on, every GET/PUT raises a
+    retryable ``TransientError`` — the §13.5 brown-out shape the breaker
+    exists for. Thread-safe by way of Event."""
+
+    def __init__(self) -> None:
+        self.on = threading.Event()
+        self.faults = 0
+
+    def __call__(self, op: str, key: str, n: int):
+        if self.on.is_set() and op in ("get", "put"):
+            self.faults += 1
+            return TransientError(503, f"storm: {op} {key}")
+        return None
+
+
+class _TenantState:
+    """Dispatcher-side view of one tenant: live handles with their
+    expected SHA-256, guarded by a lock (ingest/delete race restores)."""
+
+    def __init__(self) -> None:
+        self.lock = threading.Lock()
+        self.live: dict[int, tuple[int, bytes]] = {}    # handle -> (len, sha)
+
+    def add(self, handle: int, data: bytes) -> None:
+        with self.lock:
+            self.live[handle] = (len(data), hashlib.sha256(data).digest())
+
+    def pick(self, rng: random.Random) -> tuple[int, int, bytes] | None:
+        with self.lock:
+            if not self.live:
+                return None
+            handle = rng.choice(sorted(self.live))
+            n, sha = self.live[handle]
+            return handle, n, sha
+
+    def take(self, rng: random.Random) -> int | None:
+        """Claim a handle for deletion (keeps one live for restores)."""
+        with self.lock:
+            if len(self.live) < 2:
+                return None
+            handle = rng.choice(sorted(self.live))
+            del self.live[handle]
+            return handle
+
+
+def _build_server(tmp: str, storm: _Storm, tenants: int,
+                  latency: float) -> DedupServer:
+    cfg = api.DedupConfig.from_dict({
+        "detector": "dedup-only", "backend": "objectstore",
+        "chunker_args": {"avg_size": 4096},
+        "backend_args": {"path": tmp, "latency": latency,
+                         "fault_hook": storm, "max_retries": 2,
+                         "retry_backoff": 0.01, "retry_deadline": 0.25,
+                         "cache_bytes": 1 << 20},
+    })
+    breaker = CircuitBreaker(fail_threshold=4, window_seconds=5.0,
+                             cooldown_seconds=0.5, probe_successes=1)
+    return DedupServer(api.build_store(cfg), workers=8, breaker=breaker,
+                       default_tenant=TenantConfig(
+                           max_inflight=4, max_queue=8,
+                           cache_bytes=2 << 20, cache_policy="arc"))
+
+
+def _classify(exc: BaseException) -> str:
+    if isinstance(exc, OverloadError):
+        return "shed_overload"
+    if isinstance(exc, QuotaExceededError):
+        return "shed_quota"
+    if isinstance(exc, CircuitOpenError):
+        return "shed_circuit"
+    if isinstance(exc, (DeadlineExceededError, LockTimeout)):
+        return "deadline"
+    if isinstance(exc, TransientError):
+        return "backend_error"
+    if isinstance(exc, KeyError):
+        return "missing"        # restore raced a delete: benign, typed
+    return "unexpected_error"
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(q * (len(sorted_vals) - 1) + 0.5))
+    return sorted_vals[idx]
+
+
+def run_phase(srv: DedupServer, storm: _Storm, *, phase: str, tenants: int,
+              requests: int, rate_hz: float, payload_bytes: int,
+              timeout_s: float, tight_frac: float, seed: int) -> dict:
+    """Dispatch ``requests`` open-loop arrivals at ``rate_hz`` across the
+    tenants, optionally storming the backend for the middle ~35% of the
+    schedule, then drain every future and tally outcomes."""
+    rng = random.Random(seed)
+    states = {f"t{i}": _TenantState() for i in range(tenants)}
+    for name, st in states.items():     # prefill: something to restore
+        for k in range(3):
+            data = random.Random((seed, name, k).__hash__()).randbytes(
+                payload_bytes)
+            st.add(srv.ingest(name, data).handle, data)
+
+    storm_window = (int(requests * 0.25), int(requests * 0.60))
+    inflight = []       # (op, tenant, deadline_s, t_submit, future, verify)
+    tally = {k: 0 for k in ("requests", "ok", "shed_overload", "shed_quota",
+                            "shed_circuit", "deadline", "backend_error",
+                            "missing", "unexpected_error", "hangs",
+                            "deadline_violations", "integrity_errors")}
+    restore_lat: list[float] = []
+    ok_bytes = 0
+    next_ingest_seed = 1 << 20
+
+    t_start = time.perf_counter()
+    for i in range(requests):
+        if phase == "fault-drill":
+            if i == storm_window[0]:
+                storm.on.set()
+            elif i == storm_window[1]:
+                storm.on.clear()
+        target = t_start + i / rate_hz
+        delay = target - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)           # open loop: never waits for results
+        t_submit = time.perf_counter()
+        name = f"t{rng.randrange(tenants)}"
+        st = states[name]
+        r, op = rng.random(), "restore"
+        for kind, edge in OP_MIX:
+            if r < edge:
+                op = kind
+                break
+        timeout = timeout_s
+        if rng.random() < tight_frac:
+            timeout = 0.001             # deliberate deadline-miss budget
+        tally["requests"] += 1
+        try:
+            if op == "ingest":
+                next_ingest_seed += 1
+                data = random.Random(next_ingest_seed).randbytes(
+                    payload_bytes)
+                fut = srv.submit(name, "ingest", data, timeout=timeout)
+                verify = ("ingest", st, data)
+            elif op == "delete":
+                handle = st.take(rng)
+                if handle is None:
+                    tally["requests"] -= 1
+                    continue
+                fut = srv.submit(name, "delete", handle, timeout=timeout)
+                verify = ("delete", None, None)
+            elif op == "restore_range":
+                picked = st.pick(rng)
+                if picked is None:
+                    tally["requests"] -= 1
+                    continue
+                handle, n, _ = picked
+                off = rng.randrange(max(1, n // 2))
+                length = min(n - off, 16 << 10)
+                fut = srv.submit(name, "restore_range", handle, off, length,
+                                 timeout=timeout)
+                verify = ("range", handle, (st, off, length))
+            else:
+                picked = st.pick(rng)
+                if picked is None:
+                    tally["requests"] -= 1
+                    continue
+                handle, _, sha = picked
+                fut = srv.submit(name, "restore", handle, timeout=timeout)
+                verify = ("restore", handle, sha)
+        except (OverloadError, QuotaExceededError) as e:
+            tally[_classify(e)] += 1
+            continue
+        done_at: list[float] = []       # completion instant, not drain time
+        fut.add_done_callback(
+            lambda f, rec=done_at: rec.append(time.perf_counter()))
+        inflight.append((op, name, timeout, t_submit, fut, verify, done_at))
+    storm.on.clear()
+    dispatch_wall = time.perf_counter() - t_start
+
+    for op, name, timeout, t_submit, fut, verify, done_at in inflight:
+        try:
+            result = fut.result(HANG_TIMEOUT_S)
+        except BaseException as e:          # noqa: BLE001 — tallied below
+            # a typed deadline error from the task is also a
+            # TimeoutError subclass: only an unfinished future is a hang
+            if not fut.done():
+                tally["hangs"] += 1
+            else:
+                tally[_classify(e)] += 1
+            continue
+        elapsed = (done_at[0] if done_at else time.perf_counter()) - t_submit
+        tally["ok"] += 1
+        # reads have cooperative deadline checks end to end, so an ok
+        # completion past deadline+grace is a violation; a commit that
+        # passed its last §15.3 shed point must finish (atomicity beats
+        # lateness), so writes are exempt by design
+        if (timeout and op in ("restore", "restore_range")
+                and elapsed > timeout + LATE_GRACE_S):
+            tally["deadline_violations"] += 1
+        kind = verify[0]
+        if kind == "restore":
+            _, handle, sha = verify
+            if hashlib.sha256(result).digest() != sha:
+                tally["integrity_errors"] += 1
+            restore_lat.append(elapsed)
+            ok_bytes += len(result)
+        elif kind == "range":
+            _, handle, (st, off, length) = verify
+            with st.lock:
+                expect = st.live.get(handle)
+            # a handle deleted after this range completed can't be
+            # re-verified; the read itself succeeded against live data
+            if expect is not None and len(result) != min(length,
+                                                         expect[0] - off):
+                tally["integrity_errors"] += 1
+            restore_lat.append(elapsed)
+            ok_bytes += len(result)
+        elif kind == "ingest":
+            _, st, data = verify
+            st.add(result.handle, data)
+
+    probe = None        # a surviving (tenant, handle) for breaker probes
+    for name, st in states.items():
+        with st.lock:
+            if st.live:
+                probe = (name, sorted(st.live)[0])
+                break
+    wall = time.perf_counter() - t_start
+    restore_lat.sort()
+    return probe, {
+        "bench": "serve_slo", "phase": phase, "tenants": tenants,
+        "rate_hz": rate_hz, "backend_faults": storm.faults,
+        **tally,
+        "p50_restore_ms": round(_percentile(restore_lat, 0.50) * 1e3, 2),
+        "p99_restore_ms": round(_percentile(restore_lat, 0.99) * 1e3, 2),
+        "goodput_mbps": round(common.mbps(ok_bytes, wall), 2),
+        "dispatch_wall_s": round(dispatch_wall, 2),
+        "wall_s": round(wall, 2),
+    }
+
+
+def _recover_breaker(srv: DedupServer, probe: tuple[str, int] | None,
+                     budget_s: float = 5.0) -> bool:
+    """Drive half-open probes until the breaker re-closes. Probes are
+    *reads* — the half-open breaker still gates writes, so only a
+    successful restore can close it (§15.4)."""
+    if probe is None:
+        return False
+    tenant, handle = probe
+    deadline = time.monotonic() + budget_s
+    while time.monotonic() < deadline:
+        if srv.breaker.state() == CircuitBreaker.CLOSED:
+            return True
+        try:
+            srv.restore(tenant, handle)
+        except Exception:
+            pass
+        time.sleep(0.05)
+    return srv.breaker.state() == CircuitBreaker.CLOSED
+
+
+def run(tenants: int = 4, requests: int = 400, rate_hz: float = 120.0,
+        payload_bytes: int = 96 << 10, latency: float = 0.002,
+        timeout_s: float = 2.0, tight_frac: float = 0.03,
+        seed: int = 7) -> list[dict]:
+    rows = []
+    for phase in ("baseline", "fault-drill"):
+        storm = _Storm()
+        with tempfile.TemporaryDirectory() as tmp:
+            srv = _build_server(tmp, storm, tenants, latency)
+            try:
+                probe, row = run_phase(
+                    srv, storm, phase=phase, tenants=tenants,
+                    requests=requests, rate_hz=rate_hz,
+                    payload_bytes=payload_bytes, timeout_s=timeout_s,
+                    tight_frac=tight_frac, seed=seed)
+                if phase == "fault-drill":
+                    recovered = _recover_breaker(srv, probe)
+                    tr = srv.breaker.transitions
+                    row.update({
+                        "breaker_opened": tr[CircuitBreaker.OPEN],
+                        "breaker_half_open": tr[CircuitBreaker.HALF_OPEN],
+                        "breaker_recovered": bool(
+                            recovered
+                            and srv.breaker.state() == CircuitBreaker.CLOSED),
+                    })
+                rows.append(row)
+            finally:
+                srv.close(close_store=True)
+    return rows
+
+
+def gate_failures(rows: list[dict]) -> list[str]:
+    bad = []
+    for r in rows:
+        where = r["phase"]
+        if r["integrity_errors"]:
+            bad.append(f"{where}: {r['integrity_errors']} integrity errors")
+        if r["hangs"]:
+            bad.append(f"{where}: {r['hangs']} hung requests")
+        if r["deadline_violations"]:
+            bad.append(f"{where}: {r['deadline_violations']} ok-completions "
+                       "past deadline+grace")
+        if r["unexpected_error"]:
+            bad.append(f"{where}: {r['unexpected_error']} untyped errors")
+        if r["phase"] == "fault-drill":
+            if not r.get("breaker_opened"):
+                bad.append("fault-drill: breaker never opened")
+            if not r.get("breaker_half_open"):
+                bad.append("fault-drill: breaker never half-opened")
+            if not r.get("breaker_recovered"):
+                bad.append("fault-drill: breaker did not re-close")
+            if not r.get("shed_circuit") and not r.get("backend_error"):
+                bad.append("fault-drill: storm produced no typed failures")
+    return bad
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller schedule (CI smoke)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 when any §15.5 gate fails")
+    ap.add_argument("--json", default=str(JSON_PATH),
+                    help="where to write the JSON row dump")
+    args = ap.parse_args()
+    if args.quick:
+        rows = run(tenants=4, requests=160, rate_hz=150.0,
+                   payload_bytes=48 << 10, latency=0.001)
+    else:
+        rows = run()
+    common.emit(rows, "serve_slo")
+    bad = gate_failures(rows)
+    for msg in bad:
+        print(f"# GATE FAILED: {msg}")
+    path = Path(args.json)
+    existing = []
+    if path.exists():
+        keep = {(r.get("bench"), r.get("phase")) for r in rows}
+        existing = [r for r in json.loads(path.read_text())
+                    if (r.get("bench"), r.get("phase")) not in keep]
+    path.write_text(json.dumps(existing + rows, indent=2) + "\n")
+    print(f"# wrote {len(rows)} rows to {path}")
+    if args.check and bad:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

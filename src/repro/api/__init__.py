@@ -26,6 +26,9 @@ Layers (DESIGN.md §2 and §7), each depending only on the ones above it:
                DecodeCache, recipe prefix sums for ranged reads
   store        DedupStore with transactional StreamSession ingestion and
                the restore/restore_iter/restore_range serving surface
+  serve        multi-tenant DedupServer front end: per-tenant
+               namespaces/quotas, admission control, request deadlines,
+               circuit-breaker degradation (DESIGN.md §15)
   lifecycle    delete / mark-sweep collect / compaction with rebase,
                pluggable reclamation policies
   registry     name -> factory tables for detectors/indexes/chunkers/
@@ -65,7 +68,16 @@ from repro.api.restore import (  # noqa: F401
     coalesce_reads,
     plan_chains,
 )
-from repro.api.concurrency import IoTelemetry, RWLock  # noqa: F401
+from repro.api.concurrency import (  # noqa: F401
+    DeadlineExceededError,
+    IoTelemetry,
+    LockTimeout,
+    RWLock,
+    check_deadline,
+    current_deadline,
+    deadline_scope,
+    remaining_time,
+)
 from repro.api.detect import (  # noqa: F401
     LegacyDetectMixin,
     StagedDetector,
@@ -116,6 +128,7 @@ from repro.api.config import (  # noqa: F401
     build_chunker,
     build_detector,
     build_policy,
+    build_server,
     build_store,
 )
 
@@ -145,6 +158,13 @@ _OBSERVE_EXPORTS = frozenset({
     "MetricsRegistry", "Observability", "Tracer", "parse_prometheus_text",
 })
 
+# the §15 multi-tenant serving layer rides on the store, so it stays off
+# the package-import path like the other heavy layers
+_SERVE_EXPORTS = frozenset({
+    "CircuitBreaker", "CircuitOpenError", "DedupServer", "OverloadError",
+    "QuotaExceededError", "RequestRejected", "TenantConfig",
+})
+
 
 def __getattr__(name: str):
     if name in _OBJECTSTORE_EXPORTS:
@@ -159,4 +179,7 @@ def __getattr__(name: str):
     if name in _FAULTS_EXPORTS:
         from repro.api import faults
         return getattr(faults, name)
+    if name in _SERVE_EXPORTS:
+        from repro.api import serve
+        return getattr(serve, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,19 +1,28 @@
-"""Concurrency primitives for the serving engine (DESIGN.md §10).
+"""Concurrency primitives for the serving engine (DESIGN.md §10, §15).
 
-Two small, dependency-free pieces shared by the store and the backends:
+Small, dependency-free pieces shared by the store, the backends, and the
+multi-tenant server:
 
-    RWLock        writer-preferring shared/exclusive lock. Restores take
-                  the shared side (many can run at once), lifecycle
-                  mutations (delete / compact — they swap the chunk index
-                  and reopen file handles) take the exclusive side.
-                  Writer preference keeps a steady stream of restores
-                  from starving a pending compaction.
-    IoTelemetry   per-thread I/O counters that also aggregate to
-                  store-lifetime totals. Under concurrent restores a
-                  global counter delta would attribute other threads'
-                  bytes/seconds to this call's RestoreReport; per-thread
-                  counters make every report exact with no locking on the
-                  hot path (each thread only ever writes its own slot).
+    RWLock          writer-preferring shared/exclusive lock. Restores take
+                    the shared side (many can run at once), lifecycle
+                    mutations (delete / compact — they swap the chunk index
+                    and reopen file handles) take the exclusive side.
+                    Writer preference keeps a steady stream of restores
+                    from starving a pending compaction. Both acquire sides
+                    take an optional ``timeout`` and raise ``LockTimeout``
+                    when it elapses.
+    IoTelemetry     per-thread I/O counters that also aggregate to
+                    store-lifetime totals. Under concurrent restores a
+                    global counter delta would attribute other threads'
+                    bytes/seconds to this call's RestoreReport; per-thread
+                    counters make every report exact with no locking on the
+                    hot path (each thread only ever writes its own slot).
+    deadline_scope  thread-local end-to-end request deadline (§15.3). The
+                    serving layer opens a scope per request; lock waits and
+                    the restore/commit hot loops consult it cooperatively
+                    via ``remaining_time()`` / ``check_deadline()`` and
+                    fail with ``DeadlineExceededError`` instead of running
+                    (or blocking) past the budget.
 
 Locking rules (also DESIGN.md §10.4): per-shard cache locks and the
 backend's append lock are leaves — no code path acquires another lock
@@ -24,6 +33,92 @@ from __future__ import annotations
 import threading
 import time
 from contextlib import contextmanager
+
+
+class LockTimeout(TimeoutError):
+    """An RWLock acquire gave up after its ``timeout`` elapsed. The lock
+    state is untouched (nothing to release); the wait is still reported
+    through the lock's observer so a wedged writer shows up in the
+    ``repro_lock_wait_seconds`` histogram instead of starving readers
+    silently."""
+
+    def __init__(self, side: str, timeout: float) -> None:
+        super().__init__(
+            f"RWLock {side} acquisition timed out after {timeout:.3f}s")
+        self.side = side
+        self.timeout = timeout
+
+
+class DeadlineExceededError(TimeoutError):
+    """A request ran past its end-to-end deadline (DESIGN.md §15.3).
+    Raised by the cooperative ``check_deadline`` probes and by
+    deadline-aware lock acquisition — always *between* atomic units of
+    work (never mid-write), so the store is left consistent and the
+    request slot is freed instead of hanging."""
+
+    def __init__(self, op: str = "request",
+                 budget: float | None = None) -> None:
+        detail = "" if budget is None else f" (budget {budget:.3f}s)"
+        super().__init__(f"{op} exceeded its deadline{detail}")
+        self.op = op
+        self.budget = budget
+
+
+_DEADLINE_TL = threading.local()
+
+
+@contextmanager
+def deadline_scope(timeout: float | None):
+    """Bound everything inside to ``timeout`` seconds from now. Nested
+    scopes keep the *tighter* absolute deadline (an outer 100 ms budget is
+    not widened by an inner default of 1 s). ``None`` is a no-op scope, so
+    callers can pass an optional per-request timeout straight through.
+
+    The deadline is thread-local: it rides the request's own thread
+    through store/backend code with zero plumbing, and deliberately does
+    NOT leak into backend worker pools (prefetch/fetcher threads) — the
+    request thread is the one doing the cooperative checks, and an
+    expired deadline must never poison another tenant's request that
+    happens to reuse a pool thread."""
+    if timeout is None:
+        yield
+        return
+    prev = getattr(_DEADLINE_TL, "at", None)
+    prev_budget = getattr(_DEADLINE_TL, "budget", None)
+    at = time.monotonic() + timeout
+    budget = float(timeout)
+    if prev is not None and prev < at:
+        at, budget = prev, prev_budget
+    _DEADLINE_TL.at = at
+    _DEADLINE_TL.budget = budget
+    try:
+        yield
+    finally:
+        _DEADLINE_TL.at = prev
+        _DEADLINE_TL.budget = prev_budget
+
+
+def current_deadline() -> float | None:
+    """Absolute ``time.monotonic()`` deadline of the innermost active
+    scope on this thread, or None when unbounded."""
+    return getattr(_DEADLINE_TL, "at", None)
+
+
+def remaining_time() -> float | None:
+    """Seconds left in the active deadline scope (may be negative once
+    expired); None when unbounded."""
+    at = getattr(_DEADLINE_TL, "at", None)
+    return None if at is None else at - time.monotonic()
+
+
+def check_deadline(op: str = "request") -> None:
+    """Cooperative probe: raise ``DeadlineExceededError`` if this
+    thread's deadline scope has expired; free (one getattr) when no
+    scope is active, so unbounded callers pay ~nothing."""
+    at = getattr(_DEADLINE_TL, "at", None)
+    if at is not None and time.monotonic() >= at:
+        raise DeadlineExceededError(op, getattr(_DEADLINE_TL, "budget",
+                                                None))
 
 
 class RWLock:
@@ -55,13 +150,26 @@ class RWLock:
     # the read()/write() context managers below wrap these for callers
     # off the hot path
 
-    def acquire_read(self) -> None:
+    def acquire_read(self, timeout: float | None = None) -> None:
         obs = self._observer
-        t0 = time.perf_counter() if obs is not None else 0.0
-        with self._cond:
-            while self._writer_active or self._writers_waiting:
-                self._cond.wait()
-            self._readers += 1
+        t0 = (time.perf_counter()
+              if obs is not None or timeout is not None else 0.0)
+        try:
+            with self._cond:
+                while self._writer_active or self._writers_waiting:
+                    remaining = None
+                    if timeout is not None:
+                        remaining = timeout - (time.perf_counter() - t0)
+                        if remaining <= 0:
+                            raise LockTimeout("read", timeout)
+                    self._cond.wait(remaining)
+                self._readers += 1
+        except LockTimeout:
+            # failed waits still feed the contention histogram — a wedged
+            # writer must be visible, not just survivable
+            if obs is not None:
+                obs("read", time.perf_counter() - t0)
+            raise
         if obs is not None:
             obs("read", time.perf_counter() - t0)
 
@@ -71,17 +179,34 @@ class RWLock:
             if not self._readers and self._writers_waiting:
                 self._cond.notify_all()
 
-    def acquire_write(self) -> None:
+    def acquire_write(self, timeout: float | None = None) -> None:
         obs = self._observer
-        t0 = time.perf_counter() if obs is not None else 0.0
-        with self._cond:
-            self._writers_waiting += 1
-            try:
-                while self._writer_active or self._readers:
-                    self._cond.wait()
-            finally:
-                self._writers_waiting -= 1
-            self._writer_active = True
+        t0 = (time.perf_counter()
+              if obs is not None or timeout is not None else 0.0)
+        try:
+            with self._cond:
+                acquired = False
+                self._writers_waiting += 1
+                try:
+                    while self._writer_active or self._readers:
+                        remaining = None
+                        if timeout is not None:
+                            remaining = timeout - (time.perf_counter() - t0)
+                            if remaining <= 0:
+                                raise LockTimeout("write", timeout)
+                        self._cond.wait(remaining)
+                    acquired = True
+                finally:
+                    self._writers_waiting -= 1
+                    # a timed-out writer may be the only thing holding
+                    # readers back (writer preference): wake them
+                    if not acquired and not self._writers_waiting:
+                        self._cond.notify_all()
+                self._writer_active = True
+        except LockTimeout:
+            if obs is not None:
+                obs("write", time.perf_counter() - t0)
+            raise
         if obs is not None:
             obs("write", time.perf_counter() - t0)
 
@@ -91,16 +216,16 @@ class RWLock:
             self._cond.notify_all()
 
     @contextmanager
-    def read(self):
-        self.acquire_read()
+    def read(self, timeout: float | None = None):
+        self.acquire_read(timeout)
         try:
             yield
         finally:
             self.release_read()
 
     @contextmanager
-    def write(self):
-        self.acquire_write()
+    def write(self, timeout: float | None = None):
+        self.acquire_write(timeout)
         try:
             yield
         finally:

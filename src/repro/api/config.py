@@ -39,7 +39,8 @@ _KNOWN_KEYS = {"detector", "detector_args", "chunker", "chunker_args",
                "restore_readahead", "restore_coalesce_gap",
                "restore_tier_path", "restore_tier_bytes",
                "verify_reads", "retry_deadline",
-               "trace_path", "trace_ring_events"}
+               "trace_path", "trace_ring_events",
+               "server_workers", "server_args", "tenant_args"}
 
 # serving/integrity knobs (DESIGN.md §10, §11.3, §13) -> backend factory
 # kwargs; each is forwarded only when set and only to factories that
@@ -103,6 +104,15 @@ class DedupConfig:
     # RetryBudgetExceeded (§13.5). None keeps each backend's default.
     verify_reads: bool | None = None
     retry_deadline: float | None = None
+    # multi-tenant serving (DESIGN.md §15): build_server wraps the store
+    # in a DedupServer with server_workers executor threads; server_args
+    # are extra DedupServer kwargs and tenant_args the default
+    # TenantConfig fields (quota_bytes / max_inflight / max_queue /
+    # cache_bytes / cache_policy / default_timeout) applied to tenants
+    # created on first use. All ignored by plain build_store.
+    server_workers: int | None = None
+    server_args: dict[str, Any] = dataclasses.field(default_factory=dict)
+    tenant_args: dict[str, Any] = dataclasses.field(default_factory=dict)
     # observability (DESIGN.md §12): every store gets a metrics registry
     # unconditionally; structured op tracing turns on only when one of
     # these is set. trace_path appends spans as JSONL (followable with
@@ -154,6 +164,12 @@ class DedupConfig:
         if ring is not None and (not isinstance(ring, int) or ring < 0):
             raise ValueError(f"trace_ring_events must be an int >= 0, "
                              f"got {ring!r}")
+        workers = cfg.server_workers
+        if workers is not None and (not isinstance(workers, int)
+                                    or isinstance(workers, bool)
+                                    or workers < 1):
+            raise ValueError(f"server_workers must be an int >= 1, "
+                             f"got {workers!r}")
         return cfg
 
     def to_dict(self) -> dict[str, Any]:
@@ -201,3 +217,19 @@ def build_store(cfg: DedupConfig) -> DedupStore:
                       backend=build_backend(cfg), policy=build_policy(cfg),
                       trace_path=cfg.trace_path,
                       trace_ring_events=cfg.trace_ring_events)
+
+
+def build_server(cfg: DedupConfig, store: DedupStore | None = None):
+    """One-call multi-tenant deployment (DESIGN.md §15): ``build_store``
+    plus a ``DedupServer`` over it, sized by ``server_workers`` with
+    ``tenant_args`` as the default per-tenant limits. Pass an existing
+    ``store`` to front one that is already serving."""
+    from repro.api.serve import DedupServer, TenantConfig
+    if store is None:
+        store = build_store(cfg)
+    kwargs = dict(cfg.server_args)
+    if cfg.server_workers is not None and "workers" not in kwargs:
+        kwargs["workers"] = cfg.server_workers
+    if cfg.tenant_args and "default_tenant" not in kwargs:
+        kwargs["default_tenant"] = TenantConfig(**cfg.tenant_args)
+    return DedupServer(store, **kwargs)

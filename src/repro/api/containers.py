@@ -41,7 +41,7 @@ from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 from typing import Iterable, Protocol, Sequence, runtime_checkable
 
-from repro.api.concurrency import IoTelemetry
+from repro.api.concurrency import IoTelemetry, check_deadline
 from repro.api.faults import register_crashpoint
 from repro.api.integrity import (CorruptChunkError, CorruptJournalError,
                                  crc32c)
@@ -582,6 +582,7 @@ class PlannedChainReader:
         decoded = 0
         cur = cid
         while True:
+            check_deadline("restore")   # per chain node: nothing held yet
             kind, base, offset, length = self._index[cur]  # KeyError
             payload = (tier.get(cur, self._crcs.get(cur))
                        if tier is not None else None)
@@ -636,6 +637,7 @@ class PlannedChainReader:
         decoding."""
         if not cids:
             return []
+        check_deadline("restore")
         cache = self._cache
         tel = self._telemetry.local()
         targets = list(dict.fromkeys(int(c) for c in cids))
@@ -855,6 +857,13 @@ class PlannedChainReader:
                     ri = 0
                     try:
                         while ri < len(runs) or pending:
+                            # cooperative deadline probe (§15.3): raised
+                            # here — at a run boundary — the error flows
+                            # through the finally blocks below, which
+                            # cancel in-flight reads, error-resolve owned
+                            # flights, and unpin plan bases, so an
+                            # over-deadline restore sheds cleanly
+                            check_deadline("restore")
                             while (ri < len(runs)
                                    and len(pending) <= self._readahead):
                                 pending.append((runs[ri],
@@ -887,6 +896,7 @@ class PlannedChainReader:
                                     pass
                 else:                       # serial: one run, or disabled
                     for run in runs:
+                        check_deadline("restore")   # same shed boundary
                         blob, secs = read_run(run)
                         tel.read_seconds += secs
                         tel.requests += 1

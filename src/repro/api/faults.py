@@ -46,10 +46,12 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import random
 import shutil
 import threading
+import time
 from pathlib import Path
-from typing import Any, Sequence
+from typing import Any, Callable, Sequence
 
 
 class TransientError(Exception):
@@ -84,6 +86,64 @@ class RetryBudgetExceeded(TransientError):
             f"{attempts} attempts ({slept:.3f}s slept); last error: "
             f"{last}")
         self.status = status
+
+
+def with_retries(fn: Callable, args: Sequence = (), *,
+                 max_retries: int = 4, backoff: float = 0.05,
+                 cap: float | None = None, deadline: float | None = None,
+                 rng: random.Random | None = None,
+                 on_attempt: Callable[[float, bool], None] | None = None,
+                 on_backoff: Callable[[float, int], None] | None = None,
+                 sleep: Callable[[float], None] = time.sleep):
+    """The audited decorrelated-jitter retry loop (§11.2/§13.5) as a
+    reusable helper — one implementation shared by
+    ``ObjectStoreBackend._call`` and the §15 serving layer instead of
+    each caller hand-rolling its own backoff math.
+
+    Calls ``fn(*args)``. On ``TransientError``: sleep a decorrelated
+    jittered delay (``uniform(backoff, 3 * previous_delay)``, capped at
+    ``cap``, default ``backoff * 2^max_retries``) and reissue, up to
+    ``max_retries`` reissues AND at most ``deadline`` total seconds
+    asleep — whichever budget runs out first. Exhausting the attempt
+    budget re-raises the last ``TransientError``; exhausting the
+    deadline raises ``RetryBudgetExceeded`` with the attempt count and
+    slept seconds. Any non-transient exception propagates immediately.
+
+    Observation hooks (all optional, all called outside the sleep):
+    ``on_attempt(seconds, ok)`` after every issue of ``fn`` — including
+    failed ones — with its wall time; ``on_backoff(delay, attempt)``
+    once per absorbed fault, right before sleeping. ``rng``/``sleep``
+    are injectable for deterministic tests."""
+    if rng is None:
+        rng = random.Random()
+    if cap is None:
+        cap = backoff * (1 << max_retries)
+    attempt = 0
+    slept = 0.0
+    prev_delay = backoff
+    while True:
+        t0 = time.perf_counter() if on_attempt is not None else 0.0
+        try:
+            result = fn(*args)
+        except TransientError as e:
+            if on_attempt is not None:
+                on_attempt(time.perf_counter() - t0, False)
+            if attempt >= max_retries:
+                raise
+            delay = rng.uniform(backoff, min(cap, prev_delay * 3))
+            if deadline is not None and slept + delay > deadline:
+                raise RetryBudgetExceeded(attempt + 1, slept, deadline,
+                                          last=e) from e
+            prev_delay = delay
+            if on_backoff is not None:
+                on_backoff(delay, attempt + 1)
+            sleep(delay)
+            slept += delay
+            attempt += 1
+            continue
+        if on_attempt is not None:
+            on_attempt(time.perf_counter() - t0, True)
+        return result
 
 
 class FaultSchedule:

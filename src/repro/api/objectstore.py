@@ -84,7 +84,8 @@ from repro.api.containers import (_KIND_DELTA, _KIND_RAW, DEFAULT_READAHEAD,
 # canonical home of the fault machinery is repro.api.faults (§13.4); the
 # re-exports keep the historical import path working
 from repro.api.faults import (FaultSchedule, RetryBudgetExceeded,  # noqa: F401
-                              TransientError, register_crashpoint)
+                              TransientError, register_crashpoint,
+                              with_retries)
 from repro.api.integrity import crc32c
 from repro.api.registry import get_cache_policy, register_backend
 from repro.api.restore import (DEFAULT_CACHE_BYTES, DEFAULT_CACHE_POLICY,
@@ -759,45 +760,29 @@ class ObjectStoreBackend(PlannedChainReader):
         the absorbed faults. When an Observability is bound, every
         attempt also lands in the per-op latency histogram and each
         absorbed fault books its backoff into the counter (plus an
-        ``objstore.retry`` span when tracing is on)."""
+        ``objstore.retry`` span when tracing is on). The loop itself is
+        ``faults.with_retries`` — the one audited backoff implementation
+        (§13.5), shared with the §15 serving layer."""
         hists = self._h_req_seconds
-        h = (hists[self._OP_LABELS.get(fn.__name__, fn.__name__)]
-             if hists is not None else None)
-        attempt = 0
-        slept = 0.0
-        prev_delay = self._backoff
-        while True:
-            t0 = time.perf_counter() if h is not None else 0.0
-            try:
-                result = fn(*args)
-            except TransientError as e:
-                if h is not None:
-                    h.observe(time.perf_counter() - t0)
-                if attempt >= self._max_retries:
-                    raise
-                delay = self._retry_rng.uniform(
-                    self._backoff, min(self._backoff_cap, prev_delay * 3))
-                deadline = self._retry_deadline
-                if deadline is not None and slept + delay > deadline:
-                    raise RetryBudgetExceeded(attempt + 1, slept, deadline,
-                                              last=e) from e
-                prev_delay = delay
-                if self._c_backoff is not None:
-                    self._c_backoff.inc(delay)
-                    tr = self._obs.tracer
-                    if tr is not None:
-                        tr.record("objstore.retry", delay,
-                                  client_op=self._OP_LABELS.get(
-                                      fn.__name__, fn.__name__),
-                                  attempt=attempt + 1)
-                time.sleep(delay)
-                slept += delay
-                attempt += 1
-                self.retries += 1
-                continue
-            if h is not None:
-                h.observe(time.perf_counter() - t0)
-            return result
+        op = self._OP_LABELS.get(fn.__name__, fn.__name__)
+        h = hists[op] if hists is not None else None
+        on_attempt = ((lambda seconds, ok: h.observe(seconds))
+                      if h is not None else None)
+
+        def on_backoff(delay: float, attempt: int) -> None:
+            self.retries += 1
+            if self._c_backoff is not None:
+                self._c_backoff.inc(delay)
+                tr = self._obs.tracer
+                if tr is not None:
+                    tr.record("objstore.retry", delay, client_op=op,
+                              attempt=attempt)
+
+        return with_retries(fn, args, max_retries=self._max_retries,
+                            backoff=self._backoff, cap=self._backoff_cap,
+                            deadline=self._retry_deadline,
+                            rng=self._retry_rng, on_attempt=on_attempt,
+                            on_backoff=on_backoff)
 
     @staticmethod
     def _chunk_key(epoch: int, seq: int) -> str:

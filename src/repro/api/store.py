@@ -58,7 +58,9 @@ from typing import Any, Sequence
 import numpy as np
 
 from repro.api import containers, lifecycle
-from repro.api.concurrency import RWLock, accumulate, zero_deltas
+from repro.api.concurrency import (DeadlineExceededError, LockTimeout, RWLock,
+                                   accumulate, check_deadline, remaining_time,
+                                   zero_deltas)
 from repro.api.detect import is_staged
 from repro.api.refcount import RefcountTable
 from repro.api.restore import RecipeLayout
@@ -341,13 +343,27 @@ class DedupStore:
     def _commit_stream(self, stream: bytes) -> IngestReport:
         # one commit at a time (id assignment, digest table, one group
         # commit in flight); commits run concurrently with restores but
-        # are excluded from lifecycle mutations (DESIGN.md §10.4)
-        with self._commit_lock, self._lifecycle_lock.read():
-            # post-close contract: fail here, before the chunk/detect
-            # passes run, instead of dying on the closed append handle
-            # after the work is done
-            self._check_open()
-            return self._commit_stream_locked(stream)
+        # are excluded from lifecycle mutations (DESIGN.md §10.4).
+        # Under a deadline scope (§15.3) both lock waits are bounded:
+        # shedding here — before any chunking work — is the cheap place.
+        check_deadline("commit")
+        t = remaining_time()
+        if t is None:
+            self._commit_lock.acquire()
+        elif not self._commit_lock.acquire(timeout=max(0.0, t)):
+            raise DeadlineExceededError("commit (commit-lock wait)")
+        try:
+            self._acquire_read_deadline("commit")
+            try:
+                # post-close contract: fail here, before the chunk/detect
+                # passes run, instead of dying on the closed append handle
+                # after the work is done
+                self._check_open()
+                return self._commit_stream_locked(stream)
+            finally:
+                self._lifecycle_lock.release_read()
+        finally:
+            self._commit_lock.release()
 
     def _commit_stream_locked(self, stream: bytes) -> IngestReport:
         # pass 0: chunk
@@ -372,6 +388,12 @@ class DedupStore:
                 self._next_id += 1
                 is_new[i] = True
                 seen_in_stream[dig] = int(ids[i])
+
+        # deadline probes (§15.3) run only in passes 0-3a — after the
+        # first pass-3b backend write the commit must finish (aborting
+        # mid-group-commit would orphan records the bookkeeping below
+        # never learned about)
+        check_deadline("commit")
 
         # pass 2: resemblance detection (batched, staged). For staged
         # detectors, index admission (`observe`) is deferred until the
@@ -418,7 +440,9 @@ class DedupStore:
         delta_seconds = 0.0
         staged_data: dict[int, bytes] = {}
         records: list[tuple[int, int, bytes, bytes | None]] = []
+        check_deadline("commit")
         for i in np.flatnonzero(is_new):
+            check_deadline("commit")    # last shed point: nothing written yet
             ck = chunks[i]
             cid = int(ids[i])
             entry = None
@@ -646,6 +670,21 @@ class DedupStore:
             return dict(zip(uniq, get_many(uniq)))
         return {cid: self.backend.get(cid) for cid in uniq}
 
+    def _acquire_read_deadline(self, op: str) -> None:
+        """Shared lifecycle lock, bounded by the caller's deadline scope
+        (§15.3): unbounded callers block exactly as before; a request
+        with a budget waits at most what is left of it and fails with
+        the deadline error its server maps to the shed taxonomy —
+        a wedged compaction then costs one request, not a hung thread."""
+        t = remaining_time()
+        if t is None:
+            self._lifecycle_lock.acquire_read()
+            return
+        try:
+            self._lifecycle_lock.acquire_read(timeout=max(0.0, t))
+        except LockTimeout as e:
+            raise DeadlineExceededError(f"{op} (lifecycle-lock wait)") from e
+
     def _fetch_counted(self, cids: Sequence[int]) -> tuple[dict, list]:
         """``_fetch_unique`` under the shared lifecycle lock, returning
         ``(data, io_counter_deltas)``. The snapshot pair runs on the
@@ -653,8 +692,9 @@ class DedupStore:
         the deltas are exact per call even with other restores in
         flight — including when this runs on the prefetch pool."""
         lock = self._lifecycle_lock
+        check_deadline("restore")
         snap = self._backend_counters()
-        lock.acquire_read()
+        self._acquire_read_deadline("restore")
         try:
             # a resumed restore_iter generator can arrive here after
             # close(): the backend's reader fds are gone, so fail with a
@@ -721,7 +761,7 @@ class DedupStore:
             # still build the same layout concurrently; both compute
             # identical sums, so last-writer-wins is benign.
             lock = self._lifecycle_lock
-            lock.acquire_read()
+            self._acquire_read_deadline("restore")
             try:
                 try:
                     self.backend.recipe(handle)
@@ -800,29 +840,53 @@ class DedupStore:
         if self._backend_closed:
             raise RuntimeError("store is closed")
 
+    def _acquire_write_deadline(self, op: str) -> None:
+        """Exclusive lifecycle lock, bounded by the caller's deadline
+        scope — the write-side twin of ``_acquire_read_deadline``. A
+        deadline-carrying delete waiting out a storm of restores sheds
+        instead of blocking its server slot forever."""
+        t = remaining_time()
+        if t is None:
+            self._lifecycle_lock.acquire_write()
+            return
+        try:
+            self._lifecycle_lock.acquire_write(timeout=max(0.0, t))
+        except LockTimeout as e:
+            raise DeadlineExceededError(f"{op} (lifecycle-lock wait)") from e
+
     def delete(self, handle: int) -> int:
         """Retire a committed stream; returns the logical bytes the delete
         made reclaimable. May trigger compaction per the store policy.
         Takes the exclusive lifecycle lock: in-flight restores finish
         first, restores arriving later run against the post-delete state
         (a restore of the deleted handle then raises KeyError)."""
-        with self._lifecycle_lock.write():
+        check_deadline("delete")
+        self._acquire_write_deadline("delete")
+        try:
             self._check_open()
             return lifecycle.delete_stream(self, handle)
+        finally:
+            self._lifecycle_lock.release_write()
 
     def collect(self) -> lifecycle.CollectReport:
         """Mark-sweep accounting pass (mutates no data)."""
-        with self._lifecycle_lock.write():
+        self._acquire_write_deadline("collect")
+        try:
             self._check_open()
             return lifecycle.collect(self)
+        finally:
+            self._lifecycle_lock.release_write()
 
     def compact(self) -> lifecycle.CompactionRun:
         """Rewrite the container without dead records, rebasing survivors.
         Exclusive: the backend swaps its chunk index and reopens its
         reader-pool fds, so no restore may be mid-plan while it runs."""
-        with self._lifecycle_lock.write():
+        self._acquire_write_deadline("compact")
+        try:
             self._check_open()
             return lifecycle.compact(self)
+        finally:
+            self._lifecycle_lock.release_write()
 
     def scrub(self, repair: bool = False):
         """Fsck walk (DESIGN.md §13.3): verify every stored record
@@ -835,9 +899,12 @@ class DedupStore:
         machinery — a follow-up scrub reports clean. Exclusive, like
         delete/compact: nothing reads or commits while the walk runs."""
         from repro.api import integrity
-        with self._lifecycle_lock.write():
+        self._acquire_write_deadline("scrub")
+        try:
             self._check_open()
             return integrity.scrub(self, repair=repair)
+        finally:
+            self._lifecycle_lock.release_write()
 
     def _refresh_lifecycle_stats(self) -> None:
         # dead_bytes = everything compaction can drop: unreferenced records

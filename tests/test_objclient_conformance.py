@@ -4,20 +4,114 @@ contract suite run against every client that claims the
 delete_object semantics, KeyError on absent keys, idempotent deletes,
 short ranged reads at object end.
 
-``LocalObjectStore`` always runs. ``S3ObjectClient`` runs against a
-real bucket only when boto3 is importable AND ``REPRO_S3_TEST_BUCKET``
-is set (an opt-in — CI has neither network nor credentials); otherwise
-its parametrization skips cleanly, keeping the seam honest without
-making the suite flaky."""
+``LocalObjectStore`` always runs. The ``S3ObjectClient`` adapter runs
+twice: against ``_StubS3`` — a moto-style in-process fake of the exact
+boto3 surface the adapter uses (injected via the ``client=`` seam, so
+no boto3 needed) — on every CI run, and against a real bucket only when
+boto3 is importable AND ``REPRO_S3_TEST_BUCKET`` is set (an opt-in — CI
+has neither network nor credentials); the real-bucket parametrization
+skips cleanly otherwise, keeping the seam honest without making the
+suite flaky."""
 import os
 import uuid
 
 import pytest
 
 
+class _NoSuchKey(Exception):
+    """boto3 raises a generated class literally named ``NoSuchKey``;
+    the adapter matches on ``type(e).__name__``, so the stub's must be
+    named identically."""
+
+
+_NoSuchKey.__name__ = "NoSuchKey"
+
+
+class _ClientError(Exception):
+    """botocore-shaped error: carries the HTTP status where the adapter
+    looks for it (``response["ResponseMetadata"]["HTTPStatusCode"]``)."""
+
+    def __init__(self, code: int, op: str, key: str) -> None:
+        super().__init__(f"stub {op} failed with {code} for {key!r}")
+        self.response = {"ResponseMetadata": {"HTTPStatusCode": code}}
+
+
+class _Body:
+    def __init__(self, data: bytes) -> None:
+        self._data = data
+
+    def read(self) -> bytes:
+        return self._data
+
+
+class _Paginator:
+    def __init__(self, buckets: dict) -> None:
+        self._buckets = buckets
+
+    def paginate(self, Bucket: str, Prefix: str = ""):
+        keys = sorted(k for k in self._buckets.get(Bucket, {})
+                      if k.startswith(Prefix))
+        # multiple small pages, like the real service: the adapter's
+        # page loop is exercised, not just its first iteration
+        for i in range(0, len(keys), 2):
+            yield {"Contents": [
+                {"Key": k, "Size": len(self._buckets[Bucket][k])}
+                for k in keys[i:i + 2]]}
+        if not keys:
+            yield {}                    # empty listings have no Contents
+
+
+class _StubS3:
+    """In-process fake of the boto3 S3 client surface ``S3ObjectClient``
+    uses: put/get/head/delete_object + the list_objects_v2 paginator,
+    with inclusive-end Range parsing and clamped (short, never erroring)
+    reads past object end — the S3 behaviors the §11 contract leans on."""
+
+    def __init__(self) -> None:
+        self._buckets: dict[str, dict[str, bytes]] = {}
+
+    def put_object(self, Bucket: str, Key: str, Body: bytes) -> dict:
+        self._buckets.setdefault(Bucket, {})[Key] = bytes(Body)
+        return {"ResponseMetadata": {"HTTPStatusCode": 200}}
+
+    def get_object(self, Bucket: str, Key: str, Range: str | None = None
+                   ) -> dict:
+        data = self._buckets.get(Bucket, {}).get(Key)
+        if data is None:
+            raise _NoSuchKey(f"NoSuchKey: {Key!r}")
+        if Range is not None:
+            spec = Range.removeprefix("bytes=")
+            start_s, _, end_s = spec.partition("-")
+            start, end = int(start_s), int(end_s)
+            data = data[start:end + 1]      # inclusive end, clamped
+        return {"Body": _Body(data),
+                "ResponseMetadata": {"HTTPStatusCode": 200}}
+
+    def head_object(self, Bucket: str, Key: str) -> dict:
+        data = self._buckets.get(Bucket, {}).get(Key)
+        if data is None:
+            raise _ClientError(404, "head_object", Key)
+        return {"ContentLength": len(data),
+                "ResponseMetadata": {"HTTPStatusCode": 200}}
+
+    def get_paginator(self, op: str) -> _Paginator:
+        assert op == "list_objects_v2", op
+        return _Paginator(self._buckets)
+
+    def delete_object(self, Bucket: str, Key: str) -> dict:
+        self._buckets.get(Bucket, {}).pop(Key, None)    # idempotent
+        return {"ResponseMetadata": {"HTTPStatusCode": 204}}
+
+
 def _local_client(tmp_path):
     from repro.api.objectstore import LocalObjectStore
     return LocalObjectStore(tmp_path / "objects")
+
+
+def _s3_stub_client(tmp_path):
+    from repro.api.objectstore import S3ObjectClient
+    return S3ObjectClient("conformance-bucket", prefix="pfx",
+                          client=_StubS3())
 
 
 def _s3_client(tmp_path):
@@ -29,10 +123,13 @@ def _s3_client(tmp_path):
     return S3ObjectClient(bucket, prefix=f"conformance-{uuid.uuid4().hex}")
 
 
-@pytest.fixture(params=["local", "s3"])
+_CLIENTS = {"local": _local_client, "s3-stub": _s3_stub_client,
+            "s3": _s3_client}
+
+
+@pytest.fixture(params=sorted(_CLIENTS))
 def client(request, tmp_path):
-    make = _local_client if request.param == "local" else _s3_client
-    cl = make(tmp_path)
+    cl = _CLIENTS[request.param](tmp_path)
     yield cl
     for key, _ in cl.list(""):
         cl.delete_object(key)

@@ -1,0 +1,59 @@
+"""Property test for §15.1 tenant quota accounting: per-tenant byte
+charges must track ingest/delete/compact interleavings with zero drift
+against ``StoreStats``. Lives in its own module (like
+``test_lifecycle_property.py``) so environments without hypothesis
+skip only this file, never the directed serve suite."""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro import api  # noqa: E402
+from repro.api.serve import DedupServer  # noqa: E402
+
+_PAYLOADS = [bytes([65 + i]) * (1500 + 977 * i) for i in range(6)]
+_OPS = st.lists(
+    st.tuples(st.integers(0, 2),
+              st.sampled_from(["ingest", "delete", "compact"]),
+              st.integers(0, 5)),
+    min_size=1, max_size=24)
+
+
+@settings(max_examples=20, deadline=None)
+@given(ops=_OPS)
+def test_tenant_byte_charges_never_drift_from_store_stats(ops):
+    """§15.1 accounting invariants, after *every* op in any
+    ingest/delete/compact interleaving: (1) the sum of per-tenant
+    lifetime charges equals ``StoreStats.bytes_stored`` exactly, (2)
+    each tenant's live charge equals the commit-time cost of its live
+    handles, and (3) every live stream restores byte-identically."""
+    store = api.build_store(api.DedupConfig.from_dict(
+        {"detector": "dedup-only", "backend": "memory"}))
+    srv = DedupServer(store, workers=2)
+    live = {0: [], 1: [], 2: []}
+    try:
+        for tidx, kind, pidx in ops:
+            tenant = f"t{tidx}"
+            if kind == "ingest":
+                rep = srv.ingest(tenant, _PAYLOADS[pidx])
+                live[tidx].append((rep.handle, _PAYLOADS[pidx],
+                                   rep.bytes_stored))
+            elif kind == "delete":
+                if not live[tidx]:
+                    continue
+                handle, _, _ = live[tidx].pop(pidx % len(live[tidx]))
+                srv.delete(tenant, handle)
+            else:
+                store.collect()
+                store.compact()
+            lifetime = sum(srv.tenant_stats(f"t{i}")["bytes_ingested"]
+                           for i in range(3))
+            assert lifetime == store.stats.bytes_stored
+            for i in range(3):
+                assert (srv.tenant_stats(f"t{i}")["bytes_stored"]
+                        == sum(cost for _, _, cost in live[i]))
+        for i in range(3):
+            for handle, data, _ in live[i]:
+                assert srv.restore(f"t{i}", handle) == data
+    finally:
+        srv.close(close_store=True)
